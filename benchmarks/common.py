@@ -1,0 +1,44 @@
+"""Shared benchmark helpers: timing + CSV emission.
+
+Every benchmark prints ``name,us_per_call,derived`` rows (derived = the
+figure-specific metric, e.g. overhead %, bytes/s, tasks/min).
+"""
+
+from __future__ import annotations
+
+import time
+from contextlib import contextmanager
+
+ROWS: list[tuple] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+@contextmanager
+def timed():
+    box = {}
+    t0 = time.perf_counter()
+    yield box
+    box["seconds"] = time.perf_counter() - t0
+
+
+def time_fn(fn, *args, repeat: int = 5, warmup: int = 1, **kw) -> float:
+    """Median wall seconds of fn(*args, **kw)."""
+    for _ in range(warmup):
+        fn(*args, **kw)
+    ts = []
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        fn(*args, **kw)
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+SMALL_TRAIN = dict(kind="train", arch="yi-9b-smoke", seq_len=32,
+                   global_batch=8, chunks=2)
+SMALL_SERVE = dict(kind="serve", arch="yi-9b-smoke", prompt_len=16,
+                   global_batch=4, tokens_per_step=4)

@@ -1,0 +1,62 @@
+"""Fig 5: per-OpenCL-API overheads — FunkyCL vs the native JAX equivalent.
+
+Paper claim: Funky adds no per-API overhead for FPGA operations; the gap is
+setup-time only.  We measure clCreateBuffer / clEnqueueMigrateMemObjects /
+clEnqueueKernel / clFinish against device_put / jitted-call / block_until_ready.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.core import FunkyCL, Monitor, Program, SliceAllocator
+
+N = 1 << 20   # 4 MiB f32 buffer
+
+
+def main():
+    alloc = SliceAllocator("n0", 1)
+    m = Monitor("bench", alloc)
+    spec = jax.ShapeDtypeStruct((N,), jnp.float32)
+    prog = Program("axpy", lambda x: x * 1.0001 + 0.5)
+    m.vfpga_init(prog, (spec,))
+    cl = FunkyCL(m)
+    host = np.ones(N, np.float32)
+
+    # --- native equivalents -----------------------------------------------
+    jf = jax.jit(prog.fn)
+    dev = jax.device_put(host)
+    jf(dev)  # warm
+    t_put = time_fn(lambda: jax.device_put(host).block_until_ready())
+    t_call = time_fn(lambda: jf(dev).block_until_ready())
+
+    # --- FunkyCL ------------------------------------------------------------
+    cl.clCreateBuffer("x", spec)
+    t_write = time_fn(lambda: (cl.write_buffer("x", host), cl.clFinish()))
+    t_kernel = time_fn(lambda: (cl.clEnqueueKernel("axpy", ("x",), ("x",)),
+                                cl.clFinish()))
+    t_finish = time_fn(cl.clFinish)
+
+    def mkbuf(i=[0]):
+        i[0] += 1
+        cl.clCreateBuffer(f"b{i[0]}", jax.ShapeDtypeStruct((16,), jnp.float32))
+        cl.clFinish()
+
+    t_create = time_fn(mkbuf)
+
+    emit("fig05/clCreateBuffer", t_create * 1e6, "registration only")
+    emit("fig05/clEnqueueMigrate_h2d_4MiB", t_write * 1e6,
+         f"native device_put {t_put * 1e6:.0f}us; "
+         f"gap {(t_write - t_put) * 1e6:+.0f}us")
+    emit("fig05/clEnqueueKernel_4MiB", t_kernel * 1e6,
+         f"native jit call {t_call * 1e6:.0f}us; "
+         f"gap {(t_kernel - t_call) * 1e6:+.0f}us")
+    emit("fig05/clFinish_noop", t_finish * 1e6, "sync round-trip")
+    m.vfpga_exit()
+
+
+if __name__ == "__main__":
+    main()

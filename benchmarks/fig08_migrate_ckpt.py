@@ -1,0 +1,64 @@
+"""Fig 8: VM migration (host-RAM snapshot) vs checkpointing (disk) vs size.
+
+Paper: snapshot sizes 125 MiB - 2.1 GiB; Checkpoint slower than Restore
+(dirty-page walk + random writes); FPGA-specific share of VM save is
+0.4-10.6 %.  We measure the same breakdown: evict (device->host) time inside
+the total snapshot, disk write, restore.
+"""
+
+from __future__ import annotations
+
+import shutil
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.ckpt import load_snapshot, save_snapshot
+from repro.core import FunkyCL, GuestState, Monitor, Program, SliceAllocator
+
+
+def main():
+    tmp = tempfile.mkdtemp(prefix="fig08-")
+    for mb in (16, 64, 256):
+        alloc = SliceAllocator("n0", 1, mem_cap_bytes=16 << 30)
+        m = Monitor(f"ck{mb}", alloc)
+        n = mb * (1 << 20) // 4
+        spec = jax.ShapeDtypeStruct((n,), jnp.float32)
+        m.vfpga_init(Program("id", lambda x: x + 1.0), (spec,))
+        cl = FunkyCL(m)
+        cl.clCreateBuffer("x", spec)
+        cl.write_buffer("x", np.ones(n, np.float32))
+        cl.clEnqueueKernel("id", ("x",), ("x",))
+        cl.clFinish()
+
+        # --- migration-style: snapshot to host memory --------------------------
+        t0 = time.perf_counter()
+        snap = m.checkpoint(GuestState(step=1), keep_running=True)
+        t_vm_save = time.perf_counter() - t0
+        fpga_share = m.metrics_hist["sync_wait"][-1] / max(t_vm_save, 1e-9)
+
+        # --- checkpoint: persist to disk ------------------------------------------
+        t0 = time.perf_counter()
+        stats = save_snapshot(f"{tmp}/ck{mb}", snap)
+        t_disk = time.perf_counter() - t0
+
+        # --- restore ---------------------------------------------------------------
+        t0 = time.perf_counter()
+        snap2, _ = load_snapshot(f"{tmp}/ck{mb}")
+        t_restore = time.perf_counter() - t0
+
+        emit(f"fig08/vm_save_{mb}MiB", t_vm_save * 1e6,
+             f"sync share {fpga_share * 100:.1f}% (paper: 0.4-10.6%)")
+        emit(f"fig08/checkpoint_disk_{mb}MiB", t_disk * 1e6,
+             f"{stats['written_bytes'] / 2**20:.0f} MiB written")
+        emit(f"fig08/restore_disk_{mb}MiB", t_restore * 1e6, "")
+        m.vfpga_exit()
+    shutil.rmtree(tmp, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Fig 9: FPGA-synchronization wait vs request splitting (the paper's key
+state-management optimization, §3.4).
+
+One logical optimizer step over a fixed global batch is executed as k
+chunked EXECUTE requests (gradient accumulation).  A preemption request
+arriving right after dispatch must wait for the in-flight work: we measure
+that sync wait and the total step time for k = 1..16.  Paper: 32 chunks cut
+96.9 % of the wait at <0.1 % throughput cost.
+"""
+
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import emit
+from repro.core import TaskImage, TaskStatus, make_cluster
+from repro.train import OptConfig
+
+BATCH = 64
+STEPS = 6
+
+
+def _measure(chunks: int):
+    image = TaskImage(
+        name="i", kind="train", arch="yi-9b-smoke", seq_len=128,
+        global_batch=BATCH, total_steps=STEPS, chunks=chunks,
+        opt=OptConfig(warmup_steps=1, decay_steps=50))
+    cl = make_cluster(num_nodes=1, slices_per_node=1, images={"i": image})
+    rt = cl.nodes["node0"].runtime
+    rt.create("t", image)
+    t0 = time.perf_counter()
+    rt.start("t")
+    rec = rt.tasks["t"]
+    # wait until steady state, then preempt mid-step
+    while rec.guest_state.step < 1 and rec.status != TaskStatus.FAILED:
+        time.sleep(0.001)
+    time.sleep(0.05)        # land inside a dispatched logical step
+    t_ev = time.perf_counter()
+    ev = rt.evict("t")
+    # preemption latency = park at the chunk boundary + queue drain
+    wait = (time.perf_counter() - t_ev
+            - ev["evict_seconds"] + ev["sync_wait_seconds"])
+    rt.resume("t")
+    assert rt.wait("t", timeout=3600) == TaskStatus.DONE, rec.error
+    total = time.perf_counter() - t0
+    return max(wait, 1e-6), total
+
+
+def main():
+    base_wait = None
+    base_total = None
+    for chunks in (1, 2, 4, 8, 16):
+        wait, total = _measure(chunks)
+        if chunks == 1:
+            base_wait, base_total = wait, total
+        cut = (1 - wait / base_wait) * 100 if base_wait else 0.0
+        ovh = (total / base_total - 1) * 100 if base_total else 0.0
+        emit(f"fig09/sync_wait_chunks{chunks}", wait * 1e6,
+             f"wait cut {cut:.1f}% vs 1 chunk; total overhead {ovh:+.1f}% "
+             f"(paper: -96.9% wait, <0.1% cost @32)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Fig 10: preemptive scheduling effectiveness on the LIVE cluster.
+
+3 worker nodes x 1 vSlice, long- and short-running training tasks with the
+paper's two priority scenarios (Short-HP / Long-HP, Table 6), policies
+FCFS / NO_PRE / PRE_EV / PRE_MG (Table 5).  Reports mean completion time of
+high- vs low-priority tasks.
+"""
+
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import emit
+from repro.core import Policy, TaskImage, make_cluster
+from repro.train import OptConfig
+
+OC = OptConfig(warmup_steps=1, decay_steps=100)
+IMAGES = {
+    "long": TaskImage(name="long", kind="train", arch="yi-9b-smoke",
+                      seq_len=32, global_batch=4, total_steps=12, chunks=1,
+                      opt=OC),
+    "short": TaskImage(name="short", kind="train", arch="yi-9b-smoke",
+                       seq_len=32, global_batch=4, total_steps=2, chunks=1,
+                       opt=OC),
+}
+
+
+def _scenario(policy: Policy, short_hp: bool):
+    cl = make_cluster(num_nodes=3, slices_per_node=1, images=IMAGES,
+                      policy=policy)
+    orch = cl.orchestrator
+    orch.start(tick_interval=0.01)
+    hp, lp = (5, 0)
+    subs = []
+    # deploy 3 long first (occupy all slots), then 3 short
+    for i in range(3):
+        subs.append(("long", orch.submit(
+            "long", priority=lp if short_hp else hp)))
+    time.sleep(0.3)
+    for i in range(3):
+        subs.append(("short", orch.submit(
+            "short", priority=hp if short_hp else lp)))
+    ok = orch.wait_all(timeout=3600)
+    out = {}
+    for kind, cid in subs:
+        d = orch.deployments[cid]
+        assert d.status == "done", (cid, d.status)
+        out.setdefault(kind, []).append(d.end_time - d.submit_time)
+    orch.stop()
+    cl.stop()
+    return {k: sum(v) / len(v) for k, v in out.items()}
+
+
+def main():
+    for scen, short_hp in (("short_hp", True), ("long_hp", False)):
+        for pol in (Policy.FCFS, Policy.NO_PRE, Policy.PRE_EV, Policy.PRE_MG):
+            r = _scenario(pol, short_hp)
+            hp_kind = "short" if short_hp else "long"
+            emit(f"fig10/{scen}_{pol.value}_hp", r[hp_kind] * 1e6,
+                 f"lp={r['long' if short_hp else 'short']:.2f}s")
+
+
+if __name__ == "__main__":
+    main()

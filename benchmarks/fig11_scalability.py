@@ -1,0 +1,31 @@
+"""Fig 11: throughput vs cluster size x acceleration rate (trace-driven).
+
+Paper: 1-128 vFPGAs, rates 0/25/50/75/100 %; even 25 % acceleration gives
+1.1x throughput over 0 %."""
+
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core.scheduler import Policy
+from repro.core.simulator import SimParams, Simulator
+from repro.core.traces import generate_trace
+
+JOBS = generate_trace(n_jobs=600, horizon_s=6 * 3600, seed=11)
+
+
+def main():
+    base = {}
+    for n in (1, 4, 16, 64, 128):
+        for rate in (0.0, 0.25, 0.5, 0.75, 1.0):
+            r = Simulator(JOBS, num_nodes=n, policy=Policy.NO_PRE,
+                          params=SimParams(acceleration_rate=rate)).run()
+            if rate == 0.0:
+                base[n] = r["throughput_per_min"]
+            gain = r["throughput_per_min"] / base[n]
+            emit(f"fig11/vslices{n}_rate{int(rate * 100)}",
+                 r["mean_latency_s"] * 1e6,
+                 f"thr={r['throughput_per_min']:.2f}/min x{gain:.2f} vs 0%")
+
+
+if __name__ == "__main__":
+    main()

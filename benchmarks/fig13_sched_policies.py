@@ -1,0 +1,31 @@
+"""Fig 13: scheduling policies on production-like traces (loaded regime).
+
+Paper: PRE_EV/PRE_MG cut high-priority execution time by 5.3 %/4.5 % vs
+NO_PRE; PRE_MG also helps low-priority tasks via migration.  The cluster is
+sized so demand exceeds capacity (the paper's 32-vFPGA setting relative to
+its trace volume) — preemption only matters under contention."""
+
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core.scheduler import Policy
+from repro.core.simulator import SimParams, Simulator
+from repro.core.traces import generate_trace
+
+JOBS = generate_trace(n_jobs=800, horizon_s=2 * 3600, seed=13)
+
+
+def main():
+    for pol in (Policy.FCFS, Policy.NO_PRE, Policy.PRE_EV, Policy.PRE_MG):
+        r = Simulator(JOBS, num_nodes=8, policy=pol,
+                      params=SimParams(acceleration_rate=1.0)).run()
+        by = r["latency_by_priority"]
+        hp = max(by)
+        lp = min(by)
+        emit(f"fig13/{pol.value}", r["mean_latency_s"] * 1e6,
+             f"hp={by[hp]:.0f}s lp={by[lp]:.0f}s "
+             f"evict={r['evictions']} migr={r['migrations']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+from repro.ckpt.checkpoint import (AsyncCheckpointer, load_snapshot,
+                                   save_snapshot)
+from repro.ckpt.resharding import (reshard_params, reshard_snapshot_buffers,
+                                   reshard_tree)
+
+__all__ = ["AsyncCheckpointer", "load_snapshot", "reshard_params",
+           "reshard_snapshot_buffers", "reshard_tree", "save_snapshot"]

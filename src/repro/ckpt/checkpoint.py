@@ -1,0 +1,192 @@
+"""Sharded, incremental, async-capable checkpointing.
+
+Layout of one checkpoint directory::
+
+    <path>/manifest.json       step, guest state, buffer index, versions
+    <path>/image.pkl           TaskImage (how to re-instantiate the guest)
+    <path>/<buff>.npz          flattened pytree leaves (one file per buffer)
+    <path>/<buff>.treedef      pickled treedef (exact pytree structure)
+
+**Incremental**: pass ``prev_path`` — buffers whose write-version is
+unchanged since the previous checkpoint are *referenced*, not rewritten
+(the on-disk analogue of the paper's dirty-only eviction, §3.4).
+
+**Async**: ``AsyncCheckpointer`` runs ``save_snapshot`` on a background
+thread so training continues while bytes hit the disk; ``wait()`` joins
+before the next snapshot (checkpoint/compute overlap).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import pickle
+import threading
+import time
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.state import GuestState, TaskSnapshot
+
+
+_VIEW_FOR_ITEMSIZE = {1: np.uint8, 2: np.uint16, 4: np.uint32, 8: np.uint64}
+
+
+def _write_tree(path_prefix: str, tree: Any) -> int:
+    """npz stores leaves; non-native dtypes (bfloat16, ...) are stored as a
+    same-itemsize unsigned view with the true dtype recorded in the sidecar."""
+    leaves, treedef = jax.tree.flatten(tree)
+    arrays = {}
+    dtypes = []
+    for i, l in enumerate(leaves):
+        a = np.asarray(l)
+        dtypes.append(a.dtype.str if a.dtype.kind != "V" else str(a.dtype))
+        if a.dtype.kind == "V" or not a.dtype.isnative:
+            a = a.view(_VIEW_FOR_ITEMSIZE[a.dtype.itemsize])
+        arrays[f"leaf_{i:05d}"] = a
+    np.savez(path_prefix + ".npz", **arrays)
+    with open(path_prefix + ".treedef", "wb") as f:
+        pickle.dump((treedef, dtypes), f)
+    return sum(a.nbytes for a in arrays.values())
+
+
+def _read_tree(path_prefix: str) -> Any:
+    with open(path_prefix + ".treedef", "rb") as f:
+        treedef, dtypes = pickle.load(f)
+    with np.load(path_prefix + ".npz") as z:
+        leaves = []
+        for k, dt in zip(sorted(z.files), dtypes):
+            a = z[k]
+            want = np.dtype(dt)
+            if a.dtype != want:
+                a = a.view(want)
+            leaves.append(a)
+    return jax.tree.unflatten(treedef, leaves)
+
+
+def save_snapshot(path: str, snap: TaskSnapshot, image=None,
+                  prev_path: Optional[str] = None) -> dict:
+    """Write a snapshot; returns stats {written_bytes, reused_buffers, seconds}."""
+    t0 = time.perf_counter()
+    os.makedirs(path, exist_ok=True)
+
+    prev_index: dict = {}
+    prev_versions: dict = {}
+    if prev_path and os.path.exists(os.path.join(prev_path, "manifest.json")):
+        with open(os.path.join(prev_path, "manifest.json")) as f:
+            prev = json.load(f)
+        prev_index = prev.get("buffers", {})
+        prev_versions = prev.get("versions", {})
+
+    index = {}
+    written = 0
+    reused = 0
+    for buff_id, tree in snap.buffers.items():
+        version = snap.versions.get(buff_id, -1)
+        if (buff_id in prev_index and prev_versions.get(buff_id) == version
+                and version >= 0):
+            index[buff_id] = prev_index[buff_id]     # reference, don't rewrite
+            reused += 1
+            continue
+        prefix = os.path.join(path, buff_id.replace("/", "_"))
+        written += _write_tree(prefix, tree)
+        index[buff_id] = prefix
+
+    # Full-fidelity guest (VM) state (may contain arrays, e.g. results a
+    # guest extracted before teardown) goes to a pickle; the manifest keeps
+    # a human-readable summary.
+    with open(os.path.join(path, "guest.pkl"), "wb") as f:
+        pickle.dump(snap.guest_state, f)
+    with open(os.path.join(path, "specs.pkl"), "wb") as f:
+        pickle.dump(snap.buffer_specs, f)
+    manifest = {
+        "task_id": snap.task_id,
+        "step": snap.step,
+        "created_at": snap.created_at,
+        "program_ids": list(snap.program_ids),
+        "guest_state": {
+            "step": snap.guest_state.step,
+            "seed": snap.guest_state.seed,
+            "data_position": snap.guest_state.data_position,
+            "user_keys": sorted(snap.guest_state.user),
+        },
+        "buffers": index,
+        "versions": snap.versions,
+    }
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    if image is not None:
+        with open(os.path.join(path, "image.pkl"), "wb") as f:
+            pickle.dump(image, f)
+    return {"written_bytes": written, "reused_buffers": reused,
+            "seconds": time.perf_counter() - t0}
+
+
+def load_snapshot(path: str) -> Tuple[TaskSnapshot, Any]:
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    buffers = {b: _read_tree(prefix)
+               for b, prefix in manifest["buffers"].items()}
+    gs_path = os.path.join(path, "guest.pkl")
+    if os.path.exists(gs_path):
+        with open(gs_path, "rb") as f:
+            guest_state = pickle.load(f)
+    else:  # legacy manifests
+        gs = manifest["guest_state"]
+        guest_state = GuestState(step=gs["step"], seed=gs["seed"],
+                                 data_position=gs["data_position"],
+                                 user=dict(gs.get("user", {})))
+    specs = {}
+    sp = os.path.join(path, "specs.pkl")
+    if os.path.exists(sp):
+        with open(sp, "rb") as f:
+            specs = pickle.load(f)
+    snap = TaskSnapshot(
+        task_id=manifest["task_id"],
+        guest_state=guest_state,
+        buffers=buffers,
+        buffer_specs=specs,
+        program_ids=tuple(manifest["program_ids"]),
+        created_at=manifest["created_at"],
+        step=manifest["step"],
+        versions={k: int(v) for k, v in manifest.get("versions", {}).items()},
+    )
+    image = None
+    img_path = os.path.join(path, "image.pkl")
+    if os.path.exists(img_path):
+        with open(img_path, "rb") as f:
+            image = pickle.load(f)
+    return snap, image
+
+
+class AsyncCheckpointer:
+    """Overlap checkpoint I/O with compute (one outstanding save)."""
+
+    def __init__(self):
+        self._thread: Optional[threading.Thread] = None
+        self._last_stats: Optional[dict] = None
+        self._error: Optional[BaseException] = None
+
+    def save(self, path: str, snap: TaskSnapshot, image=None,
+             prev_path: Optional[str] = None):
+        self.wait()
+
+        def run():
+            try:
+                self._last_stats = save_snapshot(path, snap, image, prev_path)
+            except BaseException as e:  # noqa: BLE001
+                self._error = e
+
+        self._thread = threading.Thread(target=run, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> Optional[dict]:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            e, self._error = self._error, None
+            raise e
+        return self._last_stats

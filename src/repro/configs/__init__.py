@@ -1,0 +1,28 @@
+from repro.configs.base import (
+    SHAPES,
+    MLAConfig,
+    ModelConfig,
+    MoEConfig,
+    RecurrentConfig,
+    SSMConfig,
+    ShapeConfig,
+    applicable,
+    reduced,
+)
+from repro.configs.registry import ARCHS, all_cells, get_arch, get_shape
+
+__all__ = [
+    "ARCHS",
+    "SHAPES",
+    "MLAConfig",
+    "ModelConfig",
+    "MoEConfig",
+    "RecurrentConfig",
+    "SSMConfig",
+    "ShapeConfig",
+    "all_cells",
+    "applicable",
+    "get_arch",
+    "get_shape",
+    "reduced",
+]

@@ -1,0 +1,27 @@
+"""Funky core: the paper's contribution (virtualization + state management +
+orchestration), adapted from FPGA clusters to TPU/JAX (see DESIGN.md §2)."""
+
+from repro.core.cluster import Cluster, Node, make_cluster
+from repro.core.guest import FunkyCL
+from repro.core.monitor import (DeviceMemoryExceeded, Monitor, MonitorError,
+                                MonitorState, NoSliceAvailable)
+from repro.core.programs import Program, ProgramCache
+from repro.core.requests import (Completion, Direction, FunkyRequest,
+                                 RequestKind)
+from repro.core.runtime import FunkyRuntime, TaskRecord, TaskStatus
+from repro.core.scheduler import (Action, FunkyScheduler, Policy, SchedTask,
+                                  TaskState)
+from repro.core.state import (Buffer, BufferState, BufferTable, GuestState,
+                              TaskSnapshot, tree_bytes)
+from repro.core.tasks import GuestTask, ServeTask, TaskImage, TrainTask
+from repro.core.vslice import SliceAllocator, VSlice
+
+__all__ = [
+    "Action", "Buffer", "BufferState", "BufferTable", "Cluster", "Completion",
+    "DeviceMemoryExceeded", "Direction", "FunkyCL", "FunkyRequest",
+    "FunkyRuntime", "FunkyScheduler", "GuestState", "GuestTask", "Monitor",
+    "MonitorError", "MonitorState", "Node", "NoSliceAvailable", "Policy",
+    "Program", "ProgramCache", "RequestKind", "SchedTask", "ServeTask",
+    "SliceAllocator", "TaskImage", "TaskRecord", "TaskSnapshot", "TaskState",
+    "TaskStatus", "TrainTask", "VSlice", "make_cluster", "tree_bytes",
+]

@@ -1,0 +1,121 @@
+"""FunkyCL: the OpenCL-compatible guest library (paper §3.3, Table 1).
+
+The guest task sees the standard OpenCL host-API surface; each call is
+converted to a hypercall or a Funky request exactly as in Table 1:
+
+    clCreateProgramWithBinary  -> vfpga_init (slot acquire + reconfigure)
+    clReleaseProgram           -> vfpga_exit (when refcount drops to zero)
+    clCreateBuffer             -> MEMORY(buff_id, spec)
+    clEnqueueMigrateMemObjects -> TRANSFER(queue, buff_id, ...)
+    clEnqueueKernel            -> EXECUTE(queue, kernel, args)   [async]
+    clFinish                   -> SYNC(queue)
+
+Zero-copy note (§3.3): on real Funky the unikernel's single address space
+lets the monitor translate guest pointers once; here host pytrees are handed
+to the worker by reference through the queue — no serialization happens on
+the TRANSFER path either.
+
+Guest code must never touch ``jax.devices()`` directly; everything flows
+through the monitor for isolation and state tracking.  Snake_case aliases are
+provided for non-OpenCL-steeped callers.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence
+
+from repro.core.monitor import Monitor
+from repro.core.programs import Program
+from repro.core.requests import (Completion, Direction, FunkyRequest,
+                                 RequestKind)
+
+
+class FunkyCL:
+    def __init__(self, monitor: Monitor):
+        self._monitor = monitor
+        self._program_refs: dict[str, int] = {}
+        self._pending: list[Completion] = []
+
+    # ------------------------------------------------------------------
+    # Program objects
+    # ------------------------------------------------------------------
+    def clCreateProgramWithBinary(self, program: Program,
+                                  abstract_args: tuple,
+                                  donate_argnums: tuple = ()) -> str:
+        """Acquire a vFPGA and configure user logic (Table 1)."""
+        if self._monitor.vslice is None:
+            self._monitor.vfpga_init(program, abstract_args, donate_argnums)
+        else:
+            self._monitor.register_program(program, abstract_args,
+                                           donate_argnums)
+        pid = program.program_id
+        self._program_refs[pid] = self._program_refs.get(pid, 0) + 1
+        return pid
+
+    def clReleaseProgram(self, program_id: str):
+        """Decrement refcount; release the vFPGA when it reaches zero."""
+        self._program_refs[program_id] -= 1
+        if all(v <= 0 for v in self._program_refs.values()):
+            self.clFinish()
+            self._monitor.vfpga_exit()
+
+    # ------------------------------------------------------------------
+    # Buffers & transfers
+    # ------------------------------------------------------------------
+    def clCreateBuffer(self, buff_id: str, spec: Any) -> str:
+        req = FunkyRequest(kind=RequestKind.MEMORY, buff_id=buff_id, spec=spec)
+        self._track(self._monitor.submit(req))
+        return buff_id
+
+    def clEnqueueMigrateMemObjects(self, buff_id: str,
+                                   host_value: Any = None,
+                                   to_device: bool = True) -> Completion:
+        req = FunkyRequest(
+            kind=RequestKind.TRANSFER, buff_id=buff_id,
+            direction=Direction.H2D if to_device else Direction.D2H,
+            host_value=host_value)
+        return self._track(self._monitor.submit(req))
+
+    # ------------------------------------------------------------------
+    # Kernels
+    # ------------------------------------------------------------------
+    def clEnqueueKernel(self, program_id: str, in_buffs: Sequence[str],
+                        out_buffs: Sequence[str],
+                        const_args: tuple = ()) -> Completion:
+        """Async kernel launch; kernel args travel with the EXECUTE request
+        (clSetKernelArg coalescing, paper §4)."""
+        req = FunkyRequest(
+            kind=RequestKind.EXECUTE, program_id=program_id,
+            in_buffs=tuple(in_buffs), out_buffs=tuple(out_buffs),
+            const_args=tuple(const_args))
+        return self._track(self._monitor.submit(req))
+
+    def clFinish(self) -> None:
+        req = FunkyRequest(kind=RequestKind.SYNC)
+        self._monitor.submit(req).wait()
+        for c in self._pending:
+            c.wait()
+        self._pending.clear()
+
+    # ------------------------------------------------------------------
+    # Convenience (non-OpenCL helpers used by our example tasks)
+    # ------------------------------------------------------------------
+    create_program = clCreateProgramWithBinary
+    release_program = clReleaseProgram
+    create_buffer = clCreateBuffer
+    enqueue_kernel = clEnqueueKernel
+    finish = clFinish
+
+    def write_buffer(self, buff_id: str, host_value: Any) -> Completion:
+        return self.clEnqueueMigrateMemObjects(buff_id, host_value,
+                                               to_device=True)
+
+    def read_buffer(self, buff_id: str) -> Any:
+        return self.clEnqueueMigrateMemObjects(
+            buff_id, to_device=False).wait()
+
+    def _track(self, c: Completion) -> Completion:
+        self._pending.append(c)
+        if len(self._pending) > 1024:
+            self._pending = [p for p in self._pending if not p.done]
+        return c

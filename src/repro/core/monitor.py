@@ -1,0 +1,309 @@
+"""The Funky monitor: a thin per-task hypervisor layer (paper §3.2, §3.4).
+
+One ``Monitor`` supervises one guest task:
+
+* **worker thread** — drains the shared request queue, validates every
+  request (buffer ownership, program registration, vSlice memory cap) and
+  performs the delegated device work via JAX; async by construction — the
+  guest only blocks on SYNC.
+* **monitor-side commands** — ``evict`` / ``resume`` / ``checkpoint`` /
+  ``migrate_out``, invoked by the Funky runtime (the paper's monitor thread
+  exposing an IPC interface).  All of them synchronize to a request boundary
+  first — FPGAs (and XLA programs) cannot be suspended mid-flight — and the
+  measured *sync wait* is recorded (Fig 9).
+
+State management follows §3.4 exactly: only DIRTY buffers are saved on
+evict; ``checkpoint`` optionally keeps the task running; freed device memory
+is zeroed (here: references dropped and the table cleared) before the slot is
+handed to another tenant.
+"""
+
+from __future__ import annotations
+
+import enum
+import queue
+import threading
+import time
+from collections import defaultdict
+from typing import Any, Optional
+
+import jax
+
+from repro.core.programs import Program, ProgramCache
+from repro.core.requests import (Completion, Direction, FunkyRequest,
+                                 RequestKind)
+from repro.core.state import BufferTable, GuestState, TaskSnapshot
+from repro.core.vslice import SliceAllocator, VSlice
+
+
+class MonitorError(RuntimeError):
+    pass
+
+
+class NoSliceAvailable(MonitorError):
+    pass
+
+
+class DeviceMemoryExceeded(MonitorError):
+    pass
+
+
+class MonitorState(enum.Enum):
+    CREATED = "created"
+    RUNNING = "running"
+    EVICTED = "evicted"
+    EXITED = "exited"
+
+
+class Monitor:
+    def __init__(self, task_id: str, allocator: SliceAllocator,
+                 programs: Optional[ProgramCache] = None):
+        self.task_id = task_id
+        self.allocator = allocator
+        self.programs = programs if programs is not None else ProgramCache()
+        self.buffers = BufferTable()
+        self.request_queue: "queue.Queue[FunkyRequest]" = queue.Queue()
+        self.vslice: Optional[VSlice] = None
+        self.state = MonitorState.CREATED
+        self._worker: Optional[threading.Thread] = None
+        self._last_completion: Optional[Completion] = None
+        self._lock = threading.Lock()
+        self.metrics: dict = defaultdict(float)
+        self.metrics_hist: dict = defaultdict(list)
+
+    # ------------------------------------------------------------------
+    # Hypercalls (paper §3.2): vfpga_init / vfpga_free
+    # ------------------------------------------------------------------
+    def vfpga_init(self, program: Program, abstract_args: tuple,
+                   donate_argnums: tuple = ()) -> VSlice:
+        """Acquire a vSlice and 'reconfigure' it (AOT-compile the program)."""
+        t0 = time.perf_counter()
+        vs = self.allocator.vfpga_init(self.task_id, program.program_id)
+        if vs is None:
+            raise NoSliceAvailable(
+                f"no free vSlice on node {self.allocator.node_id}")
+        self.vslice = vs
+        self.programs.register(program)
+        entry = self.programs.get_or_compile(
+            program.program_id, abstract_args, donate_argnums)
+        self.metrics["reconfig_seconds"] += time.perf_counter() - t0
+        self.metrics_hist["reconfig"].append(entry.compile_seconds)
+        self._spawn_worker()
+        self.state = MonitorState.RUNNING
+        return vs
+
+    def register_program(self, program: Program, abstract_args: tuple,
+                         donate_argnums: tuple = ()):
+        """Additional programs on the already-acquired slice."""
+        self.programs.register(program)
+        self.programs.get_or_compile(program.program_id, abstract_args,
+                                     donate_argnums)
+
+    def vfpga_exit(self):
+        """Release the slot; zero device memory (paper: isolation, §3.4)."""
+        self._stop_worker()
+        self.buffers.zero_and_clear()
+        if self.vslice is not None:
+            self.allocator.vfpga_free(self.vslice)
+            self.vslice = None
+        self.state = MonitorState.EXITED
+
+    # ------------------------------------------------------------------
+    # Guest-facing request submission (exitless I/O queue)
+    # ------------------------------------------------------------------
+    def submit(self, req: FunkyRequest) -> Completion:
+        if self.state is not MonitorState.RUNNING:
+            raise MonitorError(f"monitor not running (state={self.state})")
+        self.request_queue.put(req)
+        return req.completion
+
+    # ------------------------------------------------------------------
+    # Worker thread
+    # ------------------------------------------------------------------
+    def _spawn_worker(self):
+        t0 = time.perf_counter()
+        self._worker = threading.Thread(
+            target=self._worker_loop, name=f"funky-worker-{self.task_id}",
+            daemon=True)
+        self._worker.start()
+        self.metrics_hist["worker_spawn"].append(time.perf_counter() - t0)
+
+    def _stop_worker(self):
+        if self._worker is None:
+            return
+        req = FunkyRequest(kind=RequestKind.SHUTDOWN)
+        self.request_queue.put(req)
+        self._worker.join()
+        self._worker = None
+
+    def _worker_loop(self):
+        while True:
+            req = self.request_queue.get()
+            if req.kind is RequestKind.SHUTDOWN:
+                req.completion.set()
+                return
+            t0 = time.perf_counter()
+            try:
+                value = self._handle(req)
+                req.completion.set(value)
+            except BaseException as e:  # noqa: BLE001 - forwarded to guest
+                req.completion.set(error=e)
+            self.metrics[f"n_{req.kind.value}"] += 1
+            self.metrics_hist[req.kind.value].append(time.perf_counter() - t0)
+            self._last_completion = req.completion
+
+    # -- request handlers ------------------------------------------------
+    def _handle(self, req: FunkyRequest) -> Any:
+        if req.kind is RequestKind.MEMORY:
+            return self._do_memory(req)
+        if req.kind is RequestKind.TRANSFER:
+            return self._do_transfer(req)
+        if req.kind is RequestKind.EXECUTE:
+            return self._do_execute(req)
+        if req.kind is RequestKind.SYNC:
+            return self._do_sync(req)
+        raise MonitorError(f"unknown request {req}")
+
+    def _validate_buffs(self, ids):
+        for i in ids:
+            if i not in self.buffers:
+                raise MonitorError(
+                    f"task {self.task_id}: unknown/foreign buffer {i!r}")
+
+    def _do_memory(self, req: FunkyRequest):
+        from repro.core.state import tree_bytes
+
+        new_bytes = tree_bytes(req.spec)
+        cap = self.vslice.mem_cap_bytes if self.vslice else 0
+        if self.buffers.total_bytes() + new_bytes > cap:
+            raise DeviceMemoryExceeded(
+                f"vSlice memory cap {cap} exceeded by buffer "
+                f"{req.buff_id!r} (+{new_bytes} bytes)")
+        self.buffers.register(req.buff_id, req.spec)
+        return req.buff_id
+
+    def _do_transfer(self, req: FunkyRequest):
+        self._validate_buffs([req.buff_id])
+        if req.direction is Direction.H2D:
+            dev = jax.device_put(req.host_value)
+            self.buffers.on_h2d(req.buff_id, req.host_value, dev)
+            return None
+        return self.buffers.on_d2h(req.buff_id)
+
+    def _do_execute(self, req: FunkyRequest):
+        self._validate_buffs(list(req.in_buffs) + list(req.out_buffs))
+        if req.program_id not in self.programs:
+            raise MonitorError(f"program {req.program_id!r} not registered")
+        args = tuple(self.buffers.get(i).device_value for i in req.in_buffs)
+        args = args + tuple(req.const_args)
+        abstract = jax.tree.map(
+            lambda x: (jax.ShapeDtypeStruct(x.shape, x.dtype)
+                       if hasattr(x, "shape") else x), args)
+        entry = self.programs.get_or_compile(req.program_id, abstract)
+        out = entry.compiled(*args)
+        if len(req.out_buffs) == 1:
+            outs = (out,)
+        else:
+            outs = tuple(out)
+            if len(outs) != len(req.out_buffs):
+                raise MonitorError(
+                    f"program {req.program_id} returned {len(outs)} outputs "
+                    f"for {len(req.out_buffs)} out_buffs")
+        for buff_id, val in zip(req.out_buffs, outs):
+            self.buffers.on_execute_write(buff_id, val)
+        return None
+
+    def _do_sync(self, req: FunkyRequest):
+        # Worker is serial: everything enqueued earlier already dispatched.
+        # block until device work actually finished.
+        for i in self.buffers.ids():
+            b = self.buffers.get(i)
+            if b.device_value is not None:
+                jax.block_until_ready(b.device_value)
+        return None
+
+    # ------------------------------------------------------------------
+    # Monitor-thread commands (evict / resume / checkpoint), paper §3.4
+    # ------------------------------------------------------------------
+    def sync_barrier(self) -> float:
+        """Wait for all in-flight requests; returns the sync wait seconds."""
+        t0 = time.perf_counter()
+        req = FunkyRequest(kind=RequestKind.SYNC)
+        self.request_queue.put(req)
+        req.completion.wait()
+        dt = time.perf_counter() - t0
+        self.metrics_hist["sync_wait"].append(dt)
+        return dt
+
+    def evict(self) -> dict:
+        """Save FPGA context to host memory, release the slot (paper evict)."""
+        with self._lock:
+            if self.state is not MonitorState.RUNNING:
+                raise MonitorError(f"cannot evict from {self.state}")
+            t0 = time.perf_counter()
+            sync_wait = self.sync_barrier()
+            stats = self.buffers.evict_device_state()
+            self._stop_worker()
+            if self.vslice is not None:
+                self.allocator.vfpga_free(self.vslice)
+                self.vslice = None
+            self.state = MonitorState.EVICTED
+            stats["sync_wait_seconds"] = sync_wait
+            stats["evict_seconds"] = time.perf_counter() - t0
+            self.metrics_hist["evict"].append(stats["evict_seconds"])
+            return stats
+
+    def resume(self, allocator: Optional[SliceAllocator] = None) -> dict:
+        """Re-acquire a slot (same or different node) and restore buffers."""
+        with self._lock:
+            if self.state is not MonitorState.EVICTED:
+                raise MonitorError(f"cannot resume from {self.state}")
+            t0 = time.perf_counter()
+            if allocator is not None:
+                self.allocator = allocator
+            vs = self.allocator.vfpga_init(self.task_id)
+            if vs is None:
+                raise NoSliceAvailable(
+                    f"no free vSlice on node {self.allocator.node_id}")
+            self.vslice = vs
+            stats = self.buffers.restore_device_state()
+            self._spawn_worker()
+            self.state = MonitorState.RUNNING
+            stats["resume_seconds"] = time.perf_counter() - t0
+            self.metrics_hist["resume"].append(stats["resume_seconds"])
+            return stats
+
+    def checkpoint(self, guest_state: GuestState,
+                   keep_running: bool = True) -> TaskSnapshot:
+        """Snapshot VM+device state; optionally keep the task running."""
+        with self._lock:
+            t0 = time.perf_counter()
+            if self.state is MonitorState.RUNNING:
+                self.sync_barrier()
+                for i in self.buffers.dirty_ids():
+                    self.buffers.on_d2h(i)
+                if not keep_running:
+                    stats = self.buffers.evict_device_state()
+                    self._stop_worker()
+                    if self.vslice is not None:
+                        self.allocator.vfpga_free(self.vslice)
+                        self.vslice = None
+                    self.state = MonitorState.EVICTED
+                    del stats
+            snap = TaskSnapshot(
+                task_id=self.task_id,
+                guest_state=guest_state.clone(),
+                buffers=self.buffers.host_snapshot(),
+                program_ids=self.programs.program_ids(),
+                step=guest_state.step,
+                versions=self.buffers.versions(),
+                buffer_specs=self.buffers.spec_map(),
+            )
+            self.metrics_hist["checkpoint"].append(time.perf_counter() - t0)
+            return snap
+
+    def load_snapshot(self, snap: TaskSnapshot):
+        """Initialize buffers from a snapshot (restore path). Buffers stay on
+        the host until ``resume`` re-materializes them on a slice."""
+        self.buffers.load_snapshot(snap.buffers, snap.buffer_specs)
+        self.state = MonitorState.EVICTED

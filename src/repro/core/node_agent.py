@@ -1,0 +1,112 @@
+"""Node agent: forwards orchestrator requests to the container engine via
+CRI, attaching Funky metadata as annotations (paper §3.5, Table 3)."""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, Optional
+
+from repro.core.cri import (A_PREEMPTIBLE, A_PRIORITY, A_REPLICA_OF,
+                            A_SNAPSHOT, A_SOURCE_NODE, A_VFPGA_NUM,
+                            ContainerConfig, ContainerEngine)
+from repro.core.runtime import TaskStatus
+
+
+class NodeFailed(RuntimeError):
+    pass
+
+
+class NodeAgent:
+    def __init__(self, node_id: str, engine: ContainerEngine):
+        self.node_id = node_id
+        self.engine = engine
+        self.failed = False
+        self._hb = time.time()
+
+    # -- health ---------------------------------------------------------------
+    def heartbeat(self) -> float:
+        if self.failed:
+            raise NodeFailed(self.node_id)
+        self._hb = time.time()
+        return self._hb
+
+    def fail(self):
+        """Simulate a node crash: agent stops responding."""
+        self.failed = True
+
+    def _check(self):
+        if self.failed:
+            raise NodeFailed(self.node_id)
+
+    # -- orchestration ops -> CRI (Table 3) -------------------------------------
+    def deploy(self, cid: str, image_ref: str, priority: int = 0,
+               preemptible: bool = True):
+        self._check()
+        self.engine.CreateContainer(ContainerConfig(
+            cid=cid, image_ref=image_ref, annotations={
+                A_PREEMPTIBLE: "true" if preemptible else "false",
+                A_PRIORITY: str(priority),
+            }))
+        self.engine.StartContainer(cid)
+
+    def evict(self, cid: str):
+        self._check()
+        self.engine.StopContainer(cid)
+
+    def resume(self, cid: str):
+        self._check()
+        self.engine.StartContainer(cid)
+
+    def migrate_in(self, cid: str, image_ref: str, source_node: str):
+        self._check()
+        self.engine.CreateContainer(ContainerConfig(
+            cid=cid, image_ref=image_ref,
+            annotations={A_SOURCE_NODE: source_node}))
+        self.engine.StartContainer(cid)
+
+    def checkpoint(self, cid: str) -> str:
+        self._check()
+        return self.engine.CheckpointContainer(cid)
+
+    def restore(self, cid: str, snapshot_path: str, image_ref: str = ""):
+        self._check()
+        self.engine.CreateContainer(ContainerConfig(
+            cid=cid, image_ref=image_ref,
+            annotations={A_SNAPSHOT: snapshot_path}))
+        self.engine.StartContainer(cid)
+
+    def replicate_in(self, new_cid: str, source_cid: str, source_node: str,
+                     image_ref: str = ""):
+        self._check()
+        self.engine.CreateContainer(ContainerConfig(
+            cid=new_cid, image_ref=image_ref, annotations={
+                A_REPLICA_OF: source_cid, A_SOURCE_NODE: source_node}))
+        self.engine.StartContainer(new_cid)
+
+    def update(self, cid: str, vfpga_num: int):
+        self._check()
+        self.engine.UpdateContainerResources(
+            cid, {A_VFPGA_NUM: str(vfpga_num)})
+
+    # -- introspection ----------------------------------------------------------
+    def free_slices(self) -> int:
+        self._check()
+        return self.engine.runtime.allocator.free_count()
+
+    def num_slices(self) -> int:
+        return len(self.engine.runtime.allocator.slices)
+
+    def task_status(self, cid: str) -> Optional[TaskStatus]:
+        self._check()
+        rec = self.engine.runtime.tasks.get(cid)
+        return rec.status if rec else None
+
+    def latest_snapshot(self, cid: str) -> Optional[str]:
+        rec = self.engine.runtime.tasks.get(cid)
+        return rec.latest_snapshot if rec else None
+
+    def task_progress(self, cid: str) -> Optional[int]:
+        """Guest step counter — the orchestrator's straggler signal."""
+        self._check()
+        rec = self.engine.runtime.tasks.get(cid)
+        return rec.guest_state.step if rec else None

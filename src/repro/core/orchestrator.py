@@ -1,0 +1,356 @@
+"""The Funky orchestrator (leader node): API server + scheduler + services.
+
+Services (paper §3.5, Table 3):
+  * preemptive scheduling  — Algorithm 1 actions executed through node agents
+  * checkpoint & restore   — periodic/manual snapshots; failure recovery
+  * workload scaling       — horizontal (replicate) and vertical (update)
+
+The orchestrator never talks to monitors directly: every operation flows
+orchestrator -> node agent -> CRI -> container engine -> OCI runtime, as in
+the paper's Figure 1.
+"""
+
+from __future__ import annotations
+
+import itertools
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from repro.core.node_agent import NodeAgent, NodeFailed
+from repro.core.runtime import TaskStatus
+from repro.core.scheduler import (Action, FunkyScheduler, Policy, SchedTask,
+                                  TaskState)
+
+
+@dataclass
+class Deployment:
+    cid: str
+    image_ref: str
+    priority: int = 0
+    preemptible: bool = True
+    submit_time: float = field(default_factory=time.time)
+    start_time: Optional[float] = None
+    end_time: Optional[float] = None
+    status: str = "pending"
+
+
+class Orchestrator:
+    def __init__(self, agents: Dict[str, NodeAgent],
+                 policy: Policy = Policy.PRE_MG,
+                 checkpoint_interval: Optional[float] = None):
+        self.agents = agents
+        self.scheduler = FunkyScheduler(policy)
+        self.deployments: Dict[str, Deployment] = {}
+        self._sched_tasks: Dict[str, SchedTask] = {}
+        self._cid_counter = itertools.count(1)
+        self._lock = threading.RLock()
+        self.checkpoint_interval = checkpoint_interval
+        self._stop = threading.Event()
+        self._threads: List[threading.Thread] = []
+        self.events: List[tuple] = []
+
+    # ------------------------------------------------------------------
+    # API server
+    # ------------------------------------------------------------------
+    def submit(self, image_ref: str, priority: int = 0,
+               preemptible: bool = True, cid: Optional[str] = None) -> str:
+        with self._lock:
+            cid = cid or f"task-{next(self._cid_counter):04d}"
+            dep = Deployment(cid=cid, image_ref=image_ref, priority=priority,
+                             preemptible=preemptible)
+            self.deployments[cid] = dep
+            st = SchedTask(tid=cid, priority=priority,
+                           submit_time=dep.submit_time,
+                           preemptible=preemptible)
+            self._sched_tasks[cid] = st
+            self.scheduler.submit(st)
+            self._log("submit", cid=cid, priority=priority)
+            return cid
+
+    def checkpoint(self, cid: str) -> str:
+        node = self._sched_tasks[cid].node_id
+        path = self.agents[node].checkpoint(cid)
+        self._log("checkpoint", cid=cid, path=path)
+        return path
+
+    def scale_horizontal(self, cid: str, target_node: str) -> str:
+        src = self._sched_tasks[cid].node_id
+        new_cid = f"{cid}-r{next(self._cid_counter)}"
+        self.agents[target_node].replicate_in(
+            new_cid, cid, src, self.deployments[cid].image_ref)
+        dep = Deployment(cid=new_cid,
+                         image_ref=self.deployments[cid].image_ref)
+        dep.status = "running"
+        self.deployments[new_cid] = dep
+        st = SchedTask(tid=new_cid, state=TaskState.RUNNING,
+                       node_id=target_node)
+        self._sched_tasks[new_cid] = st
+        self.scheduler.run_queue.append(st)
+        self._log("replicate", cid=cid, new_cid=new_cid, node=target_node)
+        return new_cid
+
+    def scale_vertical(self, cid: str, vfpga_num: int):
+        node = self._sched_tasks[cid].node_id
+        self.agents[node].update(cid, vfpga_num)
+        self._log("update", cid=cid, vfpga_num=vfpga_num)
+
+    # ------------------------------------------------------------------
+    # ClusterView for the scheduler
+    # ------------------------------------------------------------------
+    def nodes(self) -> List[str]:
+        return [n for n, a in self.agents.items() if not a.failed]
+
+    def free_slices(self, node: str) -> int:
+        """Logical occupancy (scheduler's own accounting) — the physical
+        allocator lags asynchronous task setup, so consulting it directly
+        would double-book slots."""
+        agent = self.agents.get(node)
+        if agent is None or agent.failed:
+            return 0
+        return agent.num_slices() - len(self.running_tasks(node))
+
+    def running_tasks(self, node: str) -> List[SchedTask]:
+        return [t for t in self.scheduler.run_queue if t.node_id == node]
+
+    # ------------------------------------------------------------------
+    # Scheduling loop
+    # ------------------------------------------------------------------
+    def tick(self) -> List[Action]:
+        """Reap finished tasks, run one scheduling pass, execute actions."""
+        with self._lock:
+            self._reap()
+            actions = self.scheduler.schedule_once(self)
+            for a in actions:
+                self._execute(a)
+            return actions
+
+    def _reap(self):
+        for cid, st in list(self._sched_tasks.items()):
+            if st.state is not TaskState.RUNNING:
+                continue
+            agent = self.agents.get(st.node_id)
+            if agent is None or agent.failed:
+                continue
+            status = agent.task_status(cid)
+            dep = self.deployments[cid]
+            if status is TaskStatus.DONE:
+                st.state = TaskState.DONE
+                self.scheduler.task_done(cid)
+                dep.status = "done"
+                dep.end_time = time.time()
+                self._log("done", cid=cid)
+            elif status is TaskStatus.FAILED:
+                from repro.core.monitor import NoSliceAvailable
+
+                rec_err = agent.engine.runtime.tasks[cid].error
+                if isinstance(rec_err, NoSliceAvailable):
+                    # slot race during async setup: requeue, don't kill
+                    agent.engine.runtime.delete(cid)
+                    st.state = TaskState.WAITING
+                    st.node_id = None
+                    self.scheduler.task_done(cid)
+                    self.scheduler.submit(st)
+                    dep.status = "pending"
+                    self._log("requeued_no_slice", cid=cid)
+                    continue
+                st.state = TaskState.DONE
+                self.scheduler.task_done(cid)
+                dep.status = "failed"
+                dep.end_time = time.time()
+                self._log("task_failed", cid=cid)
+
+    def _execute(self, a: Action):
+        dep = self.deployments.get(a.tid)
+        st = self._sched_tasks[a.tid]
+        try:
+            if a.kind == "deploy":
+                self.agents[a.node].deploy(
+                    a.tid, dep.image_ref, priority=dep.priority,
+                    preemptible=dep.preemptible)
+                dep.status = "running"
+                dep.start_time = dep.start_time or time.time()
+            elif a.kind == "evict":
+                self.agents[a.node].evict(a.tid)
+                self.deployments[a.tid].status = "evicted"
+            elif a.kind == "resume":
+                self.agents[a.node].resume(a.tid)
+                dep.status = "running"
+            elif a.kind == "migrate":
+                self.agents[a.node].migrate_in(
+                    a.tid, dep.image_ref, a.src_node)
+                dep.status = "running"
+            self._log(a.kind, cid=a.tid, node=a.node)
+        except NodeFailed:
+            # node died under us: requeue the task
+            st.state = TaskState.WAITING
+            st.node_id = None
+            self.scheduler.task_done(a.tid)
+            self.scheduler.submit(st)
+            self._log("node_failed_during", action=a.kind, cid=a.tid)
+        except Exception as e:  # noqa: BLE001 - e.g. NoSliceAvailable race
+            from repro.core.monitor import NoSliceAvailable
+
+            if not isinstance(e, NoSliceAvailable):
+                raise
+            if a.kind in ("resume", "migrate"):
+                st.state = TaskState.EVICTED      # context survives
+            else:
+                st.state = TaskState.WAITING
+                st.node_id = None
+            self.scheduler.task_done(a.tid)
+            self.scheduler.submit(st)
+            self._log("no_slice_retry", action=a.kind, cid=a.tid)
+
+    # ------------------------------------------------------------------
+    # Background services
+    # ------------------------------------------------------------------
+    def start(self, tick_interval: float = 0.02):
+        def sched_loop():
+            while not self._stop.is_set():
+                self.tick()
+                time.sleep(tick_interval)
+
+        t = threading.Thread(target=sched_loop, daemon=True,
+                             name="funky-scheduler")
+        t.start()
+        self._threads.append(t)
+
+        if self.checkpoint_interval:
+            def ckpt_loop():
+                while not self._stop.wait(self.checkpoint_interval):
+                    with self._lock:
+                        running = [t.tid for t in self.scheduler.run_queue]
+                    for cid in running:
+                        try:
+                            self.checkpoint(cid)
+                        except Exception:  # noqa: BLE001
+                            pass
+
+            t2 = threading.Thread(target=ckpt_loop, daemon=True,
+                                  name="funky-ckpt")
+            t2.start()
+            self._threads.append(t2)
+
+    def stop(self):
+        self._stop.set()
+        for t in self._threads:
+            t.join(timeout=10)
+
+    # ------------------------------------------------------------------
+    # Straggler mitigation
+    # ------------------------------------------------------------------
+    def check_stragglers(self, *, min_relative_rate: float = 0.5,
+                         min_window_s: float = 1.0) -> List[str]:
+        """Detect tasks progressing abnormally slowly (degraded node) and
+        evict them so the scheduler migrates their context elsewhere.
+
+        Rate = guest steps per second since the last probe; a task whose
+        rate is below ``min_relative_rate`` x the median of its peers (>= 3
+        running tasks required) is a straggler.  Returns the cids acted on.
+        """
+        now = time.time()
+        rates = {}
+        with self._lock:
+            for st in list(self.scheduler.run_queue):
+                agent = self.agents.get(st.node_id)
+                if agent is None or agent.failed:
+                    continue
+                try:
+                    step = agent.task_progress(st.tid)
+                except NodeFailed:
+                    continue
+                if step is None:
+                    continue
+                prev = st.meta.get("probe")
+                st.meta["probe"] = (now, step)
+                if prev is None or now - prev[0] < min_window_s:
+                    continue
+                rates[st.tid] = (step - prev[1]) / (now - prev[0])
+        if len(rates) < 3:
+            return []
+        med = sorted(rates.values())[len(rates) // 2]
+        if med <= 0:
+            return []
+        acted = []
+        for tid, rate in rates.items():
+            if rate < min_relative_rate * med:
+                st = self._sched_tasks[tid]
+                # only worth migrating if somewhere else has room
+                if any(self.free_slices(n) > 0 for n in self.nodes()
+                       if n != st.node_id):
+                    try:
+                        self.agents[st.node_id].evict(tid)
+                    except Exception:  # noqa: BLE001
+                        continue
+                    with self._lock:
+                        self.scheduler.task_done(tid)
+                        st.state = TaskState.EVICTED
+                        self.scheduler.submit(st)
+                        st.meta.pop("probe", None)
+                    self._log("straggler_evicted", cid=tid, rate=rate,
+                              median=med)
+                    acted.append(tid)
+        return acted
+
+    # ------------------------------------------------------------------
+    # Fault tolerance
+    # ------------------------------------------------------------------
+    def handle_node_failure(self, node_id: str):
+        """Restore tasks of a failed node from their latest snapshots."""
+        self.agents[node_id].fail()
+        with self._lock:
+            victims = [t for t in list(self.scheduler.run_queue)
+                       if t.node_id == node_id]
+            for st in victims:
+                self.scheduler.task_done(st.tid)
+                dep = self.deployments[st.tid]
+                snap = dep and self._latest_snapshot_any(st.tid)
+                target = self._pick_free_node()
+                if snap and target:
+                    self.agents[target].restore(st.tid, snap, dep.image_ref)
+                    st.state = TaskState.RUNNING
+                    st.node_id = target
+                    self.scheduler.run_queue.append(st)
+                    self._log("restored", cid=st.tid, node=target, snap=snap)
+                else:
+                    # no snapshot: restart from scratch
+                    st.state = TaskState.WAITING
+                    st.node_id = None
+                    self.scheduler.submit(st)
+                    self._log("resubmitted", cid=st.tid)
+
+    def _latest_snapshot_any(self, cid: str) -> Optional[str]:
+        import glob
+        import os
+
+        for agent in self.agents.values():
+            root = agent.engine.runtime.ckpt_root
+            hits = sorted(glob.glob(os.path.join(root, f"{cid}-step*")))
+            if hits:
+                return hits[-1]
+        return None
+
+    def _pick_free_node(self) -> Optional[str]:
+        best, best_free = None, 0
+        for n in self.nodes():
+            f = self.free_slices(n)
+            if f > best_free:
+                best, best_free = n, f
+        return best
+
+    # ------------------------------------------------------------------
+    def wait_all(self, timeout: float = 600.0) -> bool:
+        deadline = time.time() + timeout
+        while time.time() < deadline:
+            with self._lock:
+                pend = [d for d in self.deployments.values()
+                        if d.status not in ("done", "failed")]
+            if not pend:
+                return True
+            time.sleep(0.02)
+        return False
+
+    def _log(self, event: str, **kw):
+        self.events.append((time.time(), event, kw))

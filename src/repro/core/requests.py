@@ -1,0 +1,104 @@
+"""Funky requests (paper Table 2) — the four primitive device operations.
+
+Every device interaction of a guest task is one of:
+
+    MEMORY(buff_id, spec, size)          allocate/register a device buffer
+    TRANSFER(queue, buff_id, src, size)  host<->device data movement
+    EXECUTE(queue, program, args)        launch a compiled program
+    SYNC(queue, req_id)                  await completion
+
+Requests travel on a shared queue between the guest and the monitor's worker
+thread (the paper's lock-free exitless-I/O rings; here a ``queue.Queue``
+crossing a real thread boundary).  Each request carries a ``Completion``
+future the guest can wait on — EXECUTE/TRANSFER are *asynchronous* unless the
+guest SYNCs, mirroring the OpenCL command-queue model.
+"""
+
+from __future__ import annotations
+
+import enum
+import itertools
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+
+class RequestKind(enum.Enum):
+    MEMORY = "MEMORY"
+    TRANSFER = "TRANSFER"
+    EXECUTE = "EXECUTE"
+    SYNC = "SYNC"
+    SHUTDOWN = "SHUTDOWN"      # internal: stop the worker thread
+
+
+class Direction(enum.Enum):
+    H2D = "h2d"
+    D2H = "d2h"
+
+
+class Completion:
+    """Future for one request."""
+
+    __slots__ = ("_event", "value", "error", "submitted_at", "completed_at")
+
+    def __init__(self):
+        self._event = threading.Event()
+        self.value: Any = None
+        self.error: Optional[BaseException] = None
+        self.submitted_at = time.perf_counter()
+        self.completed_at: Optional[float] = None
+
+    def set(self, value: Any = None, error: Optional[BaseException] = None):
+        self.value = value
+        self.error = error
+        self.completed_at = time.perf_counter()
+        self._event.set()
+
+    def wait(self, timeout: Optional[float] = None) -> Any:
+        if not self._event.wait(timeout):
+            raise TimeoutError("request did not complete")
+        if self.error is not None:
+            raise self.error
+        return self.value
+
+    @property
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    @property
+    def latency(self) -> Optional[float]:
+        if self.completed_at is None:
+            return None
+        return self.completed_at - self.submitted_at
+
+
+_req_counter = itertools.count(1)
+
+
+@dataclass
+class FunkyRequest:
+    kind: RequestKind
+    req_id: int = field(default_factory=lambda: next(_req_counter))
+    completion: Completion = field(default_factory=Completion)
+
+    # MEMORY
+    buff_id: Optional[str] = None
+    spec: Any = None                    # abstract pytree (ShapeDtypeStructs)
+
+    # TRANSFER
+    direction: Optional[Direction] = None
+    host_value: Any = None              # h2d payload (host pytree)
+
+    # EXECUTE
+    program_id: Optional[str] = None
+    in_buffs: tuple = ()
+    out_buffs: tuple = ()
+    const_args: tuple = ()              # small scalars passed by value
+    donate: bool = True                 # donate inputs that are also outputs
+
+    # SYNC
+    upto_req_id: Optional[int] = None   # None = all outstanding
+
+    def __repr__(self) -> str:  # compact for logs
+        return f"<{self.kind.value} #{self.req_id} buff={self.buff_id} prog={self.program_id}>"

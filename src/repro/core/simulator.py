@@ -1,0 +1,269 @@
+"""Discrete-event cluster simulator (paper §5.6, Figs 11–13).
+
+Replays (synthetic) Borg-like traces against a simulated vSlice cluster.
+The *same* ``FunkyScheduler`` policy engine used by the live runtime drives
+placement decisions; Funky-specific overheads (boot, reconfiguration, sync
+wait, evict/resume/migrate/checkpoint byte costs) are inserted per event,
+parameterized by the micro-benchmarks measured on the live runtime —
+exactly the paper's methodology.
+
+Modeling notes (matching §5.6):
+* every job occupies one vSlice while running; an ``acceleration_rate`` r
+  shortens its work to ``dur * (1 - r + r/speedup)`` with speedup = 1.6;
+* worst case for Funky: the job's full memory footprint is dirty and must be
+  saved/restored on every evict/checkpoint (capped at 8 GiB device memory);
+* failures: a job fails once at ``fail_frac`` of its work; with periodic
+  checkpointing it resumes from the latest snapshot, else restarts.
+"""
+
+from __future__ import annotations
+
+import heapq
+import itertools
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from repro.core.scheduler import (Action, FunkyScheduler, Policy, SchedTask,
+                                  TaskState)
+from repro.core.traces import TraceJob
+
+
+@dataclass
+class SimParams:
+    host_bw: float = 10e9           # device<->host, bytes/s (PCIe-ish)
+    net_bw: float = 12.5e9          # node<->node, bytes/s (100 Gb/s)
+    disk_bw: float = 0.5e9          # SSD write, bytes/s
+    boot_s: float = 0.05            # sandbox boot (measured: unikernel-like)
+    reconfig_s: float = 0.5         # program load/compile on deploy
+    sync_wait_s: float = 0.1        # request-boundary wait (chunked)
+    accel_speedup: float = 1.6      # measured FPGA-vs-CPU factor (paper)
+    checkpoint_interval_s: Optional[float] = None
+    acceleration_rate: float = 1.0  # fraction of work accelerable (Fig 11)
+
+
+@dataclass
+class SimJobState:
+    job: TraceJob
+    work: float                     # effective seconds of work required
+    progress: float = 0.0           # completed work, seconds
+    ckpt_progress: float = 0.0      # progress at last snapshot
+    run_start: Optional[float] = None
+    epoch: int = 0                  # invalidates stale finish/fail events
+    failed_once: bool = False
+    submit_t: float = 0.0
+    first_start_t: Optional[float] = None
+    finish_t: Optional[float] = None
+    evictions: int = 0
+    migrations: int = 0
+    busy_until: float = 0.0         # overhead window before compute starts
+
+
+class SimulatedCluster:
+    """ClusterView over simulated nodes."""
+
+    def __init__(self, num_nodes: int, slices_per_node: int):
+        self.capacity = {f"node{i}": slices_per_node
+                         for i in range(num_nodes)}
+        self.used: Dict[str, int] = {n: 0 for n in self.capacity}
+        self.placement: Dict[str, str] = {}
+
+    def nodes(self) -> List[str]:
+        return list(self.capacity)
+
+    def free_slices(self, node: str) -> int:
+        return self.capacity[node] - self.used[node]
+
+    def running_tasks(self, node: str):  # unused by scheduler internals
+        return []
+
+    def occupy(self, node: str, tid: str):
+        self.used[node] += 1
+        self.placement[tid] = node
+
+    def release(self, tid: str):
+        node = self.placement.pop(tid, None)
+        if node is not None:
+            self.used[node] -= 1
+
+
+class Simulator:
+    def __init__(self, jobs: List[TraceJob], num_nodes: int,
+                 slices_per_node: int = 1, policy: Policy = Policy.PRE_MG,
+                 params: Optional[SimParams] = None):
+        self.jobs = jobs
+        self.params = params or SimParams()
+        self.cluster = SimulatedCluster(num_nodes, slices_per_node)
+        self.sched = FunkyScheduler(policy)
+        self.states: Dict[str, SimJobState] = {}
+        self.tasks: Dict[str, SchedTask] = {}
+        self._heap: list = []
+        self._seq = itertools.count()
+        self.now = 0.0
+        self.events_processed = 0
+
+    # ------------------------------------------------------------------
+    def _push(self, t: float, kind: str, payload=None):
+        heapq.heappush(self._heap, (t, next(self._seq), kind, payload))
+
+    def _effective_work(self, job: TraceJob) -> float:
+        r = self.params.acceleration_rate
+        return job.duration * (1 - r + r / self.params.accel_speedup)
+
+    # -- overhead helpers ------------------------------------------------------
+    def _evict_cost(self, st: SimJobState) -> float:
+        return (self.params.sync_wait_s
+                + st.job.memory_bytes / self.params.host_bw)
+
+    def _resume_cost(self, st: SimJobState) -> float:
+        return st.job.memory_bytes / self.params.host_bw
+
+    def _migrate_cost(self, st: SimJobState) -> float:
+        return st.job.memory_bytes / self.params.net_bw
+
+    def _ckpt_cost(self, st: SimJobState) -> float:
+        return (self.params.sync_wait_s
+                + st.job.memory_bytes / self.params.disk_bw)
+
+    # ------------------------------------------------------------------
+    def run(self) -> dict:
+        for job in self.jobs:
+            self._push(job.submit_time, "submit", job)
+        if self.params.checkpoint_interval_s:
+            self._push(self.params.checkpoint_interval_s, "ckpt_tick")
+
+        while self._heap:
+            t, _, kind, payload = heapq.heappop(self._heap)
+            self.now = max(self.now, t)
+            self.events_processed += 1
+            getattr(self, f"_on_{kind}")(payload)
+            self._schedule()
+        return self._report()
+
+    # -- event handlers ---------------------------------------------------------
+    def _on_submit(self, job: TraceJob):
+        st = SimJobState(job=job, work=self._effective_work(job),
+                         submit_t=self.now)
+        self.states[job.jid] = st
+        task = SchedTask(tid=job.jid, priority=job.priority,
+                         submit_time=self.now)
+        self.tasks[job.jid] = task
+        self.sched.submit(task)
+
+    def _start_running(self, st: SimJobState, overhead: float):
+        st.run_start = self.now + overhead
+        st.busy_until = st.run_start
+        if st.first_start_t is None:
+            st.first_start_t = st.run_start
+        st.epoch += 1
+        remaining = st.work - st.progress
+        fail_at = None
+        if (st.job.fail_frac is not None and not st.failed_once):
+            fail_point = st.job.fail_frac * st.work
+            if fail_point > st.progress:
+                fail_at = st.run_start + (fail_point - st.progress)
+        finish_at = st.run_start + remaining
+        if fail_at is not None and fail_at < finish_at:
+            self._push(fail_at, "fail", (st.job.jid, st.epoch))
+        else:
+            self._push(finish_at, "finish", (st.job.jid, st.epoch))
+
+    def _pause(self, st: SimJobState):
+        """Accumulate progress and stop the clock for this job."""
+        if st.run_start is not None:
+            st.progress += max(0.0, self.now - st.run_start)
+            st.progress = min(st.progress, st.work)
+            st.run_start = None
+        st.epoch += 1            # cancels in-flight finish/fail events
+
+    def _on_finish(self, payload):
+        jid, epoch = payload
+        st = self.states[jid]
+        if epoch != st.epoch or st.run_start is None:
+            return               # stale event (task was evicted/failed)
+        st.progress = st.work
+        st.finish_t = self.now
+        self.cluster.release(jid)
+        self.sched.task_done(jid)
+        self.tasks[jid].state = TaskState.DONE
+
+    def _on_fail(self, payload):
+        jid, epoch = payload
+        st = self.states[jid]
+        if epoch != st.epoch or st.run_start is None:
+            return
+        st.failed_once = True
+        self._pause(st)
+        # lose progress back to the last snapshot (or zero)
+        st.progress = st.ckpt_progress
+        self.cluster.release(jid)
+        self.sched.task_done(jid)
+        task = self.tasks[jid]
+        task.state = TaskState.WAITING
+        task.node_id = None
+        self.sched.submit(task)   # restore/restart via normal scheduling
+
+    def _on_ckpt_tick(self, _):
+        p = self.params
+        for jid, st in self.states.items():
+            if st.run_start is not None and st.finish_t is None \
+                    and self.now >= st.busy_until:
+                # pause for the snapshot, then continue
+                self._pause(st)
+                st.ckpt_progress = st.progress
+                self._start_running(st, self._ckpt_cost(st))
+        # keep ticking while jobs remain unsubmitted or unfinished
+        pending = (len(self.states) < len(self.jobs)
+                   or any(s.finish_t is None for s in self.states.values()))
+        if pending:
+            self._push(self.now + p.checkpoint_interval_s, "ckpt_tick")
+
+    # -- scheduling ----------------------------------------------------------
+    def _schedule(self):
+        actions = self.sched.schedule_once(self.cluster)
+        for a in actions:
+            st = self.states[a.tid]
+            if a.kind == "deploy":
+                self.cluster.occupy(a.node, a.tid)
+                self._start_running(
+                    st, self.params.boot_s + self.params.reconfig_s)
+            elif a.kind == "evict":
+                self._pause(st)
+                st.evictions += 1
+                self.cluster.release(a.tid)
+                # eviction overhead occupies the *evicted* task's timeline
+                st.busy_until = self.now + self._evict_cost(st)
+            elif a.kind == "resume":
+                self.cluster.occupy(a.node, a.tid)
+                self._start_running(st, self._resume_cost(st))
+            elif a.kind == "migrate":
+                st.migrations += 1
+                self.cluster.occupy(a.node, a.tid)
+                self._start_running(
+                    st, self._migrate_cost(st) + self._resume_cost(st))
+
+    # -- reporting ---------------------------------------------------------------
+    def _report(self) -> dict:
+        done = [s for s in self.states.values() if s.finish_t is not None]
+        if not done:
+            return {"completed": 0}
+        makespan = max(s.finish_t for s in done) - min(
+            s.submit_t for s in self.states.values())
+        lat = [s.finish_t - s.submit_t for s in done]
+        exec_t = [s.finish_t - s.first_start_t for s in done
+                  if s.first_start_t is not None]
+        by_prio: Dict[int, list] = {}
+        for s in done:
+            by_prio.setdefault(s.job.priority, []).append(
+                s.finish_t - s.submit_t)
+        return {
+            "completed": len(done),
+            "makespan_s": makespan,
+            "throughput_per_min": len(done) / (makespan / 60.0),
+            "mean_latency_s": sum(lat) / len(lat),
+            "mean_exec_s": sum(exec_t) / max(len(exec_t), 1),
+            "latency_by_priority": {
+                p: sum(v) / len(v) for p, v in sorted(by_prio.items())},
+            "evictions": sum(s.evictions for s in self.states.values()),
+            "migrations": sum(s.migrations for s in self.states.values()),
+            "events": self.events_processed,
+        }

@@ -1,0 +1,208 @@
+"""Buffer state machine and task snapshots (paper §3.4).
+
+Each logical buffer (params, optimizer state, KV caches, input batches, ...)
+is tracked with one of three states:
+
+    INIT   allocated, no meaningful device contents
+    SYNC   device contents mirrored by a host copy (or reproducible from one)
+    DIRTY  device contents newer than any host copy
+
+Eviction/checkpointing saves **only DIRTY buffers** — the paper's key
+optimization for cheap preemption (Fig 7): input batches stay SYNC after
+their H2D transfer and cost nothing to evict; params/optimizer become DIRTY
+after every EXECUTE that writes them.
+"""
+
+from __future__ import annotations
+
+import enum
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+
+class BufferState(enum.Enum):
+    INIT = "init"
+    SYNC = "sync"
+    DIRTY = "dirty"
+
+
+def tree_bytes(tree: Any) -> int:
+    total = 0
+    for leaf in jax.tree.leaves(tree):
+        if hasattr(leaf, "nbytes"):
+            total += int(leaf.nbytes)
+        elif hasattr(leaf, "size") and hasattr(leaf, "dtype"):
+            total += int(leaf.size) * np.dtype(leaf.dtype).itemsize
+    return total
+
+
+def to_host(tree: Any) -> Any:
+    return jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+
+
+@dataclass
+class Buffer:
+    buff_id: str
+    spec: Any                           # abstract pytree
+    state: BufferState = BufferState.INIT
+    device_value: Any = None            # pytree of jax arrays (or None)
+    host_value: Any = None              # pytree of numpy arrays (or None)
+    nbytes: int = 0
+    version: int = 0                    # bumped on every device-side write
+
+    def __post_init__(self):
+        if not self.nbytes:
+            self.nbytes = tree_bytes(self.spec)
+
+
+class BufferTable:
+    """Per-task buffer registry with state transitions (monitor-owned)."""
+
+    def __init__(self):
+        self._buffers: Dict[str, Buffer] = {}
+
+    # -- registry -------------------------------------------------------------
+    def register(self, buff_id: str, spec: Any) -> Buffer:
+        if buff_id in self._buffers:
+            raise KeyError(f"buffer {buff_id!r} already exists")
+        b = Buffer(buff_id=buff_id, spec=spec)
+        self._buffers[buff_id] = b
+        return b
+
+    def get(self, buff_id: str) -> Buffer:
+        return self._buffers[buff_id]
+
+    def __contains__(self, buff_id: str) -> bool:
+        return buff_id in self._buffers
+
+    def ids(self):
+        return list(self._buffers)
+
+    def total_bytes(self) -> int:
+        return sum(b.nbytes for b in self._buffers.values())
+
+    # -- transitions ----------------------------------------------------------
+    def on_h2d(self, buff_id: str, host_value: Any, device_value: Any):
+        b = self.get(buff_id)
+        b.host_value = host_value
+        b.device_value = device_value
+        b.state = BufferState.SYNC
+        b.nbytes = tree_bytes(device_value)
+        b.version += 1
+
+    def on_d2h(self, buff_id: str) -> Any:
+        b = self.get(buff_id)
+        b.host_value = to_host(b.device_value)
+        b.state = BufferState.SYNC
+        return b.host_value
+
+    def on_execute_write(self, buff_id: str, device_value: Any):
+        b = self.get(buff_id)
+        b.device_value = device_value
+        b.state = BufferState.DIRTY
+        b.nbytes = tree_bytes(device_value)
+        b.version += 1
+
+    # -- evict / restore --------------------------------------------------------
+    def dirty_ids(self):
+        return [i for i, b in self._buffers.items()
+                if b.state is BufferState.DIRTY]
+
+    def evict_device_state(self) -> dict:
+        """Save DIRTY buffers to host, drop all device references.
+
+        Returns stats {saved_bytes, skipped_bytes, n_dirty}.
+        """
+        saved = skipped = n_dirty = 0
+        for b in self._buffers.values():
+            if b.state is BufferState.DIRTY:
+                b.host_value = to_host(b.device_value)
+                b.state = BufferState.SYNC
+                saved += b.nbytes
+                n_dirty += 1
+            else:
+                skipped += b.nbytes
+            b.device_value = None
+        return {"saved_bytes": saved, "skipped_bytes": skipped,
+                "n_dirty": n_dirty}
+
+    def restore_device_state(self, put_fn=None) -> dict:
+        """Re-materialize device buffers from host copies."""
+        put = put_fn or jax.device_put
+        restored = 0
+        for b in self._buffers.values():
+            if b.host_value is not None:
+                b.device_value = put(b.host_value)
+                b.state = BufferState.SYNC
+                restored += b.nbytes
+        return {"restored_bytes": restored}
+
+    def host_snapshot(self) -> dict:
+        """Host-side view for checkpointing: {buff_id: host pytree}."""
+        out = {}
+        for i, b in self._buffers.items():
+            if b.host_value is not None:
+                out[i] = b.host_value
+        return out
+
+    def versions(self) -> dict:
+        return {i: b.version for i, b in self._buffers.items()}
+
+    def spec_map(self) -> dict:
+        """Abstract registry of every buffer (incl. INIT ones) — snapshots
+        carry this so restore re-registers buffers that had no value yet."""
+        return {i: b.spec for i, b in self._buffers.items()}
+
+    def load_snapshot(self, snap: dict, specs: dict | None = None):
+        for i, spec in (specs or {}).items():
+            if i not in self._buffers:
+                self._buffers[i] = Buffer(buff_id=i, spec=spec)
+        for i, host_value in snap.items():
+            if i not in self._buffers:
+                self._buffers[i] = Buffer(buff_id=i, spec=None, nbytes=0)
+            b = self._buffers[i]
+            b.host_value = host_value
+            b.state = BufferState.SYNC
+            b.nbytes = tree_bytes(host_value)
+
+    def zero_and_clear(self):
+        """Release everything (monitor zeroes freed device memory, §3.4)."""
+        self._buffers.clear()
+
+
+@dataclass
+class GuestState:
+    """The "VM state" of a task: everything the guest needs to resume.
+
+    Funky snapshots the unikernel's vCPU + dirty guest pages; our guests are
+    step-wise resumable tasks, so the VM state is their explicit progress
+    record (step counter, RNG seed, data-stream position, user dict).
+    """
+    step: int = 0
+    seed: int = 0
+    data_position: int = 0
+    user: dict = field(default_factory=dict)
+
+    def clone(self) -> "GuestState":
+        return GuestState(self.step, self.seed, self.data_position,
+                          dict(self.user))
+
+
+@dataclass
+class TaskSnapshot:
+    """A full checkpoint: buffers + guest (VM) state + provenance."""
+    task_id: str
+    guest_state: GuestState
+    buffers: dict                       # buff_id -> host pytree
+    program_ids: tuple = ()
+    created_at: float = field(default_factory=time.time)
+    step: int = 0
+    versions: dict = field(default_factory=dict)   # buff_id -> write version
+    buffer_specs: dict = field(default_factory=dict)  # full registry
+
+    def nbytes(self) -> int:
+        return tree_bytes(self.buffers)

@@ -1,0 +1,251 @@
+"""Guest tasks: the "unikernel applications" of this framework.
+
+Tasks are written against the FunkyCL API only — they never touch JAX devices
+directly.  They are *step-wise resumable*: ``setup()`` builds programs and
+buffers (or re-attaches after restore), ``step()`` performs one preemptible
+unit of work.  The runtime's driver thread calls ``step()`` in a loop; all
+orchestration (evict/resume/migrate/checkpoint) lands between steps plus a
+monitor-level SYNC — exactly the paper's request-boundary preemption model.
+
+``TrainTask`` uses the *chunked* train functions (paper §3.4 data splitting):
+one logical optimizer step = K microbatch EXECUTE requests + one apply
+EXECUTE, so preemption waits at most one microbatch (Fig 9).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, get_arch
+from repro.configs.base import ShapeConfig
+from repro.core.guest import FunkyCL
+from repro.core.programs import Program
+from repro.core.state import GuestState
+from repro.train import OptConfig, make_batch, make_chunked_train_fns
+from repro.train.optimizer import init_opt_state
+
+
+@dataclass
+class TaskImage:
+    """The "OCI image" of a task: guest binary + config (+ bitstreams)."""
+
+    name: str
+    kind: str                       # train | serve
+    arch: str = "yi-9b-smoke"
+    seq_len: int = 32
+    global_batch: int = 4
+    total_steps: int = 8
+    chunks: int = 2                 # microbatches per step (request splitting)
+    tokens_per_step: int = 4        # serve: decode tokens per step() call
+    prompt_len: int = 16
+    seed: int = 0
+    opt: OptConfig = field(default_factory=lambda: OptConfig(
+        warmup_steps=2, decay_steps=100))
+
+    def instantiate(self) -> "GuestTask":
+        if self.kind == "train":
+            return TrainTask(self)
+        if self.kind == "serve":
+            return ServeTask(self)
+        raise ValueError(self.kind)
+
+
+class GuestTask:
+    image: TaskImage
+
+    def setup(self, cl: FunkyCL, gs: GuestState, restore: bool) -> None:
+        raise NotImplementedError
+
+    def step(self, cl: FunkyCL, gs: GuestState) -> bool:
+        """One preemptible unit of work; returns True when finished."""
+        raise NotImplementedError
+
+    def teardown(self, cl: FunkyCL, gs: GuestState) -> None:
+        pass
+
+    def on_update(self, vfpga_num: int) -> None:
+        """Vertical-scaling hook (paper `update` command)."""
+
+
+class TrainTask(GuestTask):
+    def __init__(self, image: TaskImage):
+        self.image = image
+        self.cfg = get_arch(image.arch)
+        self.shape = ShapeConfig("task", "train", image.seq_len,
+                                 image.global_batch)
+
+    # -- programs -------------------------------------------------------------
+    def _build_programs(self):
+        from repro.models import build_model
+
+        bundle = build_model(self.cfg)
+        oc = self.image.opt
+        grad_init, grad_step, apply_step = make_chunked_train_fns(bundle, oc)
+
+        def init_state(seed):
+            params = bundle.init(jax.random.PRNGKey(seed))
+            return params, init_opt_state(oc, params)
+
+        def apply_fn(params, opt_state, grad_acc):
+            p, o, stats = apply_step(params, opt_state, grad_acc,
+                                     self.image.chunks)
+            return p, o, stats["grad_norm"]
+
+        self._bundle = bundle
+        self._progs = {
+            "init_state": Program("init_state", init_state),
+            "grad_init": Program("grad_init", grad_init),
+            "grad_step": Program("grad_step", grad_step),
+            "apply": Program("apply", apply_fn),
+        }
+
+    def _abstracts(self):
+        p_abs = jax.eval_shape(lambda: self._progs["init_state"].fn(0))
+        params_abs, opt_abs = p_abs
+        grad_abs = jax.eval_shape(self._progs["grad_init"].fn, params_abs)
+        mb = make_batch(self.cfg, self.shape, 0)
+        mb_abs = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(
+                (x.shape[0] // self.image.chunks,) + x.shape[1:], x.dtype), mb)
+        return params_abs, opt_abs, grad_abs, mb_abs
+
+    def setup(self, cl: FunkyCL, gs: GuestState, restore: bool) -> None:
+        self._build_programs()
+        params_abs, opt_abs, grad_abs, mb_abs = self._abstracts()
+        # clCreateProgramWithBinary -> vfpga_init + reconfiguration
+        cl.clCreateProgramWithBinary(self._progs["init_state"], (0,))
+        cl.clCreateProgramWithBinary(self._progs["grad_init"], (params_abs,))
+        cl.clCreateProgramWithBinary(
+            self._progs["grad_step"], (params_abs, grad_abs, mb_abs))
+        cl.clCreateProgramWithBinary(
+            self._progs["apply"], (params_abs, opt_abs, grad_abs))
+        if not restore:
+            cl.clCreateBuffer("params", params_abs)
+            cl.clCreateBuffer("opt_state", opt_abs)
+            cl.clCreateBuffer("grad_acc", grad_abs)
+            cl.clCreateBuffer("batch", mb_abs)
+            cl.clCreateBuffer("loss", jax.ShapeDtypeStruct((), jnp.float32))
+            cl.clCreateBuffer("grad_norm", jax.ShapeDtypeStruct((), jnp.float32))
+            cl.clEnqueueKernel("init_state", (), ("params", "opt_state"),
+                               const_args=(self.image.seed,))
+            cl.clFinish()
+
+    def step(self, cl: FunkyCL, gs: GuestState) -> bool:
+        """One *chunk* of a logical optimizer step (paper §3.4 splitting).
+
+        Each driver-loop iteration submits exactly one microbatch EXECUTE, so
+        preemption waits at most one chunk — and a task evicted mid-
+        accumulation resumes bit-exactly: ``chunk_idx`` lives in the guest
+        (VM) state and ``grad_acc`` is a DIRTY tracked buffer.
+        """
+        k = self.image.chunks
+        ci = gs.user.get("chunk_idx", 0)
+        if ci == 0:
+            cl.clEnqueueKernel("grad_init", ("params",), ("grad_acc",))
+        full = make_batch(self.cfg, self.shape, gs.step,
+                          batch_override=self.image.global_batch)
+        mb_size = self.image.global_batch // k
+        mb = jax.tree.map(
+            lambda x: x[ci * mb_size:(ci + 1) * mb_size], full)
+        cl.write_buffer("batch", mb)
+        cl.clEnqueueKernel("grad_step", ("params", "grad_acc", "batch"),
+                           ("grad_acc", "loss"))
+        if ci + 1 < k:
+            cl.clFinish()
+            gs.user["chunk_idx"] = ci + 1
+            return False
+        cl.clEnqueueKernel("apply", ("params", "opt_state", "grad_acc"),
+                           ("params", "opt_state", "grad_norm"))
+        cl.clFinish()
+        gs.user["chunk_idx"] = 0
+        gs.step += 1
+        gs.data_position = gs.step
+        return gs.step >= self.image.total_steps
+
+    def teardown(self, cl: FunkyCL, gs: GuestState) -> None:
+        gs.user["final_loss"] = float(jnp.asarray(cl.read_buffer("loss")))
+        # read results out before releasing: the monitor zeroes device memory
+        # on vfpga_exit (paper §3.4 isolation). Host-side only; never hits a
+        # JSON manifest (checkpoints only happen while RUNNING).
+        gs.user["final_params"] = cl.read_buffer("params")
+        for pid in ("init_state", "grad_init", "grad_step", "apply"):
+            cl.clReleaseProgram(pid)
+
+
+class ServeTask(GuestTask):
+    """Batched greedy decoding service; one step() = tokens_per_step tokens."""
+
+    def __init__(self, image: TaskImage):
+        self.image = image
+        self.cfg = get_arch(image.arch)
+
+    def _build_programs(self):
+        from repro.models import build_model
+
+        bundle = build_model(self.cfg)
+
+        def init_params(seed):
+            return bundle.init(jax.random.PRNGKey(seed))
+
+        def prefill(params, tokens):
+            logits, caches = bundle.prefill_fn(params, {"tokens": tokens})
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+            return tok, jnp.int32(tokens.shape[1]), caches
+
+        def decode(params, token, pos, caches):
+            logits, caches = bundle.decode_fn(params, token, pos, caches)
+            return (jnp.argmax(logits, -1).astype(jnp.int32), pos + 1, caches)
+
+        self._bundle = bundle
+        self._progs = {
+            "init_params": Program("init_params", init_params),
+            "prefill": Program("prefill", prefill),
+            "decode": Program("decode", decode),
+        }
+
+    def setup(self, cl: FunkyCL, gs: GuestState, restore: bool) -> None:
+        self._build_programs()
+        im = self.image
+        params_abs = jax.eval_shape(lambda: self._progs["init_params"].fn(0))
+        toks_abs = jax.ShapeDtypeStruct((im.global_batch, im.prompt_len),
+                                        jnp.int32)
+        pre_abs = jax.eval_shape(self._progs["prefill"].fn, params_abs,
+                                 toks_abs)
+        tok_abs, pos_abs, caches_abs = pre_abs
+        cl.clCreateProgramWithBinary(self._progs["init_params"], (0,))
+        cl.clCreateProgramWithBinary(self._progs["prefill"],
+                                     (params_abs, toks_abs))
+        cl.clCreateProgramWithBinary(
+            self._progs["decode"], (params_abs, tok_abs, pos_abs, caches_abs))
+        if not restore:
+            cl.clCreateBuffer("params", params_abs)
+            cl.clCreateBuffer("prompt", toks_abs)
+            cl.clCreateBuffer("token", tok_abs)
+            cl.clCreateBuffer("pos", pos_abs)
+            cl.clCreateBuffer("caches", caches_abs)
+            cl.clEnqueueKernel("init_params", (), ("params",),
+                               const_args=(im.seed,))
+            prompt = make_batch(self.cfg,
+                                ShapeConfig("p", "train", im.prompt_len,
+                                            im.global_batch), 0)["tokens"]
+            cl.write_buffer("prompt", prompt)
+            cl.clEnqueueKernel("prefill", ("params", "prompt"),
+                               ("token", "pos", "caches"))
+            cl.clFinish()
+
+    def step(self, cl: FunkyCL, gs: GuestState) -> bool:
+        for _ in range(self.image.tokens_per_step):
+            cl.clEnqueueKernel("decode", ("params", "token", "pos", "caches"),
+                               ("token", "pos", "caches"))
+        cl.clFinish()
+        gs.step += 1
+        return gs.step >= self.image.total_steps
+
+    def teardown(self, cl: FunkyCL, gs: GuestState) -> None:
+        gs.user["last_token"] = cl.read_buffer("token").tolist()
+        for pid in ("init_params", "prefill", "decode"):
+            cl.clReleaseProgram(pid)

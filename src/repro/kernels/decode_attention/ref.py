@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the decode-attention kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.attention import sdpa_naive
+
+
+def decode_ref(q, k, v, pos, kv_pos, *, window: int = 0,
+               softcap: float = 0.0):
+    """q: (B,1,Hq,hd) over cache (B,cap,Hkv,hd) with absolute kv_pos."""
+    q_pos = jnp.asarray(pos, jnp.int32).reshape(1)
+    return sdpa_naive(q, k, v, causal=True, window=window,
+                      q_pos=q_pos, kv_pos=kv_pos, softcap=softcap)

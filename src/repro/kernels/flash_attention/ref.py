@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.attention import sdpa_naive
+
+
+def sdpa_ref(q, k, v, *, causal: bool = True, window: int = 0,
+             softcap: float = 0.0):
+    """Reference scaled-dot-product attention (materializes scores)."""
+    Sq, Skv = q.shape[1], k.shape[1]
+    return sdpa_naive(q, k, v, causal=causal, window=window,
+                      q_pos=jnp.arange(Sq), kv_pos=jnp.arange(Skv),
+                      softcap=softcap)

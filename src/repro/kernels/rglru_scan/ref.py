@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the RG-LRU scan kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rglru_scan_ref(a, b):
+    """h_t = a_t h_{t-1} + b_t via associative scan; returns (h, h_final)."""
+    af = a.astype(jnp.float32)
+    bf = b.astype(jnp.float32)
+
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (af, bf), axis=1)
+    return h, h[:, -1, :]

@@ -1,0 +1,121 @@
+"""Mamba2 SSD chunked-scan kernel for TPU (Pallas).
+
+One grid step processes one (batch, head, chunk) tile entirely in VMEM:
+
+    dA   = dt * A_h                      (cs, 1)   VPU
+    L    = tril(exp(dAcs_i - dAcs_j))    (cs, cs)  VPU
+    S    = C B^T                         (cs, cs)  MXU
+    Ydiag = (S . L) (x dt)               (cs, P)   MXU
+    Yoff  = (exp(dAcs) C) state^T        (cs, P)   MXU
+    state = state * exp(dAcs[-1]) + (x dt * decay)^T B    (P, N) MXU
+
+The chunk dimension is sequential ("arbitrary"); the (P, N) running state is
+carried in f32 VMEM scratch — the inter-chunk recurrence never leaves the
+core.  All matmul shapes (cs=128..256, P=64, N=128) are MXU-aligned.  B/C are
+shared across heads (single SSD group), so their index maps drop ``h``.
+
+Oracle: ``repro.models.ssm.ssd_chunked``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, st_ref,
+                state_scr, *, cs: int):
+    cb = pl.program_id(2)
+    ncb = pl.num_programs(2)
+
+    @pl.when(cb == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)        # (cs, P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)[:, None]  # (cs, 1)
+    A = a_ref[0, 0]                                  # scalar (f32)
+    Bm = b_ref[0].astype(jnp.float32)                # (cs, N)
+    Cm = c_ref[0].astype(jnp.float32)                # (cs, N)
+
+    dA = dt * A                                      # (cs, 1), <= 0
+    dA_cs = jnp.cumsum(dA, axis=0)                   # (cs, 1)
+
+    # --- intra-chunk -----------------------------------------------------
+    diff = dA_cs - dA_cs.reshape(1, cs)              # (cs, cs)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (cs, cs), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (cs, cs), 1)
+    L = jnp.where(ii >= jj, jnp.exp(diff), 0.0)
+    scores = jax.lax.dot_general(
+        Cm, Bm, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)          # (cs, cs)
+    xdt = x * dt                                     # (cs, P)
+    y_diag = jax.lax.dot_general(
+        scores * L, xdt, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)          # (cs, P)
+
+    # --- off-diagonal (previous chunks' state) ------------------------------
+    state = state_scr[...]                           # (P, N)
+    c_scaled = Cm * jnp.exp(dA_cs)                   # (cs, N)
+    y_off = jax.lax.dot_general(
+        c_scaled, state, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)          # (cs, P)
+
+    y_ref[0, :, 0, :] = (y_diag + y_off).astype(y_ref.dtype)
+
+    # --- state update --------------------------------------------------------
+    last = dA_cs[cs - 1, 0]
+    decay_last = jnp.exp(last - dA_cs)               # (cs, 1)
+    contrib = jax.lax.dot_general(
+        xdt * decay_last, Bm, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)          # (P, N)
+    state_scr[...] = state * jnp.exp(last) + contrib
+
+    @pl.when(cb == ncb - 1)
+    def _fin():
+        st_ref[0, 0] = state_scr[...]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan_fwd(x, dt, A, Bm, Cm, *, chunk: int = 256,
+                 interpret: bool = False):
+    """x: (B,S,H,P), dt: (B,S,H), A: (H,), Bm/Cm: (B,S,N).
+
+    Returns (y: (B,S,H,P), final_state: (B,H,P,N) f32).
+    """
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    cs = min(chunk, S)
+    assert S % cs == 0, (S, cs)
+    grid = (B, H, S // cs)
+    A2 = A.astype(jnp.float32).reshape(H, 1)
+
+    kernel = functools.partial(_ssd_kernel, cs=cs)
+    y, st = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, cs, 1, P), lambda b, h, cb: (b, cb, h, 0)),
+            pl.BlockSpec((1, cs, 1), lambda b, h, cb: (b, cb, h)),
+            pl.BlockSpec((1, 1), lambda b, h, cb: (h, 0)),
+            pl.BlockSpec((1, cs, N), lambda b, h, cb: (b, cb, 0)),
+            pl.BlockSpec((1, cs, N), lambda b, h, cb: (b, cb, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, cs, 1, P), lambda b, h, cb: (b, cb, h, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda b, h, cb: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, H, P), x.dtype),
+            jax.ShapeDtypeStruct((B, H, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, dt, A2, Bm, Cm)
+    return y, st

@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for the SSD chunk-scan kernel."""
+
+from __future__ import annotations
+
+from repro.models.ssm import ssd_chunked
+
+
+def ssd_ref(x, dt, A, Bm, Cm, *, chunk: int = 256):
+    return ssd_chunked(x, dt, A, Bm, Cm, chunk=chunk)

@@ -1,0 +1,170 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST stay first: JAX locks the device count on first
+initialization, and the production meshes need 512 host devices.
+
+For every applicable cell this driver:
+  1. builds the step function + shardings (repro.launch.steps),
+  2. ``jit(...).lower(*abstract_args)`` — nothing is ever allocated,
+  3. ``lowered.compile()`` — the SPMD partitioner must accept the shardings,
+  4. records ``memory_analysis()`` (per-device bytes: proves it fits HBM),
+     ``cost_analysis()`` (per-device FLOPs/bytes) and the collective
+     schedule parsed from the compiled HLO,
+  5. appends the record to a JSON results file (idempotent/resumable).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun \
+        --arch all --shape all --mesh both --out results/dryrun.json
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import SHAPES, applicable, get_arch
+from repro.configs.registry import ARCHS
+from repro.launch.hlo_stats import collective_stats
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_cell
+
+HBM_PER_CHIP = 16 << 30  # v5e
+
+
+def run_cell(arch_name: str, shape_name: str, mesh_name: str, *,
+             policy: str = "fsdp_tp", remat: str = "full",
+             num_microbatches: int = 1, mla_absorb: bool = True,
+             train_impl: str = "naive", moe_dispatch: str = "local") -> dict:
+    import dataclasses
+
+    cfg = dataclasses.replace(get_arch(arch_name), moe_dispatch=moe_dispatch)
+    shape = SHAPES[shape_name]
+    rec: dict = {
+        "arch": arch_name, "shape": shape_name, "mesh": mesh_name,
+        "policy": policy, "remat": remat,
+        "num_microbatches": num_microbatches,
+    }
+    ok, why = applicable(cfg, shape)
+    if not ok:
+        rec.update(status="skipped", reason=why)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+    t0 = time.perf_counter()
+    try:
+        cell = build_cell(cfg, shape, mesh, policy=policy, remat=remat,
+                          num_microbatches=num_microbatches,
+                          mla_absorb=mla_absorb, train_impl=train_impl)
+        lowered = cell.lower()
+        t_lower = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        compiled = lowered.compile()
+        t_compile = time.perf_counter() - t0
+
+        ma = compiled.memory_analysis()
+        ca = compiled.cost_analysis() or {}
+        hlo = compiled.as_text()
+        colls = collective_stats(hlo)
+        arg_b = int(ma.argument_size_in_bytes)
+        out_b = int(ma.output_size_in_bytes)
+        tmp_b = int(ma.temp_size_in_bytes)
+        # arguments and (donated) outputs alias; peak ~ args + temps
+        peak = arg_b + tmp_b
+        rec.update(
+            status="ok",
+            lower_s=round(t_lower, 2),
+            compile_s=round(t_compile, 2),
+            arg_bytes=arg_b,
+            out_bytes=out_b,
+            temp_bytes=tmp_b,
+            peak_bytes=peak,
+            fits_hbm=bool(peak <= HBM_PER_CHIP),
+            hbm_frac=round(peak / HBM_PER_CHIP, 3),
+            flops_per_device=float(ca.get("flops", -1.0)),
+            bytes_per_device=float(ca.get("bytes accessed", -1.0)),
+            collectives=colls,
+            hlo_len=len(hlo),
+        )
+    except Exception as e:  # noqa: BLE001
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   trace=traceback.format_exc(limit=8))
+    return rec
+
+
+def _key(r: dict) -> str:
+    return "|".join([r["arch"], r["shape"], r["mesh"], r["policy"],
+                     r.get("remat", "full"),
+                     str(r.get("num_microbatches", 1))])
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--policy", default="fsdp_tp",
+                    choices=["tp", "fsdp_tp", "fsdp"])
+    ap.add_argument("--moe-dispatch", default="local", choices=["local", "a2a"])
+    ap.add_argument("--remat", default="full")
+    # 8 microbatches keeps train-step activation memory within HBM for every
+    # assigned arch (see EXPERIMENTS.md §Dry-run); ignored by serve cells.
+    ap.add_argument("--num-microbatches", type=int, default=8)
+    ap.add_argument("--out", default="results/dryrun.json")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    archs = list(ARCHS) if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = {"single": ["single"], "multi": ["multi"],
+              "both": ["single", "multi"]}[args.mesh]
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    results = {}
+    if os.path.exists(args.out) and not args.force:
+        with open(args.out) as f:
+            results = {_key(r): r for r in json.load(f)}
+
+    n_dev = jax.device_count()
+    print(f"devices: {n_dev}")
+    todo = [(a, s, m) for a in archs for s in shapes for m in meshes]
+    for i, (a, s, m) in enumerate(todo):
+        probe = {"arch": a, "shape": s, "mesh": m, "policy": args.policy,
+                 "remat": args.remat,
+                 "num_microbatches": args.num_microbatches}
+        if _key(probe) in results and results[_key(probe)]["status"] in (
+                "ok", "skipped"):
+            continue
+        t0 = time.perf_counter()
+        rec = run_cell(a, s, m, policy=args.policy, remat=args.remat,
+                       num_microbatches=args.num_microbatches,
+                       moe_dispatch=args.moe_dispatch)
+        dt = time.perf_counter() - t0
+        results[_key(rec)] = rec
+        with open(args.out, "w") as f:
+            json.dump(list(results.values()), f, indent=1)
+        status = rec["status"]
+        extra = ""
+        if status == "ok":
+            extra = (f"compile={rec['compile_s']}s "
+                     f"hbm={rec['hbm_frac']:.2f} "
+                     f"colls={rec['collectives']['total_count']}")
+        elif status == "error":
+            extra = rec["error"][:120]
+        print(f"[{i + 1}/{len(todo)}] {a} x {s} x {m}: {status} "
+              f"({dt:.1f}s) {extra}", flush=True)
+
+    bad = [r for r in results.values() if r["status"] == "error"]
+    print(f"done: {len(results)} cells, {len(bad)} errors")
+    if bad:
+        for r in bad:
+            print("  ERROR:", r["arch"], r["shape"], r["mesh"], "-", r["error"])
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,88 @@
+"""HLO text statistics: collective ops, their byte volumes, fusion counts.
+
+Shapes in an SPMD-partitioned HLO module are *per-device*; the stats here are
+therefore per-chip quantities, matching the per-chip roofline denominators.
+Collectives inside ``while`` bodies (scan-over-layers) execute once per trip;
+the roofline analyzer avoids this pitfall by unrolling depth variants — for
+whole-program dry-run records we report static op counts and note the caveat.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import Counter, defaultdict
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+
+
+def _shape_bytes(shape_str: str) -> tuple[int, int]:
+    """Returns (bytes, f32_bytes) for an HLO shape string."""
+    total = f32 = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        b = n * _DTYPE_BYTES[dt]
+        total += b
+        if dt == "f32":
+            f32 += b
+    return total, f32
+
+
+def collective_stats(hlo_text: str) -> Dict:
+    """Counts and per-device output bytes per collective kind.
+
+    ``bytes_f32`` tracks the f32 share: XLA:CPU legalizes bf16 dots by
+    converting operands to f32 *before* SPMD resharding (verified with a
+    minimal probe), so weight gathers / grad reduces that would travel as
+    bf16 on TPU appear doubled here.  ``wire_bytes`` counts those at bf16
+    width — the number a TPU deployment would move.
+    """
+    counts: Counter = Counter()
+    bytes_by: Dict[str, int] = defaultdict(int)
+    f32_by: Dict[str, int] = defaultdict(int)
+    for m in _OP_RE.finditer(hlo_text):
+        shape_str, op = m.group(1), m.group(2)
+        counts[op] += 1
+        b, f = _shape_bytes(shape_str)
+        bytes_by[op] += b
+        f32_by[op] += f
+    wire = {op: bytes_by[op] - f32_by.get(op, 0) // 2 for op in bytes_by}
+    return {
+        "counts": dict(counts),
+        "bytes": dict(bytes_by),
+        "bytes_f32": dict(f32_by),
+        "wire_bytes": wire,
+        "total_bytes": int(sum(bytes_by.values())),
+        "total_count": int(sum(counts.values())),
+    }
+
+
+def collective_seconds(stats: Dict, ici_bw: float,
+                       wire_adjusted: bool = True) -> float:
+    """Per-chip collective seconds; ring all-reduce moves ~2x its bytes."""
+    key = "wire_bytes" if wire_adjusted and "wire_bytes" in stats else "bytes"
+    secs = 0.0
+    for op, b in stats[key].items():
+        factor = 2.0 if op == "all-reduce" else 1.0
+        secs += factor * b / ici_bw
+    return secs

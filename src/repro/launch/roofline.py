@@ -1,0 +1,398 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Roofline analyzer: per (arch x shape x mesh) compute/memory/collective terms.
+
+Methodology (see DESIGN.md §5): ``cost_analysis()`` counts a ``lax.scan``
+body ONCE regardless of trip count (verified), so whole-program numbers are
+useless for scanned models.  Instead we lower small **depth variants** of
+each architecture with the layer scans *unrolled* (1 vs 2 layers per layer
+type, full widths, production shardings) and solve the linear system
+
+    cost(variant) = base + sum_unit  n_unit(variant) * per_unit
+
+for per-layer-type and base costs; totals are then reconstructed with the
+real layer counts.  Collective bytes are parsed from each variant's HLO (all
+collectives are top-level once unrolled).
+
+Terms per chip (v5e): compute = FLOPs / 197e12, memory = bytes / 819e9,
+collective = sum(op_bytes * factor) / 50e9 (ring all-reduce factor 2).
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+
+from repro.configs import SHAPES, applicable, get_arch
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.launch.hlo_stats import collective_stats
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_cell
+
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # bytes/s / chip
+ICI_BW = 50e9            # bytes/s / link
+
+
+# ---------------------------------------------------------------------------
+# Depth variants per family
+# ---------------------------------------------------------------------------
+
+def _with_layers(cfg: ModelConfig, n: int, **extra) -> ModelConfig:
+    return dataclasses.replace(cfg, num_layers=n, **extra)
+
+
+def depth_plan(cfg: ModelConfig):
+    """Returns (probes: {name: cfg}, units: {unit: full_count},
+    solve: {unit: (probe_hi, probe_lo)}, base_expr: (probe, {unit: n})).
+
+    per_unit = cost[probe_hi] - cost[probe_lo];
+    base     = cost[base_probe] - sum n_unit * per_unit.
+    """
+    if cfg.family in ("dense", "vlm", "ssm"):
+        probes = {"L1": _with_layers(cfg, 1), "L2": _with_layers(cfg, 2)}
+        return (probes, {"layer": cfg.num_layers},
+                {"layer": ("L2", "L1")}, ("L1", {"layer": 1}))
+    if cfg.family == "moe":
+        moe1 = dataclasses.replace(cfg.moe, n_dense_layers=1)
+        moe2 = dataclasses.replace(cfg.moe, n_dense_layers=2)
+        probes = {
+            "A": _with_layers(cfg, 2, moe=moe1),   # 1 dense + 1 moe
+            "B": _with_layers(cfg, 3, moe=moe1),   # 1 dense + 2 moe
+            "C": _with_layers(cfg, 3, moe=moe2),   # 2 dense + 1 moe
+        }
+        nd = cfg.moe.n_dense_layers
+        return (probes,
+                {"moe_layer": cfg.num_layers - nd, "dense_layer": nd},
+                {"moe_layer": ("B", "A"), "dense_layer": ("C", "A")},
+                ("A", {"moe_layer": 1, "dense_layer": 1}))
+    if cfg.family == "hybrid":
+        rec_r = dataclasses.replace(cfg.rec, block_pattern=("r",))
+        rec_a = dataclasses.replace(cfg.rec, block_pattern=("a",))
+        probes = {
+            "R1": _with_layers(cfg, 1, rec=rec_r),
+            "R2": _with_layers(cfg, 2, rec=rec_r),
+            "A1": _with_layers(cfg, 1, rec=rec_a),
+        }
+        pat = cfg.rec.block_pattern
+        full = [pat[i % len(pat)] for i in range(cfg.num_layers)]
+        n_rec = sum(1 for c in full if c == "r")
+        n_attn = cfg.num_layers - n_rec
+        return (probes, {"rec_layer": n_rec, "attn_layer": n_attn},
+                {"rec_layer": ("R2", "R1"), "attn_layer": ("A1", "__base__")},
+                ("R1", {"rec_layer": 1}))
+    if cfg.family == "encdec":
+        probes = {
+            "A": _with_layers(cfg, 1, encoder_layers=1),
+            "B": _with_layers(cfg, 1, encoder_layers=2),
+            "C": _with_layers(cfg, 2, encoder_layers=1),
+        }
+        return (probes,
+                {"enc_layer": cfg.encoder_layers, "dec_layer": cfg.num_layers},
+                {"enc_layer": ("B", "A"), "dec_layer": ("C", "A")},
+                ("A", {"enc_layer": 1, "dec_layer": 1}))
+    raise ValueError(cfg.family)
+
+
+def _probe_cost(cfg_small: ModelConfig, shape: ShapeConfig, mesh, *,
+                policy: str, remat: str, mla_absorb: bool,
+                train_impl: str) -> dict:
+    cell = build_cell(cfg_small, shape, mesh, policy=policy, remat=remat,
+                      scan_unroll=True, num_microbatches=1,
+                      mla_absorb=mla_absorb, train_impl=train_impl,
+                      donate=False)
+    compiled = cell.lower().compile()
+    ca = compiled.cost_analysis() or {}
+    st = collective_stats(compiled.as_text())
+    return {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes": float(ca.get("bytes accessed", 0.0)),
+        # wire-format bytes (f32 CPU-legalization artifact halved; see
+        # hlo_stats.collective_stats) are the primary collective metric
+        "coll_bytes": {k: float(v) for k, v in st["wire_bytes"].items()},
+        "coll_bytes_raw": {k: float(v) for k, v in st["bytes"].items()},
+    }
+
+
+_DICT_KEYS = ("coll_bytes", "coll_bytes_raw")
+
+
+def _combine(a: dict, b: dict, sign: float = 1.0) -> dict:
+    out = {"flops": a["flops"] + sign * b["flops"],
+           "bytes": a["bytes"] + sign * b["bytes"]}
+    for dk in _DICT_KEYS:
+        da, db = a.get(dk, {}), b.get(dk, {})
+        out[dk] = {k: da.get(k, 0.0) + sign * db.get(k, 0.0)
+                   for k in set(da) | set(db)}
+    return out
+
+
+def _scale(a: dict, s: float) -> dict:
+    out = {"flops": a["flops"] * s, "bytes": a["bytes"] * s}
+    for dk in _DICT_KEYS:
+        out[dk] = {k: v * s for k, v in a.get(dk, {}).items()}
+    return out
+
+
+def _clamp(a: dict) -> dict:
+    out = {"flops": max(a["flops"], 0.0), "bytes": max(a["bytes"], 0.0)}
+    for dk in _DICT_KEYS:
+        out[dk] = {k: max(v, 0.0) for k, v in a.get(dk, {}).items()}
+    return out
+
+
+def coll_seconds(coll_bytes: dict) -> float:
+    secs = 0.0
+    for op, b in coll_bytes.items():
+        secs += (2.0 if op == "all-reduce" else 1.0) * b / ICI_BW
+    return secs
+
+
+# ---------------------------------------------------------------------------
+# Analytic HBM-traffic model (the memory roofline term)
+# ---------------------------------------------------------------------------
+# ``cost_analysis()['bytes accessed']`` sums operand bytes of every HLO op
+# with no fusion awareness — measured ~45x real traffic for fused TPU
+# execution.  The memory term therefore uses a transparent structural model
+# (verified against napkin math per family); the HLO number is still
+# reported as ``hlo_bytes_upper``.
+
+def analytic_memory_bytes(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
+                          policy: str, remat: str, train_impl: str) -> dict:
+    from repro.models.model_zoo import analytic_param_count
+
+    n_chips = mesh.size
+    tp = mesh.shape["model"]
+    dp = n_chips // tp
+    dt = 2  # bf16
+    P_total = analytic_param_count(cfg) * dt
+    shards = n_chips if policy == "fsdp_tp" else tp
+    W = P_total / shards                      # resident param bytes per chip
+    # active params actually touched per token (MoE reads only routed experts)
+    P_active = analytic_param_count(cfg, active_only=True) * dt / shards
+
+    B_loc = max(shape.global_batch // dp, 1)
+    S = shape.seq_len
+    D = cfg.d_model
+    act_unit = B_loc * S * D * dt             # one activation tensor / chip
+    L = cfg.num_layers + cfg.encoder_layers
+
+    detail = {}
+    if shape.kind == "train":
+        mdt = 2 if P_total / dt > 100e9 else 4
+        # fwd read + bwd read of weights; grad write+read; adam m/v r/w;
+        # param write.  FSDP gathers add one local write+read of the shard.
+        detail["weights"] = P_active * 3 + (P_total / shards) * (
+            2 * 2 + 2 * (mdt / dt) * 2 / 2)   # grads(acc dtype~f32) + moments
+        # ~8 fusion-boundary activation tensors per layer; full remat remat
+        # rereads them (x1.5)
+        act_factor = 8 * (1.5 if remat != "none" else 1.0)
+        detail["activations"] = act_factor * act_unit * L
+        if train_impl == "naive" and cfg.family not in ("ssm",):
+            Hl = max(cfg.num_heads // tp, 1)
+            n_attn = _attn_layer_count(cfg)
+            detail["attn_scores"] = 4 * B_loc * Hl * S * S * dt * n_attn
+        Vl = cfg.vocab_size / tp
+        detail["logits"] = 3 * B_loc * S * Vl * 4
+    elif shape.kind == "prefill":
+        detail["weights"] = P_active
+        detail["activations"] = 4 * act_unit * L
+        detail["cache_write"] = _cache_bytes(cfg, shape, n_chips)
+    else:  # decode
+        detail["weights"] = P_active
+        detail["cache_read"] = _cache_bytes(cfg, shape, n_chips)
+        detail["activations"] = 4 * B_loc * 1 * D * dt * L
+    detail["total"] = sum(detail.values())
+    return detail
+
+
+def _attn_layer_count(cfg: ModelConfig) -> int:
+    if cfg.family == "hybrid":
+        pat = cfg.rec.block_pattern
+        full = [pat[i % len(pat)] for i in range(cfg.num_layers)]
+        return sum(1 for c in full if c == "a")
+    if cfg.family == "ssm":
+        return 0
+    return cfg.num_layers + 2 * cfg.encoder_layers  # encdec: self+cross approx
+
+
+def _cache_bytes(cfg: ModelConfig, shape: ShapeConfig, n_chips: int) -> float:
+    """Global decode-cache bytes / chips (caches shard across the mesh)."""
+    from repro.models.model_zoo import input_specs
+    import numpy as np
+    import jax
+
+    specs = input_specs(cfg, dataclasses.replace(shape, kind="decode",
+                                                 name="tmp"))
+    total = sum(int(np.prod(l.shape)) * l.dtype.itemsize
+                for l in jax.tree.leaves(specs["caches"]))
+    return total / n_chips
+
+
+# ---------------------------------------------------------------------------
+# MODEL_FLOPS (the 6ND / 2ND usefulness yardstick)
+# ---------------------------------------------------------------------------
+
+def model_flops_total(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    from repro.models.model_zoo import analytic_param_count
+
+    n_active = analytic_param_count(cfg, active_only=True)
+    if not cfg.tie_embeddings:
+        n_active -= cfg.vocab_size * cfg.d_model   # input embedding lookup
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n_active * shape.tokens
+
+
+# ---------------------------------------------------------------------------
+# Cell analysis
+# ---------------------------------------------------------------------------
+
+def analyze_cell(arch_name: str, shape_name: str, mesh_name: str, *,
+                 policy: str = "fsdp_tp", remat: str = "full",
+                 mla_absorb: bool = True, train_impl: str = "naive",
+                 moe_dispatch: str = "local") -> dict:
+    cfg = dataclasses.replace(get_arch(arch_name), moe_dispatch=moe_dispatch)
+    shape = SHAPES[shape_name]
+    ok, why = applicable(cfg, shape)
+    rec = {"arch": arch_name, "shape": shape_name, "mesh": mesh_name,
+           "policy": policy, "remat": remat, "mla_absorb": mla_absorb,
+           "train_impl": train_impl, "moe_dispatch": moe_dispatch}
+    if not ok:
+        rec.update(status="skipped", reason=why)
+        return rec
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+    n_chips = mesh.size
+
+    probes, units, solve, (base_probe, base_units) = depth_plan(cfg)
+    kw = dict(policy=policy, remat=remat, mla_absorb=mla_absorb,
+              train_impl=train_impl)
+    t0 = time.perf_counter()
+    costs = {name: _probe_cost(c, shape, mesh, **kw)
+             for name, c in probes.items()}
+
+    per_unit: dict = {}
+    deferred = []
+    for unit, (hi, lo) in solve.items():
+        if lo == "__base__":
+            deferred.append((unit, hi))
+            continue
+        per_unit[unit] = _clamp(_combine(costs[hi], costs[lo], -1.0))
+    base = costs[base_probe]
+    for unit, n in base_units.items():
+        if unit in per_unit:
+            base = _combine(base, _scale(per_unit[unit], n), -1.0)
+    base = _clamp(base)
+    for unit, hi in deferred:   # e.g. hybrid attn layer = A1 - base
+        per_unit[unit] = _clamp(_combine(costs[hi], base, -1.0))
+
+    total = dict(base)
+    for unit, n in units.items():
+        total = _combine(total, _scale(per_unit[unit], n))
+
+    mem_detail = analytic_memory_bytes(cfg, shape, mesh, policy=policy,
+                                       remat=remat, train_impl=train_impl)
+    compute_s = total["flops"] / PEAK_FLOPS
+    memory_s = mem_detail["total"] / HBM_BW
+    collective_s = coll_seconds(total["coll_bytes"])
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    step_s = max(terms.values())
+    mf_dev = model_flops_total(cfg, shape) / n_chips
+    roofline_frac = ((mf_dev / PEAK_FLOPS) / step_s) if step_s > 0 else 0.0
+
+    rec.update(
+        status="ok",
+        analysis_s=round(time.perf_counter() - t0, 1),
+        n_chips=n_chips,
+        per_unit=per_unit,
+        base=base,
+        totals=total,
+        compute_s=compute_s,
+        memory_s=memory_s,
+        memory_detail=mem_detail,
+        hlo_bytes_upper=total["bytes"],
+        collective_s=collective_s,
+        collective_s_raw=coll_seconds(total.get("coll_bytes_raw", {})),
+        bottleneck=bottleneck,
+        step_seconds_lower_bound=step_s,
+        model_flops_per_device=mf_dev,
+        hlo_flops_per_device=total["flops"],
+        useful_flops_ratio=(mf_dev / total["flops"]) if total["flops"] else 0,
+        roofline_fraction=roofline_frac,
+        tokens_per_second_per_chip=(shape.tokens / n_chips / step_s)
+        if step_s else 0.0,
+    )
+    return rec
+
+
+def _key(r: dict) -> str:
+    return "|".join([r["arch"], r["shape"], r["mesh"], r["policy"],
+                     r["remat"], str(r["mla_absorb"]), r["train_impl"],
+                     r.get("moe_dispatch", "local")])
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--policy", default="fsdp_tp")
+    ap.add_argument("--remat", default="full")
+    ap.add_argument("--train-impl", default="naive")
+    ap.add_argument("--no-mla-absorb", action="store_true")
+    ap.add_argument("--moe-dispatch", default="local", choices=["local", "a2a"])
+    ap.add_argument("--out", default="results/roofline.json")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    from repro.configs.registry import ARCHS
+
+    archs = list(ARCHS) if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = args.mesh.split(",")
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    results = {}
+    if os.path.exists(args.out) and not args.force:
+        with open(args.out) as f:
+            results = {_key(r): r for r in json.load(f)}
+
+    todo = [(a, s, m) for a in archs for s in shapes for m in meshes]
+    for i, (a, s, m) in enumerate(todo):
+        probe = {"arch": a, "shape": s, "mesh": m, "policy": args.policy,
+                 "remat": args.remat, "mla_absorb": not args.no_mla_absorb,
+                 "train_impl": args.train_impl,
+                 "moe_dispatch": args.moe_dispatch}
+        if _key(probe) in results and results[_key(probe)]["status"] in (
+                "ok", "skipped"):
+            continue
+        try:
+            rec = analyze_cell(a, s, m, policy=args.policy, remat=args.remat,
+                               mla_absorb=not args.no_mla_absorb,
+                               train_impl=args.train_impl,
+                               moe_dispatch=args.moe_dispatch)
+        except Exception as e:  # noqa: BLE001
+            import traceback
+
+            rec = dict(probe)
+            rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                       trace=traceback.format_exc(limit=8))
+        results[_key(rec)] = rec
+        with open(args.out, "w") as f:
+            json.dump(list(results.values()), f, indent=1)
+        if rec["status"] == "ok":
+            print(f"[{i+1}/{len(todo)}] {a} x {s} x {m}: "
+                  f"bottleneck={rec['bottleneck']} "
+                  f"step>={rec['step_seconds_lower_bound']:.4f}s "
+                  f"roofline={rec['roofline_fraction']:.3f} "
+                  f"useful={rec['useful_flops_ratio']:.2f}", flush=True)
+        else:
+            print(f"[{i+1}/{len(todo)}] {a} x {s} x {m}: {rec['status']} "
+                  f"{rec.get('error', rec.get('reason', ''))[:110]}",
+                  flush=True)
+
+
+if __name__ == "__main__":
+    main()

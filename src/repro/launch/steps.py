@@ -1,0 +1,138 @@
+"""Shared builder: (arch x shape x mesh) -> jittable step + shardings.
+
+Used by the dry-run (lower/compile gate), the roofline analyzer (depth
+variants), and the live drivers.  ``shape.kind`` selects the step:
+
+    train   -> step(params, opt_state, batch) -> (params, opt_state, metrics)
+    prefill -> step(params, batch)            -> (logits, caches)
+    decode  -> step(params, token, pos, caches) -> (logits, caches)
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, Tuple
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.model_zoo import build_model, input_specs
+from repro.sharding.rules import ShardingRules, dp_axes_of
+from repro.train.optimizer import OptConfig, init_opt_state
+from repro.train.train_step import make_train_step
+
+# Above this parameter count, Adam moments are stored as 8-bit (Dettmers-
+# style) so params+optimizer fit a single pod (deepseek-v3-671b: 10.6 GB vs
+# 15.7 GB bf16 / 26 GB f32 per chip; see EXPERIMENTS.md §Perf C).
+INT8_MOMENTS_ABOVE = 100e9
+
+
+@dataclass
+class CellProgram:
+    cfg: ModelConfig
+    shape: ShapeConfig
+    fn: Callable
+    abstract_args: Tuple[Any, ...]
+    in_shardings: Tuple[Any, ...]
+    out_shardings: Any
+    donate_argnums: Tuple[int, ...] = ()
+
+    def jitted(self):
+        return jax.jit(self.fn, in_shardings=self.in_shardings,
+                       out_shardings=self.out_shardings,
+                       donate_argnums=self.donate_argnums)
+
+    def lower(self):
+        return self.jitted().lower(*self.abstract_args)
+
+
+def opt_config_for(cfg: ModelConfig) -> OptConfig:
+    from repro.models.model_zoo import analytic_param_count
+
+    n = analytic_param_count(cfg)
+    mdt = "int8" if n > INT8_MOMENTS_ABOVE else "float32"
+    return OptConfig(moment_dtype=mdt)
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
+               policy: str = "fsdp_tp", remat: str = "full",
+               train_impl: str = "naive", prefill_impl: str = "blockwise",
+               mla_absorb: bool = True, scan_unroll: bool = False,
+               num_microbatches: int = 1, donate: bool = True,
+               prefill_chunk: int = 1024) -> CellProgram:
+    rules = ShardingRules(cfg, mesh, policy)
+    dp_axes = rules.batch_axes
+    bundle = build_model(
+        cfg, mesh=mesh, impl=train_impl, prefill_impl=prefill_impl,
+        remat=remat, dp_axes=dp_axes, mla_absorb=mla_absorb,
+        scan_unroll=scan_unroll, prefill_chunk=prefill_chunk)
+    specs = input_specs(cfg, shape)
+
+    params_abs = jax.eval_shape(bundle.init, jax.random.key(0))
+    p_shard = rules.param_shardings(params_abs)
+    rep = NamedSharding(mesh, P())
+
+    if shape.kind == "train":
+        opt_cfg = opt_config_for(cfg)
+        opt_abs = jax.eval_shape(partial(init_opt_state, opt_cfg), params_abs)
+        opt_shard = {"m": p_shard, "v": p_shard, "count": rep}
+        if opt_cfg.moment_dtype == "int8":
+            def scale_shard(s):
+                spec = tuple(s.spec) if s.spec else ()
+                spec = spec[:-1] + (None,) if spec else ()
+                return NamedSharding(mesh, P(*spec))
+
+            sc = jax.tree.map(scale_shard, p_shard)
+            opt_shard["m_scale"] = sc
+            opt_shard["v_scale"] = sc
+        batch_abs = specs["batch"]
+        b_shard = rules.shardings_for(batch_abs, "batch")
+        step = make_train_step(bundle, opt_cfg,
+                               num_microbatches=num_microbatches,
+                               mesh=mesh, dp_axes=dp_axes)
+        return CellProgram(
+            cfg=cfg, shape=shape, fn=step,
+            abstract_args=(params_abs, opt_abs, batch_abs),
+            in_shardings=(p_shard, opt_shard, b_shard),
+            out_shardings=(p_shard, opt_shard, None),
+            donate_argnums=(0, 1) if donate else (),
+        )
+
+    if shape.kind == "prefill":
+        batch_abs = specs["batch"]
+        b_shard = rules.shardings_for(batch_abs, "batch")
+
+        def prefill(params, batch):
+            return bundle.prefill_fn(params, batch)
+
+        # Pin the output cache layout (batch + kv-head/seq sharding): left to
+        # propagation, GSPMD replicates the 32k cache across data shards.
+        logits_abs, caches_abs = jax.eval_shape(prefill, params_abs, batch_abs)
+        c_shard = rules.shardings_for(caches_abs, "cache")
+        return CellProgram(
+            cfg=cfg, shape=shape, fn=prefill,
+            abstract_args=(params_abs, batch_abs),
+            in_shardings=(p_shard, b_shard),
+            out_shardings=(None, c_shard),
+        )
+
+    # decode
+    caches_abs = specs["caches"]
+    c_shard = rules.shardings_for(caches_abs, "cache")
+    tok_abs = specs["token"]
+    tok_spec = P(rules._batch_dim(tok_abs.shape[0]))
+    tok_shard = NamedSharding(mesh, tok_spec)
+
+    def decode(params, token, pos, caches):
+        return bundle.decode_fn(params, token, pos, caches)
+
+    return CellProgram(
+        cfg=cfg, shape=shape, fn=decode,
+        abstract_args=(params_abs, tok_abs, specs["pos"], caches_abs),
+        in_shardings=(p_shard, tok_shard, rep, c_shard),
+        out_shardings=(None, c_shard),
+        donate_argnums=(3,) if donate else (),
+    )

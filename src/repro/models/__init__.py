@@ -1,0 +1,4 @@
+from repro.models.model_zoo import (ModelBundle, analytic_param_count,
+                                    build_model, input_specs)
+
+__all__ = ["ModelBundle", "analytic_param_count", "build_model", "input_specs"]

@@ -1,0 +1,214 @@
+"""Encoder-decoder transformer (seamless-m4t backbone).
+
+The speech/text modality frontend is a stub per the assignment: the encoder
+consumes precomputed frame embeddings ``src_emb`` (B, S_src, d_model)
+directly.  The decoder is a causal transformer with cross-attention into the
+encoder memory; serve-decode keeps a ring-buffer self-attention cache of
+capacity ``seq_len`` plus constant cross-attention k/v.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models.layers import (cdtype, cross_entropy, embed_fwd, init_embed,
+                                 init_mlp, init_norm, lm_head_fwd, mlp_fwd,
+                                 norm_fwd)
+
+
+# ---------------------------------------------------------------------------
+# Cross attention
+# ---------------------------------------------------------------------------
+
+def init_cross_attn(cfg: ModelConfig, key: jax.Array) -> dict:
+    return attn.init_gqa(cfg, key)
+
+
+def cross_kv(cfg: ModelConfig, p: dict, memory: jax.Array):
+    k = jnp.einsum("bsd,dhk->bshk", memory, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", memory, p["wv"])
+    return k, v
+
+
+def cross_attn_fwd(cfg: ModelConfig, p: dict, x: jax.Array, k, v, *,
+                   impl: str = "naive", chunk: int = 1024):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    Sq, Skv = q.shape[1], k.shape[1]
+    out = attn.sdpa(q, k, v, impl=impl, causal=False, window=0,
+                    q_pos=jnp.arange(Sq), kv_pos=jnp.arange(Skv), chunk=chunk)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+# ---------------------------------------------------------------------------
+# Layers
+# ---------------------------------------------------------------------------
+
+def _init_enc_layer(cfg: ModelConfig, key: jax.Array) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "norm1": init_norm(cfg, cfg.d_model),
+        "attn": attn.init_gqa(cfg, k1),
+        "norm2": init_norm(cfg, cfg.d_model),
+        "mlp": init_mlp(cfg, k2, cfg.d_model, cfg.d_ff),
+    }
+
+
+def _init_dec_layer(cfg: ModelConfig, key: jax.Array) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "norm1": init_norm(cfg, cfg.d_model),
+        "self_attn": attn.init_gqa(cfg, k1),
+        "norm_x": init_norm(cfg, cfg.d_model),
+        "cross_attn": init_cross_attn(cfg, k2),
+        "norm2": init_norm(cfg, cfg.d_model),
+        "mlp": init_mlp(cfg, k3, cfg.d_model, cfg.d_ff),
+    }
+
+
+def _enc_layer(cfg, p, x, *, impl):
+    h = norm_fwd(cfg, p["norm1"], x)
+    x = x + attn.gqa_fwd(cfg, p["attn"], h, causal=False, impl=impl)
+    h = norm_fwd(cfg, p["norm2"], x)
+    return x + mlp_fwd(cfg, p["mlp"], h)
+
+
+def _dec_layer(cfg, p, x, memory_kv, *, mode, cache, pos, impl, chunk,
+               cache_margin=0):
+    new_cache = None
+    h = norm_fwd(cfg, p["norm1"], x)
+    if mode == "train":
+        x = x + attn.gqa_fwd(cfg, p["self_attn"], h, impl=impl)
+    elif mode == "prefill":
+        mix, self_cache = attn.gqa_prefill(cfg, p["self_attn"], h, impl=impl,
+                                           chunk=chunk, margin=cache_margin)
+        x = x + mix
+    else:
+        mix, self_cache = attn.gqa_decode(cfg, p["self_attn"], h, pos,
+                                          cache["self"])
+        x = x + mix
+    h = norm_fwd(cfg, p["norm_x"], x)
+    ck, cv = memory_kv
+    x = x + cross_attn_fwd(cfg, p["cross_attn"], h, ck, cv,
+                           impl=impl if mode != "decode" else "naive",
+                           chunk=chunk)
+    h = norm_fwd(cfg, p["norm2"], x)
+    x = x + mlp_fwd(cfg, p["mlp"], h)
+    if mode in ("prefill", "decode"):
+        new_cache = {"self": self_cache, "cross_k": ck, "cross_v": cv}
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Full model
+# ---------------------------------------------------------------------------
+
+def init_encdec(cfg: ModelConfig, key: jax.Array) -> dict:
+    ks = jax.random.split(key, 4)
+    enc = [_init_enc_layer(cfg, k) for k in jax.random.split(ks[0], cfg.encoder_layers)]
+    dec = [_init_dec_layer(cfg, k) for k in jax.random.split(ks[1], cfg.num_layers)]
+    return {
+        "embed": init_embed(cfg, ks[2]),
+        "enc_stack": jax.tree.map(lambda *xs: jnp.stack(xs), *enc),
+        "enc_final_norm": init_norm(cfg, cfg.d_model),
+        "dec_stack": jax.tree.map(lambda *xs: jnp.stack(xs), *dec),
+        "dec_final_norm": init_norm(cfg, cfg.d_model),
+    }
+
+
+def encode(cfg: ModelConfig, params: dict, src_emb: jax.Array, *,
+           impl="naive", remat="none", scan_unroll=False):
+    def body(x, p):
+        return _enc_layer(cfg, p, x, impl=impl), None
+
+    if remat != "none":
+        body = jax.checkpoint(body)
+    h, _ = jax.lax.scan(body, src_emb.astype(cdtype(cfg)),
+                        params["enc_stack"],
+                        unroll=cfg.encoder_layers if scan_unroll else 1)
+    return norm_fwd(cfg, params["enc_final_norm"], h)
+
+
+def encdec_loss(cfg: ModelConfig, params: dict, batch: dict, *, mesh=None,
+                impl="naive", dp_axes=("data",), remat="none",
+                scan_unroll=False):
+    """batch: src_emb (B,S_src,D), tgt_tokens (B,S_tgt), tgt_targets."""
+    memory = encode(cfg, params, batch["src_emb"], impl=impl, remat=remat,
+                    scan_unroll=scan_unroll)
+    x = embed_fwd(cfg, params["embed"], batch["tgt_tokens"])
+
+    def body(x, p):
+        kv = cross_kv(cfg, p["cross_attn"], memory)
+        x, _ = _dec_layer(cfg, p, x, kv, mode="train", cache=None, pos=None,
+                          impl=impl, chunk=1024)
+        return x, None
+
+    if remat != "none":
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["dec_stack"],
+                        unroll=cfg.num_layers if scan_unroll else 1)
+    x = norm_fwd(cfg, params["dec_final_norm"], x)
+    logits = lm_head_fwd(cfg, params["embed"], x)
+    from repro.models.layers import shard_logits
+
+    logits = shard_logits(logits, mesh, dp_axes)
+    loss = cross_entropy(logits, batch["tgt_targets"], batch.get("loss_mask"))
+    return loss, {"loss": loss, "aux_loss": jnp.zeros((), jnp.float32)}
+
+
+def encdec_prefill(cfg: ModelConfig, params: dict, batch: dict, *, mesh=None,
+                   impl="blockwise", prefill_chunk=1024, dp_axes=("data",),
+                   scan_unroll=False, cache_margin=0):
+    """Encode src, prefill the decoder over the target prompt."""
+    memory = encode(cfg, params, batch["src_emb"], impl=impl,
+                    scan_unroll=scan_unroll)
+    x = embed_fwd(cfg, params["embed"], batch["tgt_tokens"])
+
+    def body(x, p):
+        kv = cross_kv(cfg, p["cross_attn"], memory)
+        x, cache = _dec_layer(cfg, p, x, kv, mode="prefill", cache=None,
+                              pos=None, impl=impl, chunk=prefill_chunk,
+                              cache_margin=cache_margin)
+        return x, cache
+
+    x, caches = jax.lax.scan(body, x, params["dec_stack"],
+                             unroll=cfg.num_layers if scan_unroll else 1)
+    x = norm_fwd(cfg, params["dec_final_norm"], x)
+    logits = lm_head_fwd(cfg, params["embed"], x[:, -1:, :])
+    return logits[:, 0, :], caches
+
+
+def encdec_decode(cfg: ModelConfig, params: dict, token: jax.Array,
+                  pos: jax.Array, caches, *, mesh=None, mla_absorb=True,
+                  dp_axes=("data",), scan_unroll=False):
+    x = embed_fwd(cfg, params["embed"], token[:, None])
+
+    def body(x, inp):
+        p, cache = inp
+        kv = (cache["cross_k"], cache["cross_v"])
+        x, new_cache = _dec_layer(cfg, p, x, kv, mode="decode", cache=cache,
+                                  pos=pos, impl="naive", chunk=1024)
+        return x, new_cache
+
+    x, caches = jax.lax.scan(body, x, (params["dec_stack"], caches),
+                             unroll=cfg.num_layers if scan_unroll else 1)
+    x = norm_fwd(cfg, params["dec_final_norm"], x)
+    logits = lm_head_fwd(cfg, params["embed"], x)
+    return logits[:, 0, :], caches
+
+
+def encdec_cache_specs(cfg: ModelConfig, batch: int, self_len: int,
+                       src_len: int):
+    """Stacked decode cache specs: self ring cache + constant cross k/v."""
+    dt = cdtype(cfg)
+    L = cfg.num_layers
+    self_spec = attn.gqa_cache_spec(cfg, batch, self_len, window=0)
+    kv_shape = (L, batch, src_len, cfg.num_kv_heads, cfg.head_dim_)
+    return {
+        "self": jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((L,) + s.shape, s.dtype), self_spec),
+        "cross_k": jax.ShapeDtypeStruct(kv_shape, dt),
+        "cross_v": jax.ShapeDtypeStruct(kv_shape, dt),
+    }

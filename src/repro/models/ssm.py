@@ -1,0 +1,231 @@
+"""Mamba2 block: SSD (state-space duality) with the chunked algorithm.
+
+The sequence is split into chunks of ``cfg.ssm.chunk_size``:
+  * intra-chunk outputs use the quadratic "attention-like" form,
+  * chunk boundary states are passed through a (cheap) sequential scan,
+  * a single-token step function serves decode.
+
+``ssd_chunked`` here is the pure-jnp oracle; ``repro.kernels.ssd_scan`` holds
+the Pallas TPU kernel validated against it.
+
+Tensor-parallel layout: the input projections are kept *separate* (w_z, w_x,
+w_B, w_C, w_dt) instead of one fused in_proj so that the inner dimension
+(d_inner, head-aligned) shards cleanly over the "model" axis while the shared
+B/C state projections stay replicated — a fused projection would shard across
+segment boundaries and force a reshard at the split.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import causal_conv1d, causal_conv1d_step, cdtype
+
+
+def ssm_dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    nheads = d_inner // s.head_dim
+    return d_inner, nheads, s.d_state, s.head_dim
+
+
+# ---------------------------------------------------------------------------
+# Core SSD math (shared by ref path and decode)
+# ---------------------------------------------------------------------------
+
+def ssd_chunked(x, dt, A, Bm, Cm, *, chunk: int, init_state=None):
+    """Chunked SSD scan.
+
+    x: (B, S, H, P), dt: (B, S, H), A: (H,), Bm/Cm: (B, S, N) (1 group).
+    Returns (y, final_state) with y: (B, S, H, P), state: (B, H, P, N).
+    Sequences are zero-padded to a chunk multiple (dt=0 => decay 1,
+    contribution 0: state passes through untouched).
+    """
+    Bsz, S0, H, Pd = x.shape
+    N = Bm.shape[-1]
+    chunk = min(chunk, S0)
+    pad = (-S0) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    S = S0 + pad
+    nc = S // chunk
+
+    xc = x.reshape(Bsz, nc, chunk, H, Pd)
+    dtc = dt.reshape(Bsz, nc, chunk, H).astype(jnp.float32)
+    Bc = Bm.reshape(Bsz, nc, chunk, N)
+    Cc = Cm.reshape(Bsz, nc, chunk, N)
+
+    dA = dtc * A.astype(jnp.float32)                      # (B,nc,cs,H) <= 0
+    dA_cs = jnp.cumsum(dA, axis=2)
+
+    # --- intra-chunk (quadratic within chunk) ------------------------------
+    # L[b,c,h,i,j] = exp(dA_cs[i] - dA_cs[j]) for i >= j else 0
+    diff = dA_cs[:, :, :, None, :] - dA_cs[:, :, None, :, :]   # (B,nc,i,j,H)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    L = jnp.where(tri[None, None, :, :, None], jnp.exp(diff), 0.0)
+    scores = jnp.einsum("bcin,bcjn->bcij", Cc.astype(jnp.float32),
+                        Bc.astype(jnp.float32))
+    xdt = xc.astype(jnp.float32) * dtc[..., None]              # (B,nc,cs,H,P)
+    y_diag = jnp.einsum("bcij,bcijh,bcjhp->bcihp", scores, L, xdt)
+
+    # --- chunk states -------------------------------------------------------
+    decay_last = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)          # (B,nc,cs,H)
+    states = jnp.einsum("bcjn,bcjh,bcjhp->bchpn", Bc.astype(jnp.float32),
+                        decay_last, xdt)                       # (B,nc,H,P,N)
+
+    # --- inter-chunk recurrence (sequential over nc) ------------------------
+    chunk_decay = jnp.exp(dA_cs[:, :, -1, :])                  # (B,nc,H)
+    st0 = (jnp.zeros((Bsz, H, Pd, N), jnp.float32) if init_state is None
+           else init_state.astype(jnp.float32))
+
+    def body(st, inp):
+        s_c, dec_c = inp
+        return st * dec_c[:, :, None, None] + s_c, st
+
+    (st_final, prev_states) = jax.lax.scan(
+        body, st0,
+        (states.swapaxes(0, 1), chunk_decay.swapaxes(0, 1)))
+    prev_states = prev_states.swapaxes(0, 1)                   # (B,nc,H,P,N)
+
+    # --- off-diagonal contribution -----------------------------------------
+    y_off = jnp.einsum("bcin,bcih,bchpn->bcihp", Cc.astype(jnp.float32),
+                       jnp.exp(dA_cs), prev_states)
+
+    y = (y_diag + y_off).reshape(Bsz, S, H, Pd)[:, :S0]
+    return y.astype(x.dtype), st_final
+
+
+def ssd_step(x, dt, A, Bm, Cm, state):
+    """Single-token SSD update.
+
+    x: (B, H, P), dt: (B, H), Bm/Cm: (B, N), state: (B, H, P, N).
+    """
+    dtf = dt.astype(jnp.float32)
+    dA = jnp.exp(dtf * A.astype(jnp.float32))                  # (B,H)
+    xdt = x.astype(jnp.float32) * dtf[..., None]               # (B,H,P)
+    state = (state.astype(jnp.float32) * dA[..., None, None]
+             + jnp.einsum("bhp,bn->bhpn", xdt, Bm.astype(jnp.float32)))
+    y = jnp.einsum("bhpn,bn->bhp", state, Cm.astype(jnp.float32))
+    return y.astype(x.dtype), state
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block
+# ---------------------------------------------------------------------------
+
+def init_ssm_block(cfg: ModelConfig, key: jax.Array) -> dict:
+    di, H, N, Pd = ssm_dims(cfg)
+    dt_ = cdtype(cfg)
+    D = cfg.d_model
+    K = cfg.ssm.d_conv
+    ks = jax.random.split(key, 9)
+    s = D ** -0.5
+    return {
+        "w_z": (jax.random.normal(ks[0], (D, di)) * s).astype(dt_),
+        "w_x": (jax.random.normal(ks[1], (D, di)) * s).astype(dt_),
+        "w_B": (jax.random.normal(ks[2], (D, N)) * s).astype(dt_),
+        "w_C": (jax.random.normal(ks[3], (D, N)) * s).astype(dt_),
+        "w_dt": (jax.random.normal(ks[4], (D, H)) * s).astype(dt_),
+        "conv_x": (jax.random.normal(ks[5], (K, di)) * 0.2).astype(dt_),
+        "conv_B": (jax.random.normal(ks[6], (K, N)) * 0.2).astype(dt_),
+        "conv_C": (jax.random.normal(ks[7], (K, N)) * 0.2).astype(dt_),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "A_log": jnp.zeros((H,), jnp.float32),                 # A = -exp(A_log) = -1
+        "D_skip": jnp.ones((H,), jnp.float32),
+        "norm_scale": jnp.ones((di,), dt_),
+        "out_proj": (jax.random.normal(ks[8], (di, D)) * di ** -0.5).astype(dt_),
+    }
+
+
+def _gated_norm(y, z, scale):
+    yf = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    ms = jnp.mean(jnp.square(yf), axis=-1, keepdims=True)
+    return (yf * jax.lax.rsqrt(ms + 1e-6) * scale.astype(jnp.float32)).astype(y.dtype)
+
+
+def _ssm_proj_conv(cfg, p, x, conv_states=None):
+    """Projections + causal convs; returns (z, xs, Bm, Cm, dt, new_conv_states)."""
+    z = x @ p["w_z"]
+    xs = x @ p["w_x"]
+    Bm = x @ p["w_B"]
+    Cm = x @ p["w_C"]
+    dt_raw = x @ p["w_dt"]
+    if conv_states is None:
+        xs, cx = causal_conv1d(xs, p["conv_x"])
+        Bm, cb = causal_conv1d(Bm, p["conv_B"])
+        Cm, cc = causal_conv1d(Cm, p["conv_C"])
+    else:
+        xs, cx = causal_conv1d_step(xs, p["conv_x"], conv_states["x"])
+        Bm, cb = causal_conv1d_step(Bm, p["conv_B"], conv_states["B"])
+        Cm, cc = causal_conv1d_step(Cm, p["conv_C"], conv_states["C"])
+    xs, Bm, Cm = jax.nn.silu(xs), jax.nn.silu(Bm), jax.nn.silu(Cm)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    return z, xs, Bm, Cm, dt, {"x": cx, "B": cb, "C": cc}
+
+
+def ssm_block_fwd(cfg: ModelConfig, p: dict, x: jax.Array, *, impl: str = "xla"):
+    """Full-sequence Mamba2 block. x: (B, S, D) -> (B, S, D)."""
+    di, H, N, Pd = ssm_dims(cfg)
+    B, S, _ = x.shape
+    z, xs, Bm, Cm, dt, _ = _ssm_proj_conv(cfg, p, x)
+    A = -jnp.exp(p["A_log"])
+    xh = xs.reshape(B, S, H, Pd)
+    if impl == "pallas":
+        from repro.kernels.ssd_scan import ops as ssd_ops
+
+        y, _ = ssd_ops.ssd_scan(xh, dt, A, Bm, Cm, chunk=cfg.ssm.chunk_size)
+    else:
+        y, _ = ssd_chunked(xh, dt, A, Bm, Cm, chunk=cfg.ssm.chunk_size)
+    y = y + xh * p["D_skip"][:, None].astype(y.dtype)
+    y = y.reshape(B, S, di)
+    y = _gated_norm(y, z, p["norm_scale"])
+    return y @ p["out_proj"]
+
+
+def ssm_block_prefill(cfg: ModelConfig, p: dict, x: jax.Array, *, impl="xla"):
+    """Prefill: also returns decode cache {ssm_state, conv_*}."""
+    di, H, N, Pd = ssm_dims(cfg)
+    B, S, _ = x.shape
+    z, xs, Bm, Cm, dt, conv_states = _ssm_proj_conv(cfg, p, x)
+    A = -jnp.exp(p["A_log"])
+    xh = xs.reshape(B, S, H, Pd)
+    y, st = ssd_chunked(xh, dt, A, Bm, Cm, chunk=cfg.ssm.chunk_size)
+    y = y + xh * p["D_skip"][:, None].astype(y.dtype)
+    y = y.reshape(B, S, di)
+    y = _gated_norm(y, z, p["norm_scale"])
+    cache = {"ssm_state": st.astype(jnp.float32), "conv": conv_states}
+    return y @ p["out_proj"], cache
+
+
+def ssm_block_step(cfg: ModelConfig, p: dict, x: jax.Array, cache: dict):
+    """One-token decode. x: (B, 1, D)."""
+    di, H, N, Pd = ssm_dims(cfg)
+    B = x.shape[0]
+    z, xs, Bm, Cm, dt, conv_states = _ssm_proj_conv(
+        cfg, p, x[:, 0, :], conv_states=cache["conv"])
+    A = -jnp.exp(p["A_log"])
+    xh = xs.reshape(B, H, Pd)
+    y, st = ssd_step(xh, dt, A, Bm, Cm, cache["ssm_state"])
+    y = y + xh * p["D_skip"][:, None].astype(y.dtype)
+    y = _gated_norm(y.reshape(B, di), z, p["norm_scale"])
+    out = (y @ p["out_proj"])[:, None, :]
+    return out, {"ssm_state": st, "conv": conv_states}
+
+
+def ssm_cache_spec(cfg: ModelConfig, batch: int) -> dict:
+    di, H, N, Pd = ssm_dims(cfg)
+    dt = cdtype(cfg)
+    K = cfg.ssm.d_conv
+    return {
+        "ssm_state": jax.ShapeDtypeStruct((batch, H, Pd, N), jnp.float32),
+        "conv": {
+            "x": jax.ShapeDtypeStruct((batch, K - 1, di), dt),
+            "B": jax.ShapeDtypeStruct((batch, K - 1, N), dt),
+            "C": jax.ShapeDtypeStruct((batch, K - 1, N), dt),
+        },
+    }

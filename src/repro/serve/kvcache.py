@@ -1,0 +1,24 @@
+"""Concrete cache construction + prompt utilities for serving."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.attention import _INVALID_POS
+
+
+def init_caches_from_specs(specs):
+    """Zeros for k/v/state leaves; INVALID sentinel for kv_pos leaves."""
+    def mk(path, leaf):
+        names = [k.key for k in path if hasattr(k, "key")]
+        if names and names[-1] == "kv_pos":
+            return jnp.full(leaf.shape, _INVALID_POS, jnp.int32)
+        return jnp.zeros(leaf.shape, leaf.dtype)
+
+    return jax.tree_util.tree_map_with_path(mk, specs)
+
+
+def cache_bytes(caches) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(caches))

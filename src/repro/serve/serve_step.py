@@ -1,0 +1,59 @@
+"""Serving steps: prefill, decode, and a simple generate loop.
+
+``generate`` drives batched greedy/temperature decoding; the Funky runtime
+wraps ``decode_step`` dispatches as EXECUTE requests, so serving tasks are
+preemptible between tokens (minimal-granularity — the paper's best case for
+synchronization latency).
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model_zoo import ModelBundle
+from repro.serve.kvcache import init_caches_from_specs
+
+
+def make_prefill_step(bundle: ModelBundle) -> Callable:
+    def prefill(params, batch):
+        return bundle.prefill_fn(params, batch)
+
+    return prefill
+
+
+def make_decode_step(bundle: ModelBundle) -> Callable:
+    def decode(params, token, pos, caches):
+        return bundle.decode_fn(params, token, pos, caches)
+
+    return decode
+
+
+def sample_token(logits: jax.Array, rng: Optional[jax.Array],
+                 temperature: float = 0.0) -> jax.Array:
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(rng, logits / temperature).astype(jnp.int32)
+
+
+def generate(bundle: ModelBundle, params, prompt_batch: dict, num_tokens: int,
+             *, temperature: float = 0.0, rng=None,
+             jit: bool = True):
+    """Prefill + decode ``num_tokens`` tokens. Returns (B, num_tokens) ids."""
+    prefill = jax.jit(make_prefill_step(bundle)) if jit else make_prefill_step(bundle)
+    decode = jax.jit(make_decode_step(bundle)) if jit else make_decode_step(bundle)
+    logits, caches = prefill(params, prompt_batch)
+    key = prompt_batch.get("tgt_tokens", prompt_batch.get("tokens"))
+    pos = key.shape[1]
+    if bundle.cfg.family == "vlm":
+        pos += bundle.cfg.num_image_tokens
+    toks = []
+    rng = rng if rng is not None else jax.random.key(0)
+    for i in range(num_tokens):
+        rng, sub = jax.random.split(rng)
+        tok = sample_token(logits, sub, temperature)
+        toks.append(tok)
+        logits, caches = decode(params, tok, jnp.int32(pos + i), caches)
+    return jnp.stack(toks, axis=1)

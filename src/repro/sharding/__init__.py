@@ -1,0 +1,3 @@
+from repro.sharding.rules import ShardingRules, dp_axes_of, opt_state_specs
+
+__all__ = ["ShardingRules", "dp_axes_of", "opt_state_specs"]

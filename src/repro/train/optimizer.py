@@ -1,0 +1,193 @@
+"""AdamW + schedules, implemented in pure JAX (no optax in this environment).
+
+Moments support three storage formats (``moment_dtype``):
+
+* ``float32``  — exact Adam;
+* ``bfloat16`` — halves moment memory; update math still f32;
+* ``int8``     — 8-bit Adam (Dettmers-style block quantization, one f32
+  scale per last-dim row).  671e9 params x (2 + 1 + 1 + scales) bytes /
+  256 chips ≈ 10.6 GB: the format that fits deepseek-v3-671b training on a
+  single v5e pod (EXPERIMENTS.md §Perf C).
+
+Large stacked leaves (scan-over-layers parameter stacks) are updated with
+``lax.map`` over the leading axis so optimizer f32 temporaries stay
+per-layer-slice instead of per-stack (§Perf C.3).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+# leaves with leading dim >= this and rank >= 3 get lax.map'd updates
+_SCAN_UPDATE_MIN_LEAD = 8
+
+
+def _q8(x32: jax.Array):
+    """Symmetric int8 quantization with per-last-dim-row f32 scales (m)."""
+    amax = jnp.max(jnp.abs(x32), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x32 / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def _dq8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+_V_LOG_FLOOR = -46.0    # log(1e-20): "zero" second moment
+
+
+def _q8_log(v32: jax.Array):
+    """Log-space int8 quantization for the (non-negative) second moment.
+
+    Linear int8 collapses small-but-critical v entries to zero (the Adam
+    denominator), exploding updates; log bins give uniform *relative*
+    precision ~ (vmax/vmin)^(1/254) per row.  Scale carries (log_lo, range).
+    """
+    vc = jnp.maximum(v32, jnp.exp(_V_LOG_FLOOR))
+    lo = jnp.log(jnp.min(vc, axis=-1, keepdims=True))
+    hi = jnp.log(jnp.max(vc, axis=-1, keepdims=True))
+    rng = jnp.maximum(hi - lo, 1e-9)
+    q = jnp.clip(jnp.round((jnp.log(vc) - lo) / rng * 254.0) - 127.0,
+                 -127, 127).astype(jnp.int8)
+    scale = jnp.concatenate([lo, rng], axis=-1).astype(jnp.float32)
+    return q, scale
+
+
+def _dq8_log(q: jax.Array, scale: jax.Array) -> jax.Array:
+    lo = scale[..., :1]
+    rng = scale[..., 1:2]
+    v = jnp.exp(lo + (q.astype(jnp.float32) + 127.0) / 254.0 * rng)
+    return jnp.where(v <= jnp.exp(_V_LOG_FLOOR) * 1.001, 0.0, v)
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    peak_lr: float = 3e-4
+    min_lr: float = 3e-5
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    moment_dtype: str = "float32"
+    # dtype gradients are reduced across data shards in.  GSPMD defers the
+    # grad all-reduce to first use; touching grads in f32 first would double
+    # the reduction bytes (measured: §Perf B.3), so we pin bf16 here.
+    grad_reduce_dtype: str = "bfloat16"
+
+
+def lr_at(cfg: OptConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = cfg.peak_lr * step / max(cfg.warmup_steps, 1)
+    frac = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.decay_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr + 0.5 * (cfg.peak_lr - cfg.min_lr) * (1 + jnp.cos(jnp.pi * frac))
+    return jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def init_opt_state(cfg: OptConfig, params: Any) -> dict:
+    if cfg.moment_dtype == "int8":
+        z8 = lambda p: jnp.zeros(p.shape, jnp.int8)
+        zm = lambda p: jnp.zeros(p.shape[:-1] + (1,), jnp.float32)
+        zv = lambda p: jnp.zeros(p.shape[:-1] + (2,), jnp.float32).at[
+            ..., 0].set(_V_LOG_FLOOR)
+        return {
+            "m": jax.tree.map(z8, params),
+            "v": jax.tree.map(z8, params),
+            "m_scale": jax.tree.map(zm, params),
+            "v_scale": jax.tree.map(zv, params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+    dt = jnp.dtype(cfg.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def apply_updates(cfg: OptConfig, params: Any, grads: Any, state: dict):
+    """One AdamW step. Returns (new_params, new_state, stats)."""
+    if cfg.grad_reduce_dtype:
+        # Grad leaves are typically already bf16 but *unreduced* (GSPMD defers
+        # the cross-shard reduction to first use).  The barrier pins the
+        # reduction here — before the optimizer's f32 upcast — so the wire
+        # format is bf16, not f32 (§Perf B.3: halves all-reduce bytes).
+        rdt = jnp.dtype(cfg.grad_reduce_dtype)
+        grads = jax.tree.map(
+            lambda g: g.astype(rdt) if g.dtype == jnp.float32 else g, grads)
+        grads = jax.lax.optimization_barrier(grads)
+    count = state["count"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9)) \
+        if cfg.clip_norm else jnp.float32(1.0)
+    lr = lr_at(cfg, count)
+    b1, b2 = cfg.b1, cfg.b2
+    c = count.astype(jnp.float32)
+    bc1 = 1 - b1 ** c
+    bc2 = 1 - b2 ** c
+    int8 = cfg.moment_dtype == "int8"
+    mdt = jnp.dtype(cfg.moment_dtype if not int8 else "float32")
+
+    def upd(p, g, m, v, ms=None, vs=None):
+        g = g.astype(jnp.float32) * scale
+        m32 = _dq8(m, ms) if int8 else m.astype(jnp.float32)
+        v32 = _dq8_log(v, vs) if int8 else v.astype(jnp.float32)
+        m32 = b1 * m32 + (1 - b1) * g
+        v32 = b2 * v32 + (1 - b2) * jnp.square(g)
+        v32 = jnp.maximum(v32, 0.0)
+        mhat = m32 / bc1
+        vhat = v32 / bc2
+        step = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if cfg.weight_decay and p.ndim >= 2:       # no decay on norms/bias
+            step = step + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+        if int8:
+            mq, msc = _q8(m32)
+            vq, vsc = _q8_log(v32)
+            return new_p, mq, vq, msc, vsc
+        return new_p, m32.astype(mdt), v32.astype(mdt), None, None
+
+    def upd_leaf(p, g, m, v, ms, vs):
+        # lax.map over the layer-stack axis keeps f32 temporaries O(1 layer)
+        if p.ndim >= 3 and p.shape[0] >= _SCAN_UPDATE_MIN_LEAD:
+            if int8:
+                return jax.lax.map(lambda xs: upd(*xs), (p, g, m, v, ms, vs))
+            out = jax.lax.map(lambda xs: upd(*xs[:4]), (p, g, m, v))
+            return out
+        return upd(p, g, m, v, ms, vs)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state["m"])
+    flat_v = jax.tree.leaves(state["v"])
+    flat_ms = jax.tree.leaves(state["m_scale"]) if int8 else [None] * len(flat_p)
+    flat_vs = jax.tree.leaves(state["v_scale"]) if int8 else [None] * len(flat_p)
+    out = [upd_leaf(p, g, m, v, ms, vs)
+           for p, g, m, v, ms, vs in
+           zip(flat_p, flat_g, flat_m, flat_v, flat_ms, flat_vs)]
+    new_params = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_state = {
+        "m": jax.tree.unflatten(treedef, [o[1] for o in out]),
+        "v": jax.tree.unflatten(treedef, [o[2] for o in out]),
+        "count": count,
+    }
+    if int8:
+        new_state["m_scale"] = jax.tree.unflatten(treedef, [o[3] for o in out])
+        new_state["v_scale"] = jax.tree.unflatten(treedef, [o[4] for o in out])
+    stats = {"lr": lr, "grad_norm": gnorm}
+    return new_params, new_state, stats

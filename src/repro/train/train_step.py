@@ -1,0 +1,120 @@
+"""Train-step builders.
+
+Two execution modes, mirroring the paper's request-splitting design (§3.4):
+
+* ``make_train_step``        — one fused XLA program: grad-accumulate over K
+  microbatches with an internal ``lax.scan`` then apply AdamW.  Maximum
+  throughput; preemption granularity = the whole step.
+* ``make_chunked_train_fns`` — (grad_step, apply_step) as *separate* programs
+  dispatched per microbatch by the runtime.  This is Funky's "split a 1 GiB
+  request into chunks" optimization mapped to training: the monitor can
+  synchronize and preempt between chunks (Fig 9 reproduction in
+  ``benchmarks/fig09_sync_split.py``).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model_zoo import ModelBundle
+from repro.train.optimizer import OptConfig, apply_updates, init_opt_state
+
+
+def _split_microbatches(batch: dict, k: int, mesh=None,
+                        dp_axes: tuple = ()) -> dict:
+    def r(x):
+        b = x.shape[0]
+        assert b % k == 0, (b, k)
+        out = x.reshape(k, b // k, *x.shape[1:])
+        if mesh is not None and dp_axes:
+            # Re-pin the per-microbatch batch dim: without this, GSPMD tends
+            # to replicate microbatches across data shards after the reshape.
+            from repro.models.layers import _axsize
+            from jax.sharding import NamedSharding
+            from jax.sharding import PartitionSpec as P
+
+            if (b // k) % _axsize(mesh, dp_axes) == 0:
+                spec = P(None, dp_axes, *([None] * (x.ndim - 1)))
+                out = jax.lax.with_sharding_constraint(
+                    out, NamedSharding(mesh, spec))
+        return out
+
+    return jax.tree.map(r, batch)
+
+
+def make_train_step(bundle: ModelBundle, opt_cfg: OptConfig,
+                    num_microbatches: int = 1,
+                    accum_dtype: str = "float32", mesh=None,
+                    dp_axes: tuple = ()) -> Callable:
+    """Returns step(params, opt_state, batch) -> (params, opt_state, metrics)."""
+
+    def loss_of(params, mb):
+        loss, metrics = bundle.loss_fn(params, mb)
+        return loss, metrics
+
+    def step(params, opt_state, batch):
+        if num_microbatches == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_of, has_aux=True)(params, batch)
+        else:
+            mbs = _split_microbatches(batch, num_microbatches, mesh, dp_axes)
+            adt = jnp.dtype(accum_dtype)
+
+            def body(carry, mb):
+                acc, loss_acc = carry
+                (loss, _), g = jax.value_and_grad(loss_of, has_aux=True)(params, mb)
+                acc = jax.tree.map(lambda a, gi: a + gi.astype(adt), acc, g)
+                return (acc, loss_acc + loss), None
+
+            acc0 = jax.tree.map(lambda p: jnp.zeros(p.shape, adt), params)
+            (grads, loss_sum), _ = jax.lax.scan(
+                body, (acc0, jnp.zeros((), jnp.float32)), mbs)
+            grads = jax.tree.map(lambda g: g / num_microbatches, grads)
+            loss = loss_sum / num_microbatches
+            metrics = {"loss": loss, "aux_loss": jnp.zeros((), jnp.float32)}
+        params, opt_state, stats = apply_updates(opt_cfg, params, grads, opt_state)
+        metrics = dict(metrics)
+        metrics.update(stats)
+        return params, opt_state, metrics
+
+    return step
+
+
+def make_chunked_train_fns(bundle: ModelBundle, opt_cfg: OptConfig,
+                           accum_dtype: str = "float32"):
+    """Chunk-granular training (the paper's sync-splitting, §3.4 / Fig 9).
+
+    grad_step(params, grad_acc, microbatch) -> (grad_acc', loss)
+        one microbatch forward+backward, accumulated into grad_acc;
+    apply_step(params, opt_state, grad_acc, k) -> (params', opt_state', stats)
+        AdamW with the averaged accumulated gradient.
+
+    The runtime dispatches these as individual EXECUTE requests, so eviction/
+    checkpoint requests wait at most one microbatch.
+    """
+    adt = jnp.dtype(accum_dtype)
+
+    def grad_init(params):
+        return jax.tree.map(lambda p: jnp.zeros(p.shape, adt), params)
+
+    def grad_step(params, grad_acc, microbatch):
+        def loss_of(p):
+            return bundle.loss_fn(p, microbatch)[0]
+
+        loss, g = jax.value_and_grad(loss_of)(params)
+        grad_acc = jax.tree.map(lambda a, gi: a + gi.astype(adt), grad_acc, g)
+        return grad_acc, loss
+
+    def apply_step(params, opt_state, grad_acc, k):
+        grads = jax.tree.map(lambda g: g / k, grad_acc)
+        return apply_updates(opt_cfg, params, grads, opt_state)
+
+    return grad_init, grad_step, apply_step
+
+
+def make_train_state(bundle: ModelBundle, opt_cfg: OptConfig, rng):
+    params = bundle.init(rng)
+    return params, init_opt_state(opt_cfg, params)

@@ -1,0 +1,52 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — tests must see the real single
+device; only launch/dryrun.py forces 512 host devices."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, get_arch
+from repro.models import build_model
+
+_BUNDLES = {}
+_PARAMS = {}
+
+
+def bundle_for(arch: str, **kw):
+    key = (arch, tuple(sorted(kw.items())))
+    if key not in _BUNDLES:
+        _BUNDLES[key] = build_model(get_arch(arch), **kw)
+    return _BUNDLES[key]
+
+
+def params_for(arch: str, **kw):
+    key = (arch, tuple(sorted(kw.items())))
+    if key not in _PARAMS:
+        _PARAMS[key] = bundle_for(arch, **kw).init(jax.random.PRNGKey(0))
+    return _PARAMS[key]
+
+
+def tiny_batch(cfg, B=2, S=32, seed=0):
+    import numpy as np
+
+    rng = np.random.Generator(np.random.Philox(seed))
+    toks = lambda *s: rng.integers(0, cfg.vocab_size, s).astype("int32")
+    if cfg.family == "encdec":
+        T = max(int(S * cfg.tgt_ratio), 8)
+        return {"src_emb": jnp.asarray(
+                    rng.standard_normal((B, S, cfg.d_model), dtype="float32") * 0.02),
+                "tgt_tokens": jnp.asarray(toks(B, T)),
+                "tgt_targets": jnp.asarray(toks(B, T))}
+    if cfg.family == "vlm":
+        return {"tokens": jnp.asarray(toks(B, S)),
+                "targets": jnp.asarray(toks(B, S)),
+                "img_emb": jnp.asarray(
+                    rng.standard_normal((B, cfg.num_image_tokens, cfg.d_model),
+                                        dtype="float32") * 0.02)}
+    return {"tokens": jnp.asarray(toks(B, S)),
+            "targets": jnp.asarray(toks(B, S))}
+
+
+@pytest.fixture(scope="session")
+def all_smoke_archs():
+    return [f"{name}-smoke" for name in ARCHS]

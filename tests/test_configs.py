@@ -1,0 +1,89 @@
+import pytest
+
+from repro.configs import (ARCHS, SHAPES, all_cells, applicable, get_arch,
+                           get_shape, reduced)
+
+
+def test_ten_archs_four_shapes():
+    assert len(ARCHS) == 10
+    assert len(SHAPES) == 4
+    assert len(all_cells()) == 40
+
+
+def test_exact_dims_match_assignment():
+    a = ARCHS
+    assert (a["recurrentgemma-9b"].num_layers, a["recurrentgemma-9b"].d_model,
+            a["recurrentgemma-9b"].num_heads, a["recurrentgemma-9b"].num_kv_heads,
+            a["recurrentgemma-9b"].d_ff, a["recurrentgemma-9b"].vocab_size) == \
+        (38, 4096, 16, 1, 12288, 256000)
+    assert (a["yi-9b"].num_layers, a["yi-9b"].d_model, a["yi-9b"].num_heads,
+            a["yi-9b"].num_kv_heads, a["yi-9b"].d_ff, a["yi-9b"].vocab_size) == \
+        (48, 4096, 32, 4, 11008, 64000)
+    assert (a["stablelm-3b"].num_layers, a["stablelm-3b"].d_model,
+            a["stablelm-3b"].d_ff, a["stablelm-3b"].vocab_size) == \
+        (32, 2560, 6912, 50304)
+    assert (a["qwen3-8b"].num_layers, a["qwen3-8b"].d_model,
+            a["qwen3-8b"].num_kv_heads, a["qwen3-8b"].vocab_size) == \
+        (36, 4096, 8, 151936)
+    assert a["qwen3-8b"].qk_norm
+    assert (a["starcoder2-15b"].num_layers, a["starcoder2-15b"].d_model,
+            a["starcoder2-15b"].num_heads, a["starcoder2-15b"].d_ff) == \
+        (40, 6144, 48, 24576)
+    assert (a["llava-next-mistral-7b"].d_ff,
+            a["llava-next-mistral-7b"].vocab_size) == (14336, 32000)
+    assert a["llava-next-mistral-7b"].num_image_tokens > 0
+    ds = a["deepseek-v3-671b"]
+    assert (ds.num_layers, ds.d_model, ds.num_heads, ds.vocab_size) == \
+        (61, 7168, 128, 129280)
+    assert (ds.moe.num_experts, ds.moe.top_k, ds.moe.num_shared_experts,
+            ds.moe.d_ff) == (256, 8, 1, 2048)
+    assert (ds.mla.kv_lora_rank, ds.mla.q_lora_rank,
+            ds.mla.qk_rope_head_dim) == (512, 1536, 64)
+    dm = a["deepseek-moe-16b"]
+    assert (dm.num_layers, dm.d_model, dm.moe.num_experts, dm.moe.top_k,
+            dm.moe.num_shared_experts) == (28, 2048, 64, 6, 2)
+    sm = a["seamless-m4t-large-v2"]
+    assert (sm.encoder_layers, sm.num_layers, sm.d_model, sm.d_ff,
+            sm.vocab_size) == (24, 24, 1024, 8192, 256206)
+    mb = a["mamba2-1.3b"]
+    assert (mb.num_layers, mb.d_model, mb.vocab_size, mb.ssm.d_state) == \
+        (48, 2048, 50280, 128)
+
+
+def test_shapes_match_assignment():
+    s = SHAPES
+    assert (s["train_4k"].seq_len, s["train_4k"].global_batch) == (4096, 256)
+    assert (s["prefill_32k"].seq_len, s["prefill_32k"].global_batch) == (32768, 32)
+    assert (s["decode_32k"].seq_len, s["decode_32k"].global_batch) == (32768, 128)
+    assert (s["long_500k"].seq_len, s["long_500k"].global_batch) == (524288, 1)
+    assert s["decode_32k"].kind == "decode"
+    assert s["long_500k"].kind == "decode"
+
+
+def test_long_context_applicability():
+    ok_archs = {a.name for a, sh, ok, _ in all_cells()
+                if sh.name == "long_500k" and ok}
+    assert ok_archs == {"mamba2-1.3b", "recurrentgemma-9b"}
+
+
+def test_reduced_keeps_family_features():
+    for name, cfg in ARCHS.items():
+        r = reduced(cfg)
+        assert r.family == cfg.family
+        assert r.moe.enabled == cfg.moe.enabled
+        assert r.mla.enabled == cfg.mla.enabled
+        assert r.ssm.enabled == cfg.ssm.enabled
+        assert r.rec.enabled == cfg.rec.enabled
+        assert r.d_model <= 128
+
+
+def test_get_arch_smoke_suffix():
+    r = get_arch("yi-9b-smoke")
+    assert r.d_model == 64
+
+
+def test_unknown_arch_raises():
+    with pytest.raises(KeyError):
+        get_arch("gpt5")
+    with pytest.raises(KeyError):
+        get_shape("train_999")

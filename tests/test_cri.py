@@ -1,0 +1,90 @@
+"""CRI/OCI command mapping (paper Table 3): every orchestration service maps
+to the specified CRI call + annotations, and the engine translates it to the
+right Funky runtime command without violating the CRI message structure."""
+
+import time
+
+import pytest
+
+from repro.core import TaskImage, TaskStatus, make_cluster
+from repro.core.cri import (A_PREEMPTIBLE, A_PRIORITY, A_REPLICA_OF,
+                            A_SNAPSHOT, A_SOURCE_NODE, ContainerConfig)
+
+IMAGES = {
+    "img": TaskImage(name="img", kind="train", arch="yi-9b-smoke",
+                     seq_len=16, global_batch=4, total_steps=15, chunks=2),
+}
+
+
+@pytest.fixture(scope="module")
+def cluster():
+    cl = make_cluster(num_nodes=2, slices_per_node=1, images=IMAGES)
+    yield cl
+    cl.stop()
+
+
+def test_deploy_maps_to_create_start(cluster):
+    agent = cluster.agent("node0")
+    agent.deploy("c1", "img", priority=3, preemptible=True)
+    rt = cluster.nodes["node0"].runtime
+    assert rt.tasks["c1"].priority == 3
+    assert rt.tasks["c1"].preemptible
+    assert rt.wait("c1", timeout=600) == TaskStatus.DONE
+
+
+def test_stop_container_evicts_preemptible(cluster):
+    agent = cluster.agent("node0")
+    agent.deploy("c2", "img")
+    rt = cluster.nodes["node0"].runtime
+    agent.evict("c2")                       # StopContainer -> evict
+    assert rt.status("c2") == TaskStatus.EVICTED
+    agent.resume("c2")                      # StartContainer -> resume
+    assert rt.wait("c2", timeout=600) == TaskStatus.DONE
+
+
+def test_migrate_uses_source_node_annotation(cluster):
+    a0, a1 = cluster.agent("node0"), cluster.agent("node1")
+    a0.deploy("c3", "img")
+    a0.evict("c3")
+    # CreateContainer(cid*, node_id*) -> StartContainer: Table 3 migrate row
+    a1.migrate_in("c3", "img", source_node="node0")
+    rt1 = cluster.nodes["node1"].runtime
+    assert rt1.wait("c3", timeout=600) == TaskStatus.DONE
+    assert "c3" not in cluster.nodes["node0"].runtime.tasks
+
+
+def test_checkpoint_and_restore_annotations(cluster):
+    a0, a1 = cluster.agent("node0"), cluster.agent("node1")
+    a0.deploy("c4", "img")
+    path = a0.checkpoint("c4")              # CheckpointContainer
+    assert path
+    a0.engine.runtime.kill("c4")
+    a1.restore("c5", path)                  # snapshot annotation
+    rt1 = cluster.nodes["node1"].runtime
+    assert rt1.wait("c5", timeout=600) == TaskStatus.DONE
+
+
+def test_replicate_annotations(cluster):
+    a0, a1 = cluster.agent("node0"), cluster.agent("node1")
+    a0.deploy("c6", "img")
+    a1.replicate_in("c6-r", "c6", source_node="node0")
+    rt1 = cluster.nodes["node1"].runtime
+    assert rt1.wait("c6-r", timeout=600) == TaskStatus.DONE
+
+
+def test_update_vfpga_num(cluster):
+    a0 = cluster.agent("node0")
+    a0.deploy("c7", "img")
+    a0.update("c7", 4)                      # UpdateContainerResources
+    rt0 = cluster.nodes["node0"].runtime
+    assert rt0.tasks["c7"].vfpga_num == 4
+    assert rt0.wait("c7", timeout=600) == TaskStatus.DONE
+
+
+def test_annotations_are_plain_kv_pairs():
+    cfgmsg = ContainerConfig(cid="x", image_ref="img", annotations={
+        A_PREEMPTIBLE: "true", A_PRIORITY: "2",
+        A_SOURCE_NODE: "node0", A_SNAPSHOT: "/p", A_REPLICA_OF: "y"})
+    for k, v in cfgmsg.annotations.items():
+        assert isinstance(k, str) and isinstance(v, str)
+        assert k.startswith("funky.io/")    # namespaced, CRI-compliant

@@ -1,0 +1,99 @@
+"""THE core state-management property (paper §3.4): a task that is evicted,
+migrated, checkpointed and restored mid-run must produce results identical to
+an uninterrupted run.  Valid because eviction lands on request boundaries and
+the data stream is a pure function of (seed, step)."""
+
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import TaskImage, TaskStatus, make_cluster
+
+IMG = TaskImage(name="t", kind="train", arch="yi-9b-smoke", seq_len=16,
+                global_batch=4, total_steps=10, chunks=2, seed=7)
+
+
+def _final_params(runtime, cid):
+    # the guest extracts its results before vfpga_exit zeroes device memory
+    return runtime.tasks[cid].guest_state.user["final_params"]
+
+
+def _run_uninterrupted():
+    cl = make_cluster(num_nodes=1, slices_per_node=1, images={"t": IMG})
+    rt = cl.nodes["node0"].runtime
+    rt.create("ref", IMG)
+    rt.start("ref")
+    assert rt.wait("ref", timeout=600) == TaskStatus.DONE
+    return _final_params(rt, "ref"), rt.tasks["ref"].guest_state
+
+
+def _assert_tree_equal(a, b):
+    import jax
+
+    la = jax.tree.leaves(a)
+    lb = jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+@pytest.fixture(scope="module")
+def reference():
+    return _run_uninterrupted()
+
+
+def test_evict_resume_is_transparent(reference):
+    ref_params, ref_gs = reference
+    cl = make_cluster(num_nodes=1, slices_per_node=1, images={"t": IMG})
+    rt = cl.nodes["node0"].runtime
+    rt.create("x", IMG)
+    rt.start("x")
+    # evict mid-run (after setup), then resume
+    while rt.tasks["x"].guest_state.step < 2 and \
+            rt.status("x") not in (TaskStatus.DONE, TaskStatus.FAILED):
+        time.sleep(0.01)
+    if rt.status("x") == TaskStatus.RUNNING:
+        rt.evict("x")
+        assert rt.tasks["x"].guest_state.step < IMG.total_steps
+        rt.resume("x")
+    assert rt.wait("x", timeout=600) == TaskStatus.DONE
+    assert rt.tasks["x"].guest_state.step == ref_gs.step
+    _assert_tree_equal(_final_params(rt, "x"), ref_params)
+
+
+def test_migration_is_transparent(reference):
+    ref_params, _ = reference
+    cl = make_cluster(num_nodes=2, slices_per_node=1, images={"t": IMG})
+    rt0 = cl.nodes["node0"].runtime
+    rt1 = cl.nodes["node1"].runtime
+    rt0.create("x", IMG)
+    rt0.start("x")
+    while rt0.tasks["x"].guest_state.step < 2 and \
+            rt0.status("x") not in (TaskStatus.DONE, TaskStatus.FAILED):
+        time.sleep(0.01)
+    if rt0.status("x") == TaskStatus.RUNNING:
+        rt0.evict("x")
+        rt1.resume("x", source=rt0)
+        rt = rt1
+    else:
+        rt = rt0
+    assert rt.wait("x", timeout=600) == TaskStatus.DONE
+    _assert_tree_equal(_final_params(rt, "x"), ref_params)
+
+
+def test_checkpoint_restore_is_transparent(reference):
+    ref_params, _ = reference
+    cl = make_cluster(num_nodes=2, slices_per_node=1, images={"t": IMG})
+    rt0 = cl.nodes["node0"].runtime
+    rt1 = cl.nodes["node1"].runtime
+    rt0.create("x", IMG)
+    rt0.start("x")
+    while rt0.tasks["x"].guest_state.step < 2 and \
+            rt0.status("x") not in (TaskStatus.DONE, TaskStatus.FAILED):
+        time.sleep(0.01)
+    path = rt0.checkpoint("x", keep_running=False)
+    rt0.kill("x")
+    rt1.restore("y", path)                 # crash-restart on another node
+    assert rt1.wait("y", timeout=600) == TaskStatus.DONE
+    _assert_tree_equal(_final_params(rt1, "y"), ref_params)

@@ -1,0 +1,127 @@
+"""Sharding rules: divisibility fallbacks, full coverage, spec validity.
+
+Uses a mock mesh (16 x 16) so the rules can be exercised without 256 devices.
+"""
+
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCHS, SHAPES, get_arch
+from repro.models import build_model, input_specs
+from repro.sharding.rules import ShardingRules
+
+
+class MockMesh:
+    def __init__(self, shape):
+        self.shape = dict(shape)
+        self.axis_names = tuple(shape)
+
+    @property
+    def size(self):
+        n = 1
+        for v in self.shape.values():
+            n *= v
+        return n
+
+
+MESH = MockMesh({"data": 16, "model": 16})
+MESH3 = MockMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def _abstract_params(arch):
+    cfg = get_arch(arch)
+    b = build_model(cfg)
+    return cfg, jax.eval_shape(b.init, jax.random.PRNGKey(0))
+
+
+@pytest.mark.parametrize("arch", list(ARCHS))
+def test_every_leaf_gets_a_valid_spec(arch):
+    cfg, abstract = _abstract_params(arch)
+    rules = ShardingRules(cfg, MESH)
+    specs = rules.param_specs(abstract)
+    leaves = jax.tree_util.tree_flatten_with_path(abstract)[0]
+    spec_leaves = jax.tree.leaves(
+        specs, is_leaf=lambda x: isinstance(x, P))
+    assert len(leaves) == len(spec_leaves)
+    for (path, leaf), spec in zip(leaves, spec_leaves):
+        assert len(spec) <= len(leaf.shape), (path, spec, leaf.shape)
+        # every sharded dim must divide the axis size
+        for dim, ax in zip(leaf.shape, tuple(spec) + (None,) * 8):
+            if ax is None:
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            size = 1
+            for a in axes:
+                size *= MESH.shape[a]
+            assert dim % size == 0, (arch, path, spec, leaf.shape)
+
+
+def test_gqa_kv_heads_fall_back_to_replication():
+    cfg, abstract = _abstract_params("yi-9b")      # kv=4 < model=16
+    rules = ShardingRules(cfg, MESH)
+    specs = rules.param_specs(abstract)
+    flat = jax.tree_util.tree_flatten_with_path(
+        specs, is_leaf=lambda x: isinstance(x, P))[0]
+    wk = [s for p, s in flat if any(
+        getattr(k, "key", None) == "wk" for k in p)]
+    assert wk and all(s[1 if len(s) == 3 else 2] is None for s in wk)
+
+
+def test_moe_experts_sharded_over_model():
+    cfg, abstract = _abstract_params("deepseek-v3-671b")
+    rules = ShardingRules(cfg, MESH)
+    specs = rules.param_specs(abstract)
+    flat = jax.tree_util.tree_flatten_with_path(
+        specs, is_leaf=lambda x: isinstance(x, P))[0]
+    experts = [s for p, s in flat if any(
+        getattr(k, "key", None) == "w_up" for k in p) and len(s) == 4]
+    assert experts                          # stacked (L, E, D, F)
+    for s in experts:
+        assert s[1] == "model"              # EP over the model axis
+
+
+def test_cache_specs_seq_fallback():
+    cfg = get_arch("qwen3-8b")              # kv=8 not divisible by 16
+    rules = ShardingRules(cfg, MESH)
+    specs = input_specs(cfg, SHAPES["decode_32k"])
+    cs = rules.cache_specs(specs["caches"])
+    flat = jax.tree_util.tree_flatten_with_path(
+        cs, is_leaf=lambda x: isinstance(x, P))[0]
+    k_specs = [s for p, s in flat if any(
+        getattr(kk, "key", None) == "k" for kk in p)]
+    assert k_specs
+    for s in k_specs:
+        assert s[2] == "model" and s[3] is None    # seq-sharded cache
+
+
+def test_batch_replicates_when_too_small():
+    cfg = get_arch("mamba2-1.3b")
+    rules = ShardingRules(cfg, MESH)
+    specs = input_specs(cfg, SHAPES["long_500k"])   # global_batch = 1
+    cs = rules.cache_specs(specs["caches"])
+    flat = jax.tree_util.tree_flatten_with_path(
+        cs, is_leaf=lambda x: isinstance(x, P))[0]
+    for p, s in flat:
+        if len(s) >= 2 and s[1] is not None:
+            raise AssertionError(f"batch=1 must not shard: {p} {s}")
+
+
+def test_fsdp_policy_shards_more_than_tp():
+    cfg, abstract = _abstract_params("qwen3-8b")
+    tp = ShardingRules(cfg, MESH, "tp").param_specs(abstract)
+    fs = ShardingRules(cfg, MESH, "fsdp_tp").param_specs(abstract)
+
+    def sharded_dims(specs):
+        return sum(sum(1 for a in s if a is not None)
+                   for s in jax.tree.leaves(
+                       specs, is_leaf=lambda x: isinstance(x, P)))
+
+    assert sharded_dims(fs) > sharded_dims(tp)
+
+
+def test_multipod_dp_axes():
+    cfg = get_arch("yi-9b")
+    rules = ShardingRules(cfg, MESH3)
+    assert rules.dp == ("pod", "data")
+    assert rules.dp_size == 32

@@ -1,0 +1,78 @@
+"""Trace-driven simulator (paper §5.6): trends must reproduce Figs 11-13."""
+
+import pytest
+
+from repro.core.scheduler import Policy
+from repro.core.simulator import SimParams, Simulator
+from repro.core.traces import generate_trace
+
+
+def test_trace_generation_deterministic():
+    a = generate_trace(n_jobs=50, seed=4)
+    b = generate_trace(n_jobs=50, seed=4)
+    c = generate_trace(n_jobs=50, seed=5)
+    assert [j.duration for j in a] == [j.duration for j in b]
+    assert [j.duration for j in a] != [j.duration for j in c]
+    assert all(30.0 <= j.duration <= 3 * 3600 for j in a)
+    assert all(j.memory_bytes <= 8 << 30 for j in a)
+
+
+def test_fig11_throughput_scales_with_slices_and_acceleration():
+    jobs = generate_trace(n_jobs=200, horizon_s=2 * 3600, seed=1)
+    thr = {}
+    for n in (2, 8, 32):
+        r = Simulator(jobs, num_nodes=n, policy=Policy.NO_PRE,
+                      params=SimParams(acceleration_rate=1.0)).run()
+        assert r["completed"] == 200
+        thr[n] = r["throughput_per_min"]
+    assert thr[8] > thr[2]
+    lat = {}
+    for rate in (0.0, 1.0):
+        r = Simulator(jobs, num_nodes=8, policy=Policy.NO_PRE,
+                      params=SimParams(acceleration_rate=rate)).run()
+        lat[rate] = r["mean_latency_s"]
+    assert lat[1.0] < lat[0.0]          # acceleration helps (paper: 1.6x)
+
+
+def test_fig13_preemption_helps_high_priority():
+    jobs = generate_trace(n_jobs=150, horizon_s=3600, seed=2)
+    res = {}
+    for pol in (Policy.NO_PRE, Policy.PRE_EV, Policy.PRE_MG):
+        r = Simulator(jobs, num_nodes=6, policy=pol).run()
+        assert r["completed"] == 150
+        res[pol] = r
+    hi = max(res[Policy.NO_PRE]["latency_by_priority"])
+    assert res[Policy.PRE_EV]["latency_by_priority"][hi] <= \
+        res[Policy.NO_PRE]["latency_by_priority"][hi] * 1.02
+    assert res[Policy.PRE_EV]["evictions"] > 0
+    assert res[Policy.PRE_MG]["migrations"] > 0
+
+
+def test_fig12_checkpointing_recovers_failures():
+    jobs = generate_trace(n_jobs=120, horizon_s=2 * 3600, seed=3,
+                          with_failures=True)
+    execs = {}
+    for ck in (None, 60.0):
+        r = Simulator(jobs, num_nodes=16, policy=Policy.NO_PRE,
+                      params=SimParams(checkpoint_interval_s=ck)).run()
+        assert r["completed"] == 120
+        execs[ck] = r["mean_exec_s"]
+    assert execs[60.0] < execs[None]    # snapshots recover lost work
+
+
+def test_fig12_checkpoint_overhead_without_failures():
+    jobs = generate_trace(n_jobs=80, horizon_s=3600, seed=6,
+                          with_failures=False)
+    base = Simulator(jobs, num_nodes=16, policy=Policy.NO_PRE,
+                     params=SimParams()).run()
+    freq = Simulator(jobs, num_nodes=16, policy=Policy.NO_PRE,
+                     params=SimParams(checkpoint_interval_s=15.0)).run()
+    assert freq["mean_exec_s"] >= base["mean_exec_s"]   # pure overhead
+
+
+def test_simulation_conserves_jobs():
+    jobs = generate_trace(n_jobs=77, horizon_s=1800, seed=9,
+                          with_failures=True)
+    r = Simulator(jobs, num_nodes=4, policy=Policy.PRE_MG,
+                  params=SimParams(checkpoint_interval_s=120.0)).run()
+    assert r["completed"] == 77

@@ -1,0 +1,54 @@
+# End-to-end live-cluster smoke: deploy train+serve tasks on 2 nodes,
+# evict/resume/migrate/checkpoint/restore through the full stack.
+import time
+from repro.core import make_cluster, TaskImage, Policy, TaskStatus
+
+images = {
+    "train-small": TaskImage(name="train-small", kind="train",
+                             arch="yi-9b-smoke", seq_len=16, global_batch=4,
+                             total_steps=6, chunks=2),
+    "serve-small": TaskImage(name="serve-small", kind="serve",
+                             arch="yi-9b-smoke", prompt_len=8, global_batch=2,
+                             total_steps=4, tokens_per_step=2),
+}
+cl = make_cluster(num_nodes=2, slices_per_node=1, images=images,
+                  policy=Policy.PRE_MG)
+orch = cl.orchestrator
+orch.start(tick_interval=0.01)
+t1 = orch.submit("train-small", priority=0)
+t2 = orch.submit("serve-small", priority=1)
+ok = orch.wait_all(timeout=180)
+print("all done:", ok)
+for cid, d in orch.deployments.items():
+    print(" ", cid, d.status)
+orch.stop()
+assert ok, [ (c, d.status) for c, d in orch.deployments.items() ]
+for cid, d in orch.deployments.items():
+    assert d.status == "done", (cid, d.status)
+
+cl2 = make_cluster(num_nodes=2, slices_per_node=1, images=images)
+rt = cl2.nodes["node0"].runtime
+rec = rt.create("m1", images["train-small"])
+rt.start("m1")
+time.sleep(1.0)
+stats = rt.evict("m1")
+print("evict stats:", {k: round(v,4) if isinstance(v,float) else v for k,v in stats.items()})
+assert rt.status("m1") == TaskStatus.EVICTED
+rt2 = cl2.nodes["node1"].runtime
+rt2.resume("m1", source=rt)
+st = rt2.wait("m1", timeout=120)
+print("after migrate:", st, "final step:", rt2.tasks["m1"].guest_state.step)
+assert st == TaskStatus.DONE
+ckpt_img = TaskImage(name="ck", kind="train", arch="yi-9b-smoke",
+                     seq_len=16, global_batch=4, total_steps=60, chunks=2)
+rt.tasks.pop("c1", None)
+rec = rt.create("c1", ckpt_img)
+rt.start("c1")
+path = rt.checkpoint("c1")
+print("ckpt:", path)
+rt.kill("c1")
+rt2.restore("c2", path)
+st = rt2.wait("c2", timeout=120)
+print("restored task:", st, rt2.tasks["c2"].guest_state.step)
+assert st == TaskStatus.DONE
+print("CLUSTER SMOKE OK")

@@ -1,0 +1,47 @@
+"""Regenerate the EXPERIMENTS.md roofline/dry-run tables from results JSON."""
+
+import json
+import sys
+
+
+def dryrun_table(path="results/dryrun.json"):
+    rs = json.load(open(path))
+    ok = [r for r in rs if r["status"] == "ok"]
+    lines = ["| arch | shape | mesh | compile_s | HBM frac | fits | collectives |",
+             "|---|---|---|---|---|---|---|"]
+    for r in sorted(ok, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        c = r["collectives"]["counts"]
+        cs = " ".join(f"{k.split('-')[-1][:4]}:{v}" for k, v in sorted(c.items()))
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['compile_s']} "
+            f"| {r['hbm_frac']:.2f} | {'Y' if r['fits_hbm'] else 'N'} | {cs} |")
+    skipped = [r for r in rs if r["status"] == "skipped"]
+    lines.append("")
+    lines.append(f"Skipped (inapplicable) cells: "
+                 + ", ".join(sorted({f"{r['arch']} x {r['shape']}" for r in skipped})))
+    return "\n".join(lines)
+
+
+def roofline_table(path="results/roofline.json"):
+    rs = json.load(open(path))
+    ok = [r for r in rs if r["status"] == "ok"]
+    lines = ["| arch | shape | compute_s | memory_s | collective_s | bottleneck "
+             "| step_s (LB) | roofline | useful | tok/s/chip |",
+             "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in sorted(ok, key=lambda r: (r["arch"], r["shape"])):
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.4f} "
+            f"| {r['memory_s']:.4f} | {r['collective_s']:.4f} "
+            f"| {r['bottleneck'][:-2]} | {r['step_seconds_lower_bound']:.4f} "
+            f"| {r['roofline_fraction']:.3f} | {r['useful_flops_ratio']:.2f} "
+            f"| {r['tokens_per_second_per_chip']:.1f} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    which = sys.argv[1] if len(sys.argv) > 1 else "both"
+    if which in ("both", "dryrun"):
+        print(dryrun_table())
+        print()
+    if which in ("both", "roofline"):
+        print(roofline_table())

@@ -1,0 +1,45 @@
+"""Quick all-arch smoke driver (train+prefill+decode on reduced configs)."""
+import jax, jax.numpy as jnp, traceback, sys
+from repro.configs import ARCHS, reduced
+from repro.models import build_model
+
+def make_batch(cfg, B=2, S=32):
+    if cfg.family == "encdec":
+        T = max(int(S * cfg.tgt_ratio), 8)
+        return {"src_emb": jnp.ones((B, S, cfg.d_model), jnp.bfloat16) * 0.01,
+                "tgt_tokens": jnp.zeros((B, T), jnp.int32),
+                "tgt_targets": jnp.ones((B, T), jnp.int32)}
+    if cfg.family == "vlm":
+        return {"tokens": jnp.zeros((B, S), jnp.int32),
+                "targets": jnp.ones((B, S), jnp.int32),
+                "img_emb": jnp.ones((B, cfg.num_image_tokens, cfg.d_model), jnp.bfloat16) * 0.01}
+    return {"tokens": jnp.zeros((B, S), jnp.int32), "targets": jnp.ones((B, S), jnp.int32)}
+
+fails = 0
+for name, full in ARCHS.items():
+    cfg = reduced(full)
+    try:
+        b = build_model(cfg)
+        params = b.init(jax.random.key(0))
+        batch = make_batch(cfg)
+        loss, m = jax.jit(b.loss_fn)(params, batch)
+        assert not jnp.isnan(loss), "nan loss"
+        if cfg.family == "encdec":
+            pre_batch = {"src_emb": batch["src_emb"], "tgt_tokens": batch["tgt_tokens"]}
+        elif cfg.family == "vlm":
+            pre_batch = {"tokens": batch["tokens"], "img_emb": batch["img_emb"]}
+        else:
+            pre_batch = {"tokens": batch["tokens"]}
+        logits, caches = jax.jit(b.prefill_fn)(params, pre_batch)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        S0 = pre_batch.get("tgt_tokens", pre_batch.get("tokens")).shape[1]
+        logits2, caches = jax.jit(b.decode_fn)(params, tok, jnp.int32(S0), caches)
+        assert not jnp.isnan(logits2).any()
+        g = jax.jit(jax.grad(lambda p: b.loss_fn(p, batch)[0]))(params)
+        assert not any(bool(jnp.isnan(x).any()) for x in jax.tree.leaves(g)), "nan grad"
+        print(f"{name:28s} OK  loss={float(loss):.3f}")
+    except Exception as e:
+        fails += 1
+        print(f"{name:28s} FAIL: {type(e).__name__}: {e}")
+        traceback.print_exc(limit=4)
+sys.exit(fails)
