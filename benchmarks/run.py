@@ -9,6 +9,7 @@ Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
 from __future__ import annotations
 
 import importlib
+import os
 import sys
 import time
 import traceback
@@ -25,6 +26,7 @@ MODULES = [
     "fig11_scalability",
     "fig12_fault_tolerance",
     "fig13_sched_policies",
+    "fig14_autoscale",
 ]
 
 
@@ -47,6 +49,11 @@ def main() -> None:
         for name, e in failures:
             print(f"# FAILED {name}: {e}")
         raise SystemExit(1)
+    sys.stdout.flush()
+    # live-cluster benchmarks (fig10/12/14) leave XLA worker threads from
+    # killed guest tasks behind; they can abort CPython teardown, so
+    # hard-exit once every row is emitted.
+    os._exit(0)
 
 
 if __name__ == '__main__':

@@ -1,52 +1,88 @@
-"""Workload-scaling demo (paper §3.5): a serving task is scaled horizontally
-(replicated to a second node from a live snapshot) and vertically
-(vfpga_num update), while continuously decoding batched requests.
+"""Elastic serving, end to end (paper §3.5 workload scaling, grown up).
+
+A live serving task is driven by a bursty open-loop trace.  The load
+driver publishes the canonical service signals (queue depth, utilization,
+request latency) into the cluster's telemetry registry; the orchestrator's
+autoscaler reconcile thread reads them, and scales the service out
+(checkpoint-clone replicate onto a node with free vSlices) and back in
+(kill + delete) through node agents -> CRI.  The same policy object drives
+the trace simulator in benchmarks/fig14_autoscale.py.
 
     PYTHONPATH=src python examples/elastic_serving.py
 """
 
+import os
 import sys
-import time
 
 sys.path.insert(0, "src")
 
-from repro.core import TaskImage, TaskStatus, make_cluster  # noqa: E402
+from repro.core import TaskImage, make_cluster              # noqa: E402
+from repro.scaling import (Autoscaler, LatencySLOPolicy,    # noqa: E402
+                           OrchestratorScaler, burst_rate, drive_open_loop,
+                           open_loop, teardown_service, wait_for_service)
 
-IMAGE = TaskImage(name="svc", kind="serve", arch="qwen3-8b-smoke",
-                  prompt_len=16, global_batch=4, total_steps=12,
-                  tokens_per_step=4)
+IMAGE = TaskImage(name="svc", kind="serve", arch="yi-9b-smoke",
+                  prompt_len=16, global_batch=2, total_steps=100000,
+                  tokens_per_step=2)
+
+SLO_S = 1.0
+SERVICE_RATE = 40.0      # requests/s one replica can terminate
+DURATION_S = 9.0
 
 
 def main():
-    cluster = make_cluster(num_nodes=2, slices_per_node=1,
+    cluster = make_cluster(num_nodes=4, slices_per_node=1,
                            images={"svc": IMAGE})
     orch = cluster.orchestrator
-    orch.start(tick_interval=0.02)
 
     cid = orch.submit("svc", priority=5)
-    time.sleep(3.0)
+    orch.start(tick_interval=0.02)
+    print("waiting for the service task to boot (program compilation)...")
+    node = wait_for_service(cluster, orch, cid)
+    print(f"  {cid} serving on {node}")
 
-    print("horizontal scaling: replicating the live service to node1...")
-    src_node = orch._sched_tasks[cid].node_id
-    target = "node1" if src_node == "node0" else "node0"
-    rep_cid = orch.scale_horizontal(cid, target)
-    print(f"  replica {rep_cid} deployed on {target} "
-          f"(cloned from a live snapshot — warmed caches included)")
+    scaler = OrchestratorScaler(orch, cid, service="svc")
+    autoscaler = Autoscaler(LatencySLOPolicy(slo_p95_s=0.6, growth=2.0),
+                            min_replicas=1, max_replicas=4,
+                            scale_down_cooldown_s=2.0)
+    orch.attach_autoscaler(autoscaler, scaler, service="svc",
+                           interval_s=0.2)
+    print("autoscaler attached: latency-SLO policy, 1..4 replicas")
 
-    print("vertical scaling: raising the replica's vSlice allowance to 2...")
-    orch.scale_vertical(rep_cid, 2)
+    # bursty open-loop traffic; the middle third runs at 6x the base rate
+    reqs = open_loop(
+        burst_rate(0.6 * SERVICE_RATE, 6.0, DURATION_S / 3, DURATION_S / 3),
+        DURATION_S, seed=7, mean_service_s=1.0 / SERVICE_RATE)
+    print(f"replaying {len(reqs)} requests over {DURATION_S:.0f}s "
+          f"(burst in the middle third)...")
 
-    assert orch.wait_all(timeout=3600)
-    for c in (cid, rep_cid):
-        d = orch.deployments[c]
-        print(f"{c}: {d.status}")
-        for n, nd in cluster.nodes.items():
-            rec = nd.runtime.tasks.get(c)
-            if rec is not None and rec.status is TaskStatus.DONE:
-                print(f"   on {n}: decoded through step {rec.guest_state.step}"
-                      f", last tokens {rec.guest_state.user.get('last_token')}")
-    orch.stop()
+    def report(now, replicas, queue_len, p95):
+        print(f"  t={now:4.1f}s replicas={replicas} queue={queue_len:4d} "
+              f"p95={p95 if p95 == p95 else 0:.2f}s")
+
+    res = drive_open_loop(orch, scaler, reqs, duration_s=DURATION_S,
+                          service_rate=SERVICE_RATE, slo_s=SLO_S,
+                          service="svc", on_tick=report)
+
+    print("burst over; stopping the reconcile loop and draining to 1...")
+    teardown_service(orch, scaler)
+    print(f"served {res.served} requests, "
+          f"SLO attainment {res.attainment:.3f}")
+    print("scaling events:",
+          [e[1] for e in orch.events if e[1] in ("replicate", "scale_in",
+                                                 "autoscale")])
+    snap = cluster.metrics.snapshot()
+    print("telemetry counters:", {k: int(v)
+                                  for k, v in snap["counters"].items()
+                                  if "{service=svc}" in k})
+    for d in autoscaler.decisions[-5:]:
+        print(f"  decision {d.current}->{d.desired} ({d.reason})")
     cluster.stop()
+    sys.stdout.flush()
+    # XLA worker threads of killed guest tasks can abort CPython teardown
+    # ("terminate called without an active exception"); everything is
+    # reported by now, so skip destructor-time teardown entirely.
+    os._exit(0)
 
 
 if __name__ == "__main__":

@@ -21,6 +21,7 @@ from repro.core.runtime import FunkyRuntime
 from repro.core.scheduler import Policy
 from repro.core.tasks import TaskImage
 from repro.core.vslice import SliceAllocator
+from repro.scaling.metrics import MetricsRegistry
 
 
 @dataclass
@@ -39,6 +40,11 @@ class Cluster:
     images: Dict[str, TaskImage]
     ckpt_root: str
 
+    @property
+    def metrics(self) -> MetricsRegistry:
+        """Cluster-wide telemetry (monitors, agents, orchestrator)."""
+        return self.orchestrator.metrics
+
     def agent(self, node_id: str) -> NodeAgent:
         return self.nodes[node_id].agent
 
@@ -51,9 +57,11 @@ def make_cluster(num_nodes: int = 3, slices_per_node: int = 1,
                  policy: Policy = Policy.PRE_MG,
                  mem_cap_bytes: int = 8 << 30,
                  checkpoint_interval: Optional[float] = None,
-                 ckpt_root: Optional[str] = None) -> Cluster:
+                 ckpt_root: Optional[str] = None,
+                 metrics: Optional[MetricsRegistry] = None) -> Cluster:
     images = images or {}
     ckpt_root = ckpt_root or tempfile.mkdtemp(prefix="funky-ckpt-")
+    metrics = metrics if metrics is not None else MetricsRegistry()
     engines: Dict[str, ContainerEngine] = {}
     nodes: Dict[str, Node] = {}
     for i in range(num_nodes):
@@ -61,13 +69,15 @@ def make_cluster(num_nodes: int = 3, slices_per_node: int = 1,
         alloc = SliceAllocator(nid, slices_per_node,
                                mem_cap_bytes=mem_cap_bytes)
         rt = FunkyRuntime(nid, alloc,
-                          ckpt_root=os.path.join(ckpt_root, nid))
+                          ckpt_root=os.path.join(ckpt_root, nid),
+                          telemetry=metrics)
         eng = ContainerEngine(rt, images, peers=engines)
         engines[nid] = eng
-        agent = NodeAgent(nid, eng)
+        agent = NodeAgent(nid, eng, metrics=metrics)
         nodes[nid] = Node(nid, alloc, rt, eng, agent)
     orch = Orchestrator({n: nd.agent for n, nd in nodes.items()},
                         policy=policy,
-                        checkpoint_interval=checkpoint_interval)
+                        checkpoint_interval=checkpoint_interval,
+                        metrics=metrics)
     return Cluster(nodes=nodes, orchestrator=orch, images=images,
                    ckpt_root=ckpt_root)

@@ -34,6 +34,7 @@ from repro.core.requests import (Completion, Direction, FunkyRequest,
                                  RequestKind)
 from repro.core.state import BufferTable, GuestState, TaskSnapshot
 from repro.core.vslice import SliceAllocator, VSlice
+from repro.scaling.metrics import MetricsRegistry
 
 
 class MonitorError(RuntimeError):
@@ -57,7 +58,8 @@ class MonitorState(enum.Enum):
 
 class Monitor:
     def __init__(self, task_id: str, allocator: SliceAllocator,
-                 programs: Optional[ProgramCache] = None):
+                 programs: Optional[ProgramCache] = None,
+                 telemetry: Optional[MetricsRegistry] = None):
         self.task_id = task_id
         self.allocator = allocator
         self.programs = programs if programs is not None else ProgramCache()
@@ -70,6 +72,22 @@ class Monitor:
         self._lock = threading.Lock()
         self.metrics: dict = defaultdict(float)
         self.metrics_hist: dict = defaultdict(list)
+        # shared node/cluster registry (scaling service); per-task local
+        # dicts above stay as the micro-benchmark source (Figs 4-9).
+        # Handles are resolved once: inc()/observe() are lock-free, so the
+        # per-request dispatch loop never touches the registry lock.
+        self.telemetry = (telemetry if telemetry is not None
+                          else MetricsRegistry())
+        self._tel_count = {
+            k.value: self.telemetry.counter("monitor_requests_total",
+                                            kind=k.value)
+            for k in RequestKind if k is not RequestKind.SHUTDOWN}
+        self._tel_hist = {
+            k.value: self.telemetry.histogram("monitor_request_seconds",
+                                              kind=k.value)
+            for k in RequestKind if k is not RequestKind.SHUTDOWN}
+        self._tel_sync_wait = self.telemetry.histogram(
+            "monitor_sync_wait_seconds")
 
     # ------------------------------------------------------------------
     # Hypercalls (paper §3.2): vfpga_init / vfpga_free
@@ -148,8 +166,11 @@ class Monitor:
                 req.completion.set(value)
             except BaseException as e:  # noqa: BLE001 - forwarded to guest
                 req.completion.set(error=e)
+            dt = time.perf_counter() - t0
             self.metrics[f"n_{req.kind.value}"] += 1
-            self.metrics_hist[req.kind.value].append(time.perf_counter() - t0)
+            self.metrics_hist[req.kind.value].append(dt)
+            self._tel_count[req.kind.value].inc()
+            self._tel_hist[req.kind.value].observe(dt)
             self._last_completion = req.completion
 
     # -- request handlers ------------------------------------------------
@@ -233,6 +254,7 @@ class Monitor:
         req.completion.wait()
         dt = time.perf_counter() - t0
         self.metrics_hist["sync_wait"].append(dt)
+        self._tel_sync_wait.observe(dt)
         return dt
 
     def evict(self) -> dict:

@@ -1,5 +1,7 @@
 """Node agent: forwards orchestrator requests to the container engine via
-CRI, attaching Funky metadata as annotations (paper §3.5, Table 3)."""
+CRI, attaching Funky metadata as annotations (paper §3.5, Table 3).  Each
+operation and the node's slice occupancy are published into the shared
+telemetry registry (repro.scaling.metrics) for the scaling service."""
 
 from __future__ import annotations
 
@@ -10,6 +12,7 @@ from repro.core.cri import (A_PREEMPTIBLE, A_PRIORITY, A_REPLICA_OF,
                             A_SNAPSHOT, A_SOURCE_NODE, A_VFPGA_NUM,
                             ContainerConfig, ContainerEngine)
 from repro.core.runtime import TaskStatus
+from repro.scaling.metrics import MetricsRegistry
 
 
 class NodeFailed(RuntimeError):
@@ -17,11 +20,19 @@ class NodeFailed(RuntimeError):
 
 
 class NodeAgent:
-    def __init__(self, node_id: str, engine: ContainerEngine):
+    def __init__(self, node_id: str, engine: ContainerEngine,
+                 metrics: Optional[MetricsRegistry] = None):
         self.node_id = node_id
         self.engine = engine
         self.failed = False
         self._hb = time.time()
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+
+    def _count_op(self, op: str):
+        self.metrics.counter("node_ops_total", node=self.node_id,
+                             op=op).inc()
+        self.metrics.gauge("node_free_slices", node=self.node_id).set(
+            self.engine.runtime.allocator.free_count())
 
     # -- health ---------------------------------------------------------------
     def heartbeat(self) -> float:
@@ -48,14 +59,17 @@ class NodeAgent:
                 A_PRIORITY: str(priority),
             }))
         self.engine.StartContainer(cid)
+        self._count_op("deploy")
 
     def evict(self, cid: str):
         self._check()
         self.engine.StopContainer(cid)
+        self._count_op("evict")
 
     def resume(self, cid: str):
         self._check()
         self.engine.StartContainer(cid)
+        self._count_op("resume")
 
     def migrate_in(self, cid: str, image_ref: str, source_node: str):
         self._check()
@@ -63,10 +77,13 @@ class NodeAgent:
             cid=cid, image_ref=image_ref,
             annotations={A_SOURCE_NODE: source_node}))
         self.engine.StartContainer(cid)
+        self._count_op("migrate_in")
 
     def checkpoint(self, cid: str) -> str:
         self._check()
-        return self.engine.CheckpointContainer(cid)
+        path = self.engine.CheckpointContainer(cid)
+        self._count_op("checkpoint")
+        return path
 
     def restore(self, cid: str, snapshot_path: str, image_ref: str = ""):
         self._check()
@@ -74,6 +91,7 @@ class NodeAgent:
             cid=cid, image_ref=image_ref,
             annotations={A_SNAPSHOT: snapshot_path}))
         self.engine.StartContainer(cid)
+        self._count_op("restore")
 
     def replicate_in(self, new_cid: str, source_cid: str, source_node: str,
                      image_ref: str = ""):
@@ -82,11 +100,19 @@ class NodeAgent:
             cid=new_cid, image_ref=image_ref, annotations={
                 A_REPLICA_OF: source_cid, A_SOURCE_NODE: source_node}))
         self.engine.StartContainer(new_cid)
+        self._count_op("replicate_in")
 
     def update(self, cid: str, vfpga_num: int):
         self._check()
         self.engine.UpdateContainerResources(
             cid, {A_VFPGA_NUM: str(vfpga_num)})
+        self._count_op("update")
+
+    def remove(self, cid: str):
+        """Scale-in: kill the replica and delete its record."""
+        self._check()
+        self.engine.RemoveContainer(cid)
+        self._count_op("remove")
 
     # -- introspection ----------------------------------------------------------
     def free_slices(self) -> int:

@@ -3,11 +3,15 @@
 Services (paper §3.5, Table 3):
   * preemptive scheduling  — Algorithm 1 actions executed through node agents
   * checkpoint & restore   — periodic/manual snapshots; failure recovery
-  * workload scaling       — horizontal (replicate) and vertical (update)
+  * workload scaling       — horizontal (replicate/remove) and vertical
+                             (update), driven by an SLO/utilization
+                             autoscaler reconcile loop (repro.scaling)
 
 The orchestrator never talks to monitors directly: every operation flows
 orchestrator -> node agent -> CRI -> container engine -> OCI runtime, as in
-the paper's Figure 1.
+the paper's Figure 1.  All services publish telemetry into a
+``repro.scaling.metrics`` registry — the same schema the trace simulator
+emits under its virtual clock.
 """
 
 from __future__ import annotations
@@ -16,12 +20,15 @@ import itertools
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional
 
 from repro.core.node_agent import NodeAgent, NodeFailed
 from repro.core.runtime import TaskStatus
 from repro.core.scheduler import (Action, FunkyScheduler, Policy, SchedTask,
                                   TaskState)
+from repro.scaling.autoscaler import (Autoscaler, ReplicaTarget,
+                                      ScalingSignals, signals_from_registry)
+from repro.scaling.metrics import MetricsRegistry
 
 
 @dataclass
@@ -39,7 +46,8 @@ class Deployment:
 class Orchestrator:
     def __init__(self, agents: Dict[str, NodeAgent],
                  policy: Policy = Policy.PRE_MG,
-                 checkpoint_interval: Optional[float] = None):
+                 checkpoint_interval: Optional[float] = None,
+                 metrics: Optional[MetricsRegistry] = None):
         self.agents = agents
         self.scheduler = FunkyScheduler(policy)
         self.deployments: Dict[str, Deployment] = {}
@@ -50,6 +58,10 @@ class Orchestrator:
         self._stop = threading.Event()
         self._threads: List[threading.Thread] = []
         self.events: List[tuple] = []
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self._started = False
+        # (autoscaler, target, signal_fn, interval_s) reconcile loops
+        self._autoscalers: List[tuple] = []
 
     # ------------------------------------------------------------------
     # API server
@@ -76,18 +88,30 @@ class Orchestrator:
         return path
 
     def scale_horizontal(self, cid: str, target_node: str) -> str:
-        src = self._sched_tasks[cid].node_id
-        new_cid = f"{cid}-r{next(self._cid_counter)}"
-        self.agents[target_node].replicate_in(
-            new_cid, cid, src, self.deployments[cid].image_ref)
-        dep = Deployment(cid=new_cid,
-                         image_ref=self.deployments[cid].image_ref)
-        dep.status = "running"
-        self.deployments[new_cid] = dep
-        st = SchedTask(tid=new_cid, state=TaskState.RUNNING,
-                       node_id=target_node)
-        self._sched_tasks[new_cid] = st
-        self.scheduler.run_queue.append(st)
+        # Reserve the slot under the scheduler lock so a concurrent tick()
+        # cannot double-book it, but run the multi-second checkpoint-clone
+        # outside the lock — holding it would freeze scheduling and
+        # failure recovery for the whole replicate.
+        with self._lock:
+            src = self._sched_tasks[cid].node_id
+            image_ref = self.deployments[cid].image_ref
+            new_cid = f"{cid}-r{next(self._cid_counter)}"
+            dep = Deployment(cid=new_cid, image_ref=image_ref)
+            dep.status = "running"
+            self.deployments[new_cid] = dep
+            st = SchedTask(tid=new_cid, state=TaskState.RUNNING,
+                           node_id=target_node)
+            self._sched_tasks[new_cid] = st
+            self.scheduler.run_queue.append(st)
+        try:
+            self.agents[target_node].replicate_in(new_cid, cid, src,
+                                                  image_ref)
+        except BaseException:
+            with self._lock:        # roll the reservation back
+                self.scheduler.task_done(new_cid)
+                self._sched_tasks.pop(new_cid, None)
+                self.deployments.pop(new_cid, None)
+            raise
         self._log("replicate", cid=cid, new_cid=new_cid, node=target_node)
         return new_cid
 
@@ -95,6 +119,73 @@ class Orchestrator:
         node = self._sched_tasks[cid].node_id
         self.agents[node].update(cid, vfpga_num)
         self._log("update", cid=cid, vfpga_num=vfpga_num)
+
+    def scale_in(self, cid: str):
+        """Remove a replica (scale-down): kill + delete through the agent."""
+        with self._lock:
+            st = self._sched_tasks[cid]
+            node = st.node_id
+            if node is not None and node in self.agents:
+                self.agents[node].remove(cid)
+            self.scheduler.task_done(cid)
+            self.scheduler.wait_queue = [
+                t for t in self.scheduler.wait_queue if t.tid != cid]
+            st.state = TaskState.DONE
+            dep = self.deployments[cid]
+            dep.status = "removed"
+            dep.end_time = time.time()
+            self._log("scale_in", cid=cid, node=node)
+
+    # ------------------------------------------------------------------
+    # Workload-scaling service: autoscaler reconcile loop (paper §3.5)
+    # ------------------------------------------------------------------
+    def attach_autoscaler(self, autoscaler: Autoscaler,
+                          target: ReplicaTarget, *, service: str = "svc",
+                          signal_fn: Optional[
+                              Callable[[], ScalingSignals]] = None,
+                          interval_s: float = 0.25):
+        """Register a reconcile loop for one service; starts with start().
+
+        ``signal_fn`` defaults to reading the canonical service metrics from
+        this orchestrator's registry — whoever terminates requests for the
+        service (live serving loop or load generator) publishes them there.
+        """
+        if signal_fn is None:
+            def signal_fn():
+                s = signals_from_registry(self.metrics, service)
+                s.replicas = target.current_replicas()
+                return s
+        entry = (autoscaler, target, signal_fn, interval_s)
+        self._autoscalers.append(entry)
+        if self._started:
+            self._spawn_autoscale_loop(entry)
+
+    def _spawn_autoscale_loop(self, entry):
+        autoscaler, target, signal_fn, interval_s = entry
+
+        def reconcile_loop():
+            while not self._stop.wait(interval_s):
+                try:
+                    signals = signal_fn()
+                    desired = autoscaler.reconcile(signals,
+                                                   self.metrics.clock())
+                    if desired is not None:
+                        target.scale_to(desired)
+                        self._log("autoscale", desired=desired,
+                                  replicas=signals.replicas)
+                except NodeFailed:
+                    continue          # next pass sees the updated cluster
+                except Exception as e:  # noqa: BLE001 - e.g. replicate race
+                    # keep reconciling, but leave a trace: a permanently
+                    # broken signal path must not look like a quiet cluster
+                    self.metrics.counter("autoscaler_errors_total").inc()
+                    self._log("autoscale_error", error=repr(e))
+                    continue
+
+        t = threading.Thread(target=reconcile_loop, daemon=True,
+                             name="funky-autoscaler")
+        t.start()
+        self._threads.append(t)
 
     # ------------------------------------------------------------------
     # ClusterView for the scheduler
@@ -119,12 +210,34 @@ class Orchestrator:
     # ------------------------------------------------------------------
     def tick(self) -> List[Action]:
         """Reap finished tasks, run one scheduling pass, execute actions."""
+        t0 = time.perf_counter()
         with self._lock:
             self._reap()
             actions = self.scheduler.schedule_once(self)
             for a in actions:
                 self._execute(a)
+            self._publish_cluster_metrics()
+            self.metrics.histogram("sched_tick_seconds").observe(
+                time.perf_counter() - t0)
             return actions
+
+    def _publish_cluster_metrics(self):
+        """Cluster-level gauges (same names the simulator emits)."""
+        self.metrics.gauge("wait_queue_depth").set(
+            len(self.scheduler.wait_queue))
+        self.metrics.gauge("running_tasks").set(
+            len(self.scheduler.run_queue))
+        total = used = 0
+        for n, agent in self.agents.items():
+            if agent.failed:
+                continue
+            slices = agent.num_slices()
+            free = self.free_slices(n)
+            self.metrics.gauge("free_slices", node=n).set(free)
+            total += slices
+            used += slices - free
+        if total:
+            self.metrics.gauge("cluster_utilization").set(used / total)
 
     def _reap(self):
         for cid, st in list(self._sched_tasks.items()):
@@ -207,6 +320,10 @@ class Orchestrator:
     # Background services
     # ------------------------------------------------------------------
     def start(self, tick_interval: float = 0.02):
+        self._started = True
+        for entry in self._autoscalers:
+            self._spawn_autoscale_loop(entry)
+
         def sched_loop():
             while not self._stop.is_set():
                 self.tick()
@@ -346,7 +463,7 @@ class Orchestrator:
         while time.time() < deadline:
             with self._lock:
                 pend = [d for d in self.deployments.values()
-                        if d.status not in ("done", "failed")]
+                        if d.status not in ("done", "failed", "removed")]
             if not pend:
                 return True
             time.sleep(0.02)
@@ -354,3 +471,4 @@ class Orchestrator:
 
     def _log(self, event: str, **kw):
         self.events.append((time.time(), event, kw))
+        self.metrics.counter("orchestrator_events_total", event=event).inc()

@@ -66,7 +66,7 @@ class TaskRecord:
 
 class FunkyRuntime:
     def __init__(self, node_id: str, allocator: SliceAllocator,
-                 ckpt_root: str = "/tmp/funky-ckpt"):
+                 ckpt_root: str = "/tmp/funky-ckpt", telemetry=None):
         self.node_id = node_id
         self.allocator = allocator
         self.ckpt_root = ckpt_root
@@ -76,8 +76,11 @@ class FunkyRuntime:
         # node-level program ("bitstream") cache: tasks sharing an image hit
         # warm compiled executables — the paper's warmed-up-FPGA behavior
         from repro.core.programs import ProgramCache
+        from repro.scaling.metrics import MetricsRegistry
 
         self.programs = ProgramCache()
+        self.telemetry = (telemetry if telemetry is not None
+                          else MetricsRegistry())
         os.makedirs(ckpt_root, exist_ok=True)
 
     # ------------------------------------------------------------------
@@ -89,7 +92,8 @@ class FunkyRuntime:
         annotations = dict(annotations or {})
         rec = TaskRecord(
             cid=cid, image=image, task=image.instantiate(),
-            monitor=Monitor(cid, self.allocator, programs=self.programs),
+            monitor=Monitor(cid, self.allocator, programs=self.programs,
+                            telemetry=self.telemetry),
             guest_state=GuestState(seed=image.seed),
             priority=int(annotations.get("priority", 0)),
             preemptible=annotations.get("preemptible", "true") == "true",
@@ -264,7 +268,8 @@ class FunkyRuntime:
         snap, image = load_snapshot(snapshot_path)
         rec = TaskRecord(
             cid=cid, image=image, task=image.instantiate(),
-            monitor=Monitor(cid, self.allocator, programs=self.programs),
+            monitor=Monitor(cid, self.allocator, programs=self.programs,
+                            telemetry=self.telemetry),
             guest_state=snap.guest_state.clone(),
         )
         rec.monitor.load_snapshot(snap)
@@ -289,7 +294,8 @@ class FunkyRuntime:
         clone = TaskRecord(
             cid=new_cid, image=rec.image, task=rec.image.instantiate(),
             monitor=Monitor(new_cid, target.allocator,
-                            programs=target.programs),
+                            programs=target.programs,
+                            telemetry=target.telemetry),
             guest_state=snap.guest_state.clone(),
             priority=rec.priority, preemptible=rec.preemptible,
         )

@@ -20,12 +20,20 @@ from __future__ import annotations
 
 import heapq
 import itertools
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
 from repro.core.scheduler import (Action, FunkyScheduler, Policy, SchedTask,
                                   TaskState)
 from repro.core.traces import TraceJob
+from repro.scaling.autoscaler import (M_COMPLETIONS, M_LATENCY, M_QUEUE_DEPTH,
+                                      M_REPLICAS, M_REPLICAS_SERIES,
+                                      M_REQUESTS, M_SLO_VIOLATIONS,
+                                      M_UTILIZATION, Autoscaler,
+                                      signals_from_registry)
+from repro.scaling.loadgen import ClosedLoopGen, Request
+from repro.scaling.metrics import MetricsRegistry
 
 
 @dataclass
@@ -100,6 +108,8 @@ class Simulator:
         self._seq = itertools.count()
         self.now = 0.0
         self.events_processed = 0
+        # same telemetry schema as the live plane, virtual-clock timestamps
+        self.metrics = MetricsRegistry(clock=lambda: self.now)
 
     # ------------------------------------------------------------------
     def _push(self, t: float, kind: str, payload=None):
@@ -148,6 +158,7 @@ class Simulator:
                          submit_time=self.now)
         self.tasks[job.jid] = task
         self.sched.submit(task)
+        self.metrics.counter("sim_jobs_submitted_total").inc()
 
     def _start_running(self, st: SimJobState, overhead: float):
         st.run_start = self.now + overhead
@@ -185,6 +196,10 @@ class Simulator:
         self.cluster.release(jid)
         self.sched.task_done(jid)
         self.tasks[jid].state = TaskState.DONE
+        self.metrics.counter("sim_jobs_completed_total").inc()
+        self.metrics.histogram("job_latency_seconds",
+                               window_s=float("inf")).observe(
+            self.now - st.submit_t)
 
     def _on_fail(self, payload):
         jid, epoch = payload
@@ -240,6 +255,13 @@ class Simulator:
                 self.cluster.occupy(a.node, a.tid)
                 self._start_running(
                     st, self._migrate_cost(st) + self._resume_cost(st))
+            self.metrics.counter("sim_actions_total", kind=a.kind).inc()
+        self.metrics.gauge("wait_queue_depth").set(
+            len(self.sched.wait_queue))
+        cap = sum(self.cluster.capacity.values())
+        if cap:
+            self.metrics.gauge("cluster_utilization").set(
+                sum(self.cluster.used.values()) / cap)
 
     # -- reporting ---------------------------------------------------------------
     def _report(self) -> dict:
@@ -266,4 +288,208 @@ class Simulator:
             "evictions": sum(s.evictions for s in self.states.values()),
             "migrations": sum(s.migrations for s in self.states.values()),
             "events": self.events_processed,
+        }
+
+
+# ---------------------------------------------------------------------------
+# Elastic-serving simulation: autoscaler in the loop (Fig 14)
+# ---------------------------------------------------------------------------
+@dataclass
+class ServingParams:
+    provision_delay_s: float = 0.55     # sandbox boot + reconfiguration
+    control_interval_s: float = 1.0     # autoscaler reconcile period
+    slo_latency_s: float = 0.5          # per-request latency SLO
+    hist_window_s: float = 10.0         # signal window for tail latency
+
+
+class ServingSimulator:
+    """Discrete-event M/G/n serving loop with the autoscaler in the loop.
+
+    Requests (from ``repro.scaling.loadgen``) queue FIFO for ``replicas``
+    identical servers.  Every ``control_interval_s`` the ``Autoscaler``
+    reads the canonical service signals from this simulator's virtual-clock
+    ``MetricsRegistry`` — exactly the signals the live orchestrator's
+    reconcile loop reads — and retargets the replica count.  Scale-out pays
+    ``provision_delay_s`` (boot + reconfigure, as measured on the live
+    runtime); scale-in removes idle replicas immediately and drains busy
+    ones at their next request boundary, the paper's request-boundary rule.
+    """
+
+    def __init__(self, requests: List[Request], *,
+                 autoscaler: Optional[Autoscaler] = None,
+                 initial_replicas: int = 1, service: str = "svc",
+                 params: Optional[ServingParams] = None,
+                 closed_gen: Optional[ClosedLoopGen] = None):
+        self.params = params or ServingParams()
+        self.autoscaler = autoscaler
+        self.service = service
+        self.closed_gen = closed_gen
+        self.now = 0.0
+        self.metrics = MetricsRegistry(clock=lambda: self.now)
+        self.active = initial_replicas          # provisioned servers
+        self.provisioning = 0                   # servers booting
+        self._provision_cancel = 0
+        self.draining = 0                       # busy servers to retire
+        self.busy = 0
+        self.queue: deque = deque()
+        self._heap: list = []
+        self._seq = itertools.count()
+        self._pending_arrivals = 0
+        self._latencies: List[float] = []
+        self.violations = 0
+        self.events_processed = 0
+        for r in requests:
+            self._push(r.arrival_t, "arrive", r)
+        self._record_replicas()
+
+    # -- plumbing ----------------------------------------------------------
+    def _push(self, t: float, kind: str, payload=None):
+        if kind == "arrive":
+            self._pending_arrivals += 1
+        heapq.heappush(self._heap, (t, next(self._seq), kind, payload))
+
+    def _work_remains(self) -> bool:
+        return bool(self._pending_arrivals or self.busy or self.queue)
+
+    def _committed(self) -> int:
+        """Replica count once all in-flight transitions settle: booting
+        servers land (minus cancelled boots), draining servers retire."""
+        return (self.active + self.provisioning - self._provision_cancel
+                - self.draining)
+
+    def _record_replicas(self):
+        self.metrics.gauge(M_REPLICAS, service=self.service).set(
+            self._committed())
+        self.metrics.series(M_REPLICAS_SERIES, service=self.service,
+                            capacity=65536).record(self.active)
+
+    def _publish_signals(self):
+        self.metrics.gauge(M_QUEUE_DEPTH, service=self.service).set(
+            len(self.queue))
+        self.metrics.gauge(M_UTILIZATION, service=self.service).set(
+            self.busy / max(self.active, 1))
+        self._record_replicas()
+
+    # -- event handlers ----------------------------------------------------
+    def _dispatch(self):
+        while self.queue and self.busy < self.active:
+            req = self.queue.popleft()
+            self.busy += 1
+            self._push(self.now + req.service_s, "depart", req)
+
+    def _on_arrive(self, req: Request):
+        self._pending_arrivals -= 1
+        self.metrics.counter(M_REQUESTS, service=self.service).inc()
+        self.queue.append(req)
+        self._dispatch()
+
+    def _on_depart(self, req: Request):
+        self.busy -= 1
+        latency = self.now - req.arrival_t
+        self._latencies.append(latency)
+        self.metrics.counter(M_COMPLETIONS, service=self.service).inc()
+        self.metrics.histogram(M_LATENCY, service=self.service,
+                               window_s=self.params.hist_window_s,
+                               ).observe(latency)
+        if latency > self.params.slo_latency_s:
+            self.violations += 1
+            self.metrics.counter(M_SLO_VIOLATIONS,
+                                 service=self.service).inc()
+        if self.closed_gen is not None:
+            nxt = self.closed_gen.on_complete(req, self.now)
+            if nxt is not None:
+                self._push(nxt.arrival_t, "arrive", nxt)
+        if self.draining > 0:
+            # request-boundary decommission of a surplus replica
+            self.draining -= 1
+            self.active -= 1
+            self._record_replicas()
+        else:
+            self._dispatch()
+
+    def _on_provision(self, _):
+        if self._provision_cancel > 0:       # retargeted down mid-boot
+            self._provision_cancel -= 1
+            self.provisioning -= 1
+            return
+        self.provisioning -= 1
+        self.active += 1
+        self._record_replicas()
+        self._dispatch()
+
+    def _scale_towards(self, desired: int):
+        committed = self._committed()
+        if desired > committed:
+            grow = desired - committed
+            # un-drain busy servers first: cheapest capacity there is
+            undrain = min(grow, self.draining)
+            self.draining -= undrain
+            grow -= undrain
+            for _ in range(grow):
+                if self._provision_cancel > 0:
+                    self._provision_cancel -= 1   # revive a cancelled boot
+                else:
+                    self.provisioning += 1
+                    self._push(self.now + self.params.provision_delay_s,
+                               "provision")
+        elif desired < committed:
+            shrink = committed - desired
+            cancel = min(shrink,
+                         self.provisioning - self._provision_cancel)
+            self._provision_cancel += cancel
+            shrink -= cancel
+            idle = max(0, self.active - self.busy)
+            immediate = min(shrink, idle)
+            self.active -= immediate
+            # the rest retire at their next request boundary; committed
+            # already counts existing drains, so this never re-applies an
+            # earlier shrink
+            self.draining += shrink - immediate
+        self._record_replicas()
+
+    def _on_control(self, _):
+        self._publish_signals()
+        if self.autoscaler is not None:
+            signals = signals_from_registry(self.metrics, self.service)
+            desired = self.autoscaler.reconcile(signals, self.now)
+            if desired is not None:
+                self._scale_towards(desired)
+        if self._work_remains():
+            self._push(self.now + self.params.control_interval_s, "control")
+
+    # -- driver ------------------------------------------------------------
+    def run(self) -> dict:
+        self._push(0.0, "control")
+        while self._heap:
+            t, _, kind, payload = heapq.heappop(self._heap)
+            self.now = max(self.now, t)
+            self.events_processed += 1
+            getattr(self, f"_on_{kind}")(payload)
+        return self.report()
+
+    def report(self) -> dict:
+        lat = sorted(self._latencies)
+
+        def q(p):
+            if not lat:
+                return float("nan")
+            return lat[min(len(lat) - 1, int(p * len(lat)))]
+
+        replicas_ts = self.metrics.series(M_REPLICAS_SERIES,
+                                          service=self.service,
+                                          capacity=65536)
+        n = len(lat)
+        return {
+            "completed": n,
+            "slo_attainment": (n - self.violations) / n if n else
+            float("nan"),
+            "mean_latency_s": sum(lat) / n if n else float("nan"),
+            "p50_latency_s": q(0.50),
+            "p95_latency_s": q(0.95),
+            "p99_latency_s": q(0.99),
+            "mean_replicas": replicas_ts.time_weighted_mean(),
+            "max_replicas": max((v for _, v in replicas_ts.points()),
+                                default=self.active),
+            "events": self.events_processed,
+            "horizon_s": self.now,
         }

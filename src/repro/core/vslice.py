@@ -14,7 +14,7 @@ import threading
 from dataclasses import dataclass, field
 from typing import Optional
 
-import jax
+from repro.launch.mesh import compat_make_mesh
 
 
 @dataclass
@@ -37,9 +37,7 @@ class SliceAllocator:
     def __init__(self, node_id: str, num_slices: int,
                  mem_cap_bytes: int = 8 << 30, mesh=None):
         if mesh is None:
-            mesh = jax.make_mesh(
-                (1, 1), ("data", "model"),
-                axis_types=(jax.sharding.AxisType.Auto,) * 2)
+            mesh = compat_make_mesh((1, 1), ("data", "model"))
         self._lock = threading.Lock()
         self.node_id = node_id
         self.slices = [

@@ -26,6 +26,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# older JAX spells pltpu.CompilerParams 'TPUCompilerParams'
+_CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams")
+
 
 def _rglru_kernel(a_ref, b_ref, h_ref, hfin_ref, state_scr, *, bs: int):
     sb = pl.program_id(2)
@@ -78,7 +82,7 @@ def rglru_scan_fwd(a, b, *, bs: int = 256, bw: int = 512,
             jax.ShapeDtypeStruct((B, W), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((1, bw), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(a, b)

@@ -45,9 +45,10 @@ def _default_dp_axes(mesh) -> tuple[str, ...]:
 
 
 def _trivial_mesh():
+    from repro.launch.mesh import compat_make_mesh
+
     n = jax.device_count()
-    return jax.make_mesh((1, n), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return compat_make_mesh((1, n), ("data", "model"))
 
 
 def build_model(cfg: ModelConfig, *, mesh=None, impl: str = "naive",

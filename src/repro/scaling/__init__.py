@@ -1,0 +1,30 @@
+"""Telemetry + SLO-driven workload scaling (paper §3.5 third service).
+
+``metrics``     dependency-free registry shared by live runtime + simulator
+``autoscaler``  scaling policies, hysteresis/cooldown reconciler, live target
+``loadgen``     open/closed-loop traffic (Poisson, diurnal, burst) for
+                elastic-serving scenarios
+``serving``     live-plane drive loop for elastic-serving demos/benchmarks
+"""
+
+from repro.scaling.autoscaler import (Autoscaler, LatencySLOPolicy,
+                                      OrchestratorScaler, QueueLengthPolicy,
+                                      ScalingDecision, ScalingPolicy,
+                                      ScalingSignals, TargetUtilizationPolicy,
+                                      signals_from_registry)
+from repro.scaling.loadgen import (ClosedLoopGen, Request, burst_rate,
+                                   constant_rate, diurnal_rate, open_loop)
+from repro.scaling.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
+                                   TimeSeries, metric_key)
+from repro.scaling.serving import (DriveResult, drive_open_loop,
+                                   teardown_service, wait_for_service)
+
+__all__ = [
+    "Autoscaler", "ClosedLoopGen", "Counter", "DriveResult", "Gauge",
+    "Histogram", "LatencySLOPolicy", "MetricsRegistry", "OrchestratorScaler",
+    "QueueLengthPolicy", "Request", "ScalingDecision", "ScalingPolicy",
+    "ScalingSignals", "TargetUtilizationPolicy", "TimeSeries", "burst_rate",
+    "constant_rate", "diurnal_rate", "drive_open_loop", "metric_key",
+    "open_loop", "signals_from_registry", "teardown_service",
+    "wait_for_service",
+]

@@ -1,0 +1,242 @@
+"""Dependency-free telemetry registry shared by both execution planes.
+
+The live runtime (``Monitor``, ``NodeAgent``, ``Orchestrator``) and the
+discrete-event ``Simulator`` publish into the *same* metric types with the
+*same* naming schema; the only difference is the injected clock — wall time
+for the live plane, the simulator's virtual ``now`` for replayed traces.
+That symmetry is what lets the autoscaler (and Fig 14) run unchanged against
+either plane, mirroring how the paper drives the trace simulator with the
+overheads measured on the live runtime (§5.6).
+
+Types:
+
+* ``Counter``      monotonically increasing float (requests_total, ...)
+* ``Gauge``        last-write-wins float (queue_depth, replicas, ...)
+* ``Histogram``    windowed samples with p50/p95/p99 (request latency)
+* ``TimeSeries``   fixed-capacity ring buffer of (t, value) observations
+
+All metrics are identified by ``name`` plus sorted key=value labels, printed
+Prometheus-style: ``request_latency_seconds{service=svc}``.
+"""
+
+from __future__ import annotations
+
+import math
+import threading
+import time
+from collections import deque
+from typing import Callable, Dict, List, Optional, Tuple
+
+Clock = Callable[[], float]
+
+
+def metric_key(name: str, labels: Dict[str, str]) -> str:
+    if not labels:
+        return name
+    inner = ",".join(f"{k}={labels[k]}" for k in sorted(labels))
+    return f"{name}{{{inner}}}"
+
+
+class Counter:
+    def __init__(self):
+        self.value = 0.0
+        self._lock = threading.Lock()
+
+    def inc(self, amount: float = 1.0):
+        if amount < 0:
+            raise ValueError("counters only go up")
+        with self._lock:
+            self.value += amount
+
+
+class Gauge:
+    def __init__(self):
+        self.value = 0.0
+        self._lock = threading.Lock()
+
+    def set(self, value: float):
+        self.value = float(value)
+
+    def add(self, delta: float):
+        with self._lock:
+            self.value += delta
+
+
+class Histogram:
+    """Sliding-window sample reservoir with exact quantiles.
+
+    Samples older than ``window_s`` (by the registry clock) are evicted
+    lazily on observe/quantile; a bounded ring keeps worst-case memory flat
+    under sustained load. Cumulative count/sum survive eviction so rates can
+    still be derived from snapshots.
+    """
+
+    def __init__(self, clock: Clock, window_s: float = 60.0,
+                 max_samples: int = 4096):
+        self._clock = clock
+        self.window_s = window_s
+        self._samples: deque = deque(maxlen=max_samples)   # (t, value)
+        self.count = 0            # cumulative, never evicted
+        self.sum = 0.0
+        # writers (monitor workers, drive loop) race readers (autoscaler
+        # reconcile thread) on the deque; guard every touch
+        self._lock = threading.Lock()
+
+    def observe(self, value: float):
+        now = self._clock()
+        with self._lock:
+            self.count += 1
+            self.sum += value
+            self._samples.append((now, float(value)))
+            self._prune(now)
+
+    def _prune(self, now: float):
+        cutoff = now - self.window_s
+        while self._samples and self._samples[0][0] < cutoff:
+            self._samples.popleft()
+
+    def window_values(self) -> List[float]:
+        with self._lock:
+            self._prune(self._clock())
+            return [v for _, v in self._samples]
+
+    def quantile(self, q: float) -> float:
+        """Linear-interpolated quantile over the current window; NaN if
+        empty."""
+        vals = sorted(self.window_values())
+        if not vals:
+            return math.nan
+        if len(vals) == 1:
+            return vals[0]
+        pos = q * (len(vals) - 1)
+        lo = int(math.floor(pos))
+        hi = min(lo + 1, len(vals) - 1)
+        frac = pos - lo
+        return vals[lo] * (1 - frac) + vals[hi] * frac
+
+    def summary(self) -> dict:
+        vals = self.window_values()
+        out = {"count": self.count, "sum": self.sum,
+               "window_count": len(vals)}
+        if vals:
+            out.update(mean=sum(vals) / len(vals), max=max(vals),
+                       p50=self.quantile(0.50), p95=self.quantile(0.95),
+                       p99=self.quantile(0.99))
+        else:
+            out.update(mean=math.nan, max=math.nan, p50=math.nan,
+                       p95=math.nan, p99=math.nan)
+        return out
+
+
+class TimeSeries:
+    """Ring buffer of (t, value); oldest points evicted at capacity."""
+
+    def __init__(self, clock: Clock, capacity: int = 1024):
+        self._clock = clock
+        self.capacity = capacity
+        self._points: deque = deque(maxlen=capacity)
+        self._lock = threading.Lock()
+
+    def record(self, value: float, t: Optional[float] = None):
+        with self._lock:
+            self._points.append((self._clock() if t is None else t,
+                                 float(value)))
+
+    def points(self) -> List[Tuple[float, float]]:
+        with self._lock:
+            return list(self._points)
+
+    def window(self, t0: float, t1: float) -> List[Tuple[float, float]]:
+        return [(t, v) for t, v in self.points() if t0 <= t <= t1]
+
+    def __len__(self):
+        return len(self._points)
+
+    def time_weighted_mean(self) -> float:
+        """Mean of a step function sampled at the recorded points."""
+        pts = self.points()
+        if not pts:
+            return math.nan
+        if len(pts) == 1:
+            return pts[0][1]
+        area = 0.0
+        for (t0, v0), (t1, _) in zip(pts, pts[1:]):
+            area += v0 * (t1 - t0)
+        span = pts[-1][0] - pts[0][0]
+        return area / span if span > 0 else pts[-1][1]
+
+
+class MetricsRegistry:
+    """Get-or-create metric store; thread-safe, clock-injectable.
+
+    Live components pass nothing (wall clock); the simulator passes
+    ``clock=lambda: sim.now`` so every sample carries virtual time and the
+    emitted schema is identical across planes.
+    """
+
+    def __init__(self, clock: Optional[Clock] = None):
+        self.clock: Clock = clock or time.time
+        self._lock = threading.Lock()
+        self._counters: Dict[str, Counter] = {}
+        self._gauges: Dict[str, Gauge] = {}
+        self._histograms: Dict[str, Histogram] = {}
+        self._series: Dict[str, TimeSeries] = {}
+
+    # -- get-or-create accessors -------------------------------------------
+    def counter(self, name: str, **labels) -> Counter:
+        key = metric_key(name, labels)
+        with self._lock:
+            if key not in self._counters:
+                self._counters[key] = Counter()
+            return self._counters[key]
+
+    def gauge(self, name: str, **labels) -> Gauge:
+        key = metric_key(name, labels)
+        with self._lock:
+            if key not in self._gauges:
+                self._gauges[key] = Gauge()
+            return self._gauges[key]
+
+    def histogram(self, name: str, window_s: Optional[float] = None,
+                  max_samples: Optional[int] = None, **labels) -> Histogram:
+        """Get-or-create; an explicit ``window_s``/``max_samples`` always
+        wins, so configuration is order-independent — a reader that merely
+        gets the histogram first (e.g. ``signals_from_registry``) cannot
+        pin the defaults."""
+        key = metric_key(name, labels)
+        with self._lock:
+            h = self._histograms.get(key)
+            if h is None:
+                h = Histogram(self.clock,
+                              window_s=60.0 if window_s is None else window_s,
+                              max_samples=max_samples or 4096)
+                self._histograms[key] = h
+            else:
+                if window_s is not None:
+                    h.window_s = window_s
+                if max_samples is not None \
+                        and max_samples != h._samples.maxlen:
+                    with h._lock:
+                        h._samples = deque(h._samples,
+                                           maxlen=max_samples)
+            return h
+
+    def series(self, name: str, capacity: int = 1024, **labels) -> TimeSeries:
+        key = metric_key(name, labels)
+        with self._lock:
+            if key not in self._series:
+                self._series[key] = TimeSeries(self.clock, capacity=capacity)
+            return self._series[key]
+
+    # -- export ------------------------------------------------------------
+    def snapshot(self) -> dict:
+        """One schema for live and simulated runs (ts = injected clock)."""
+        with self._lock:
+            return {
+                "ts": self.clock(),
+                "counters": {k: c.value for k, c in self._counters.items()},
+                "gauges": {k: g.value for k, g in self._gauges.items()},
+                "histograms": {k: h.summary()
+                               for k, h in self._histograms.items()},
+                "series": {k: s.points() for k, s in self._series.items()},
+            }

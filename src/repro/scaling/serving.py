@@ -1,0 +1,120 @@
+"""Live-plane elastic-serving drive loop, shared by
+``examples/elastic_serving.py`` and ``benchmarks/fig14_autoscale.py``.
+
+The guest serve tasks decode continuously; request *termination* is modeled
+here in the load-driver (each RUNNING replica retires ``service_rate``
+requests/s) while every scaling action underneath is the real paper
+machinery — checkpoint-clone replicate and kill+delete through node agents
+and CRI.  The driver publishes the canonical service signals into the
+orchestrator's registry; the orchestrator's autoscaler reconcile thread
+consumes them.  Routing requests through the monitor queue per-request is a
+ROADMAP item.
+"""
+
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass
+from typing import Callable, List, Optional
+
+from repro.scaling.autoscaler import (M_COMPLETIONS, M_LATENCY,
+                                      M_QUEUE_DEPTH, M_REQUESTS,
+                                      M_SLO_VIOLATIONS, M_UTILIZATION)
+from repro.scaling.loadgen import Request
+
+
+@dataclass
+class DriveResult:
+    served: int
+    violations: int
+    max_replicas: int
+
+    @property
+    def attainment(self) -> float:
+        if not self.served:
+            return float("nan")
+        return (self.served - self.violations) / self.served
+
+
+def wait_for_service(cluster, orch, cid: str, timeout_s: float = 120.0,
+                     ) -> str:
+    """Block until the service task is deployed AND its guest finished
+    setup (first step taken); returns the node it landed on."""
+    deadline = time.time() + timeout_s
+    while time.time() < deadline:
+        node = orch._sched_tasks[cid].node_id
+        if node is not None and orch.deployments[cid].status == "running":
+            rec = cluster.nodes[node].runtime.tasks.get(cid)
+            if rec is not None and rec.guest_state.step > 0:
+                return node
+        time.sleep(0.1)
+    raise TimeoutError(f"service {cid} failed to start in {timeout_s}s")
+
+
+def drive_open_loop(orch, scaler, requests: List[Request], *,
+                    duration_s: float, service_rate: float, slo_s: float,
+                    service: str = "svc", latency_window_s: float = 3.0,
+                    tick_s: float = 0.05,
+                    on_tick: Optional[Callable] = None) -> DriveResult:
+    """Replay an open-loop trace against the live cluster in wall time.
+
+    ``on_tick(now, replicas, queue_len, p95)`` fires about once a second
+    for progress reporting.
+    """
+    reg = orch.metrics
+    lat_hist = reg.histogram(M_LATENCY, window_s=latency_window_s,
+                             service=service)
+    pending = deque(sorted(requests, key=lambda r: r.arrival_t))
+    queue: deque = deque()
+    t0 = time.time()
+    served = violations = 0
+    max_replicas = 1
+    last_report = 0.0
+    while True:
+        now = time.time() - t0
+        # drain arrivals before testing the exit so requests landing in
+        # the final tick window are still admitted and counted; arrivals
+        # enter requests_total here (completions at serve time), matching
+        # the simulator's arrival/departure split
+        while pending and pending[0].arrival_t <= now:
+            queue.append(pending.popleft())
+            reg.counter(M_REQUESTS, service=service).inc()
+        if now > duration_s and not pending and not queue:
+            break
+        n_rep = scaler.current_replicas()
+        max_replicas = max(max_replicas, n_rep)
+        capacity = max(1, int(n_rep * service_rate * tick_s))
+        used = 0
+        while queue and used < capacity:
+            r = queue.popleft()
+            used += 1
+            served += 1
+            latency = max(0.0, now - r.arrival_t)
+            lat_hist.observe(latency)
+            reg.counter(M_COMPLETIONS, service=service).inc()
+            if latency > slo_s:
+                violations += 1
+                reg.counter(M_SLO_VIOLATIONS, service=service).inc()
+        reg.gauge(M_QUEUE_DEPTH, service=service).set(len(queue))
+        reg.gauge(M_UTILIZATION, service=service).set(
+            min(1.0, used / max(capacity, 1)))
+        if on_tick is not None and now - last_report >= 1.0:
+            last_report = now
+            on_tick(now, n_rep, len(queue), lat_hist.quantile(0.95))
+        time.sleep(tick_s)
+    return DriveResult(served=served, violations=violations,
+                       max_replicas=max_replicas)
+
+
+def teardown_service(orch, scaler):
+    """Quiesce the reconcile/scheduler threads, converge to one replica
+    (real kill+delete scale-in), then remove whatever is still running."""
+    orch.stop()
+    scaler.scale_to(1)
+    for cid, dep in list(orch.deployments.items()):
+        if dep.status == "running":
+            try:
+                orch.scale_in(cid)
+            except Exception:  # noqa: BLE001 - node may be gone
+                pass

@@ -1,0 +1,217 @@
+"""Workload-scaling service: policies, hysteresis/cooldown, bounds, the
+reconcile contract against a (fake) orchestrator, and the simulator-in-the-
+loop smoke run (Fig 14 machinery)."""
+
+import math
+
+from repro.core.simulator import ServingParams, ServingSimulator
+from repro.scaling import (Autoscaler, LatencySLOPolicy, MetricsRegistry,
+                           QueueLengthPolicy, ScalingSignals,
+                           TargetUtilizationPolicy, burst_rate, open_loop,
+                           signals_from_registry)
+
+
+def sig(replicas=1, util=0.0, queue=0.0, p95=math.nan):
+    return ScalingSignals(replicas=replicas, utilization=util,
+                          queue_depth=queue, p95_latency_s=p95)
+
+
+# ---------------------------------------------------------------------------
+# policies
+# ---------------------------------------------------------------------------
+def test_target_utilization_proportional():
+    p = TargetUtilizationPolicy(target=0.6)
+    assert p.desired_replicas(sig(replicas=4, util=0.9)) == 6
+    assert p.desired_replicas(sig(replicas=4, util=0.3)) == 2
+    # idle with empty queue collapses to 1
+    assert p.desired_replicas(sig(replicas=4, util=0.0)) == 1
+
+
+def test_queue_length_policy():
+    p = QueueLengthPolicy(target_per_replica=2.0)
+    # 9 outstanding / 3-per-replica budget -> 3 replicas
+    assert p.desired_replicas(sig(replicas=2, util=1.0, queue=7.0)) == 3
+    assert p.desired_replicas(sig(replicas=4, util=0.0, queue=0.0)) == 1
+
+
+def test_latency_slo_scale_up_on_spike():
+    p = LatencySLOPolicy(slo_p95_s=0.5, growth=1.5)
+    s = sig(replicas=2, util=1.0, queue=10.0, p95=2.0)
+    assert p.desired_replicas(s) == 3            # ceil(2 * 1.5)
+    # no latency signal yet -> hold
+    assert p.desired_replicas(sig(replicas=2, util=0.9, queue=1.0)) == 2
+
+
+def test_latency_slo_scale_down_needs_headroom_and_idle():
+    p = LatencySLOPolicy(slo_p95_s=1.0, headroom=0.5, idle_utilization=0.5)
+    assert p.desired_replicas(sig(replicas=4, util=0.2, p95=0.1)) == 3
+    # tail fine but still busy -> hold
+    assert p.desired_replicas(sig(replicas=4, util=0.9, p95=0.1)) == 4
+    # queued work -> hold even when idle-ish
+    assert p.desired_replicas(sig(replicas=4, util=0.2, queue=3.0,
+                                  p95=0.1)) == 4
+
+
+# ---------------------------------------------------------------------------
+# reconciler
+# ---------------------------------------------------------------------------
+def test_scale_up_on_load_spike():
+    asc = Autoscaler(LatencySLOPolicy(slo_p95_s=0.5), max_replicas=8)
+    got = asc.reconcile(sig(replicas=2, util=1.0, queue=5.0, p95=3.0),
+                        now=0.0)
+    assert got is not None and got > 2
+
+
+def test_scale_down_only_after_cooldown():
+    asc = Autoscaler(LatencySLOPolicy(slo_p95_s=1.0),
+                     scale_down_cooldown_s=30.0)
+    idle = sig(replicas=4, util=0.1, p95=0.05)
+    assert asc.reconcile(idle, now=0.0) == 3         # first down: free
+    assert asc.reconcile(idle, now=10.0) is None     # inside cooldown
+    assert asc.reconcile(idle, now=31.0) == 3        # cooldown elapsed
+    reasons = [d.reason for d in asc.decisions]
+    assert "down-cooldown" in reasons
+
+
+def test_scale_up_rearms_shrink_guard():
+    """After a burst-driven scale-up, the first shrink must wait out the
+    down-cooldown (anti-flap), instead of firing immediately."""
+    asc = Autoscaler(LatencySLOPolicy(slo_p95_s=0.5),
+                     scale_down_cooldown_s=30.0, max_replicas=8)
+    assert asc.reconcile(sig(replicas=2, util=1.0, queue=9.0, p95=2.0),
+                         now=0.0) == 3             # burst: scale up
+    idle = sig(replicas=3, util=0.1, p95=0.05)
+    assert asc.reconcile(idle, now=5.0) is None    # guard re-armed by up
+    assert asc.reconcile(idle, now=31.0) == 2      # cooldown elapsed
+
+
+def test_scale_up_cooldown():
+    asc = Autoscaler(LatencySLOPolicy(slo_p95_s=0.5),
+                     scale_up_cooldown_s=10.0, max_replicas=16)
+    hot = sig(replicas=2, util=1.0, queue=9.0, p95=2.0)
+    assert asc.reconcile(hot, now=0.0) == 3
+    assert asc.reconcile(sig(replicas=3, util=1.0, queue=9.0, p95=2.0),
+                         now=1.0) is None            # up-cooldown
+    assert asc.reconcile(sig(replicas=3, util=1.0, queue=9.0, p95=2.0),
+                         now=11.0) == 5
+
+
+def test_bounds_never_exceeded():
+    asc = Autoscaler(LatencySLOPolicy(slo_p95_s=0.1), min_replicas=2,
+                     max_replicas=5, scale_down_cooldown_s=0.0)
+    replicas = 2
+    for i in range(20):              # persistent SLO breach
+        got = asc.reconcile(sig(replicas=replicas, util=1.0, queue=50.0,
+                                p95=9.0), now=float(i))
+        if got is not None:
+            replicas = got
+        assert 2 <= replicas <= 5
+    assert replicas == 5
+    # persistent idle never goes below min
+    for i in range(20, 40):
+        got = asc.reconcile(sig(replicas=replicas, util=0.0, p95=0.0),
+                            now=float(i))
+        if got is not None:
+            replicas = got
+        assert replicas >= 2
+
+
+def test_tolerance_dead_band():
+    asc = Autoscaler(TargetUtilizationPolicy(target=0.5), tolerance=0.3,
+                     max_replicas=32)
+    # desired 12 vs current 10: |2|/10 <= 0.3 -> hold
+    assert asc.reconcile(sig(replicas=10, util=0.6), now=0.0) is None
+    # desired 20 vs current 10: outside the band -> act
+    assert asc.reconcile(sig(replicas=10, util=1.0), now=1.0) == 20
+
+
+# ---------------------------------------------------------------------------
+# reconcile contract against a (fake) live orchestrator
+# ---------------------------------------------------------------------------
+class _FakeDep:
+    def __init__(self):
+        self.status = "running"
+
+
+class _FakeOrch:
+    """Duck-typed Orchestrator surface used by OrchestratorScaler."""
+
+    def __init__(self, free_nodes=4):
+        self.metrics = MetricsRegistry()
+        self.deployments = {"svc-base": _FakeDep()}
+        self._free = free_nodes
+        self._n = 0
+        self.removed = []
+
+    def _pick_free_node(self):
+        return f"node{self._free}" if self._free > 0 else None
+
+    def scale_horizontal(self, cid, node):
+        assert self._free > 0
+        self._free -= 1
+        self._n += 1
+        new_cid = f"{cid}-r{self._n}"
+        self.deployments[new_cid] = _FakeDep()
+        return new_cid
+
+    def scale_in(self, cid):
+        self.deployments[cid].status = "removed"
+        self._free += 1
+        self.removed.append(cid)
+
+
+def test_orchestrator_scaler_scale_out_and_in():
+    from repro.scaling.autoscaler import OrchestratorScaler
+
+    orch = _FakeOrch(free_nodes=3)
+    scaler = OrchestratorScaler(orch, "svc-base", service="svc")
+    assert scaler.current_replicas() == 1
+    scaler.scale_to(3)
+    assert scaler.current_replicas() == 3
+    scaler.scale_to(5)                   # only one free slot left
+    assert scaler.current_replicas() == 4
+    scaler.scale_to(1)                   # base is never removed
+    assert scaler.current_replicas() == 1
+    assert len(orch.removed) == 3
+    assert orch.metrics.gauge("replicas", service="svc").value == 1
+
+
+# ---------------------------------------------------------------------------
+# simulator in the loop (Fig 14 smoke)
+# ---------------------------------------------------------------------------
+def test_serving_simulator_autoscaler_smoke():
+    reqs = open_loop(burst_rate(3.0, 6.0, 30.0, 30.0), 90.0, seed=7,
+                     mean_service_s=0.25)
+    params = ServingParams(slo_latency_s=1.0, control_interval_s=1.0)
+
+    fixed = ServingSimulator(reqs, initial_replicas=2, params=params).run()
+
+    asc = Autoscaler(LatencySLOPolicy(slo_p95_s=1.0), min_replicas=1,
+                     max_replicas=10, scale_down_cooldown_s=5.0)
+    elastic = ServingSimulator(
+        reqs, autoscaler=asc, initial_replicas=2, params=params).run()
+
+    assert fixed["completed"] == elastic["completed"] == len(reqs)
+    assert elastic["slo_attainment"] > fixed["slo_attainment"]
+    assert elastic["max_replicas"] <= 10
+    # scaled back down after the burst
+    assert elastic["mean_replicas"] < 10
+    assert any(d.applied for d in asc.decisions)
+
+
+def test_serving_simulator_emits_canonical_schema():
+    reqs = open_loop(burst_rate(2.0, 4.0, 10.0, 10.0), 30.0, seed=3,
+                     mean_service_s=0.2)
+    asc = Autoscaler(TargetUtilizationPolicy(0.6), max_replicas=6)
+    sim = ServingSimulator(reqs, autoscaler=asc, initial_replicas=1)
+    sim.run()
+    snap = sim.metrics.snapshot()
+    assert snap["ts"] == sim.now                       # virtual clock
+    assert snap["counters"]["requests_total{service=svc}"] == len(reqs)
+    assert "queue_depth{service=svc}" in snap["gauges"]
+    assert "utilization{service=svc}" in snap["gauges"]
+    assert "request_latency_seconds{service=svc}" in snap["histograms"]
+    assert "replicas_ts{service=svc}" in snap["series"]
+    # the signal reader the orchestrator uses works against the sim registry
+    s = signals_from_registry(sim.metrics, "svc")
+    assert s.replicas >= 1

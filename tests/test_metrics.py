@@ -1,0 +1,156 @@
+"""Telemetry registry: quantiles, windowing, ring-buffer eviction, and
+simulated-clock injection (live plane and simulator must emit one schema)."""
+
+import math
+
+import pytest
+
+from repro.scaling.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
+                                   TimeSeries, metric_key)
+
+
+class FakeClock:
+    def __init__(self, t=0.0):
+        self.t = t
+
+    def __call__(self):
+        return self.t
+
+
+def test_metric_key_label_ordering():
+    assert metric_key("m", {}) == "m"
+    assert (metric_key("m", {"b": "2", "a": "1"})
+            == metric_key("m", {"a": "1", "b": "2"})
+            == "m{a=1,b=2}")
+
+
+def test_counter_monotonic():
+    c = Counter()
+    c.inc()
+    c.inc(2.5)
+    assert c.value == 3.5
+    with pytest.raises(ValueError):
+        c.inc(-1)
+
+
+def test_gauge_set_add():
+    g = Gauge()
+    g.set(4)
+    g.add(-1.5)
+    assert g.value == 2.5
+
+
+def test_histogram_quantiles():
+    clock = FakeClock()
+    h = Histogram(clock, window_s=60.0)
+    for v in range(1, 101):          # 1..100
+        h.observe(float(v))
+    assert h.count == 100
+    assert abs(h.quantile(0.50) - 50.5) < 1e-9
+    assert abs(h.quantile(0.95) - 95.05) < 1e-9
+    assert abs(h.quantile(0.99) - 99.01) < 1e-9
+    s = h.summary()
+    assert s["max"] == 100.0 and s["window_count"] == 100
+
+
+def test_histogram_window_eviction_keeps_cumulative():
+    clock = FakeClock()
+    h = Histogram(clock, window_s=10.0)
+    h.observe(1000.0)                # at t=0
+    clock.t = 5.0
+    h.observe(1.0)
+    clock.t = 11.0                   # first sample now out of window
+    h.observe(2.0)
+    assert sorted(h.window_values()) == [1.0, 2.0]
+    assert h.count == 3              # cumulative survives eviction
+    assert h.sum == 1003.0
+    clock.t = 100.0
+    assert h.window_values() == []
+    assert math.isnan(h.quantile(0.5))
+
+
+def test_histogram_bounded_memory():
+    clock = FakeClock()
+    h = Histogram(clock, window_s=float("inf"), max_samples=16)
+    for v in range(100):
+        h.observe(float(v))
+    assert len(h.window_values()) == 16          # ring kept newest
+    assert min(h.window_values()) == 84.0
+    assert h.count == 100
+
+
+def test_timeseries_ring_eviction():
+    clock = FakeClock()
+    ts = TimeSeries(clock, capacity=4)
+    for i in range(10):
+        clock.t = float(i)
+        ts.record(i * 10.0)
+    assert len(ts) == 4
+    assert ts.points() == [(6.0, 60.0), (7.0, 70.0), (8.0, 80.0),
+                           (9.0, 90.0)]
+    assert ts.window(7.0, 8.5) == [(7.0, 70.0), (8.0, 80.0)]
+
+
+def test_timeseries_time_weighted_mean():
+    clock = FakeClock()
+    ts = TimeSeries(clock, capacity=16)
+    ts.record(2.0, t=0.0)
+    ts.record(4.0, t=10.0)           # 2 held for 10s
+    ts.record(4.0, t=20.0)           # 4 held for 10s
+    assert abs(ts.time_weighted_mean() - 3.0) < 1e-9
+
+
+def test_histogram_window_override_is_order_independent():
+    """A reader that merely gets the histogram first (signals path) must
+    not pin the window; the writer's explicit window_s always wins."""
+    clock = FakeClock()
+    reg = MetricsRegistry(clock=clock)
+    reader = reg.histogram("request_latency_seconds", service="svc")
+    assert reader.window_s == 60.0                 # default on create
+    writer = reg.histogram("request_latency_seconds", window_s=10.0,
+                           service="svc")
+    assert writer is reader and reader.window_s == 10.0
+    writer.observe(1.0)
+    clock.t = 11.0
+    assert writer.window_values() == []            # 10s window in force
+
+
+def test_registry_get_or_create_identity():
+    reg = MetricsRegistry()
+    a = reg.counter("x_total", service="a")
+    b = reg.counter("x_total", service="a")
+    c = reg.counter("x_total", service="b")
+    assert a is b and a is not c
+
+
+def test_simulated_clock_injection():
+    """Samples must carry the injected (virtual) clock, not wall time."""
+    sim = {"now": 0.0}
+    reg = MetricsRegistry(clock=lambda: sim["now"])
+    h = reg.histogram("request_latency_seconds", window_s=5.0, service="svc")
+    ts = reg.series("replicas_ts", service="svc")
+    sim["now"] = 100.0
+    h.observe(0.3)
+    ts.record(2)
+    sim["now"] = 104.0
+    assert h.window_values() == [0.3]
+    sim["now"] = 106.0               # window measured in virtual time
+    assert h.window_values() == []
+    assert ts.points() == [(100.0, 2.0)]
+    snap = reg.snapshot()
+    assert snap["ts"] == 106.0
+
+
+def test_snapshot_schema():
+    reg = MetricsRegistry(clock=FakeClock(7.0))
+    reg.counter("requests_total", service="svc").inc()
+    reg.gauge("queue_depth", service="svc").set(3)
+    reg.histogram("request_latency_seconds", service="svc").observe(0.1)
+    reg.series("replicas_ts", service="svc").record(1)
+    snap = reg.snapshot()
+    assert set(snap) == {"ts", "counters", "gauges", "histograms", "series"}
+    assert snap["counters"]["requests_total{service=svc}"] == 1.0
+    assert snap["gauges"]["queue_depth{service=svc}"] == 3.0
+    hist = snap["histograms"]["request_latency_seconds{service=svc}"]
+    assert {"count", "p50", "p95", "p99", "mean", "max"} <= set(hist)
+    assert snap["series"]["replicas_ts{service=svc}"] == [(7.0, 1.0)]
