@@ -27,6 +27,7 @@ MODULES = [
     "fig12_fault_tolerance",
     "fig13_sched_policies",
     "fig14_autoscale",
+    "fig15_serving",
 ]
 
 

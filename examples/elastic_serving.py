@@ -1,12 +1,16 @@
 """Elastic serving, end to end (paper §3.5 workload scaling, grown up).
 
-A live serving task is driven by a bursty open-loop trace.  The load
-driver publishes the canonical service signals (queue depth, utilization,
-request latency) into the cluster's telemetry registry; the orchestrator's
-autoscaler reconcile thread reads them, and scales the service out
-(checkpoint-clone replicate onto a node with free vSlices) and back in
-(kill + delete) through node agents -> CRI.  The same policy object drives
-the trace simulator in benchmarks/fig14_autoscale.py.
+A live serving *service* is driven by a bursty open-loop trace on the
+per-request path: arrivals land on the service's ``RequestRouter``; every
+replica is an ``EngineServeTask`` — a continuous-batching engine that pulls
+admissible requests into its decode slots and dispatches each iteration as
+an EXECUTE request through its monitor, so request termination (and every
+TTFT/TBT/latency sample) is measured on-device.  The orchestrator's
+autoscaler reconcile thread reads the canonical service signals from the
+cluster's telemetry registry and scales the service out (checkpoint-clone
+replicate onto a node with free vSlices) and back in (kill + delete, with
+in-flight sequences requeued) through node agents -> CRI.  The same policy
+object drives the trace simulator in benchmarks/fig14_autoscale.py.
 
     PYTHONPATH=src python examples/elastic_serving.py
 """
@@ -18,15 +22,21 @@ sys.path.insert(0, "src")
 
 from repro.core import TaskImage, make_cluster              # noqa: E402
 from repro.scaling import (Autoscaler, LatencySLOPolicy,    # noqa: E402
-                           OrchestratorScaler, burst_rate, drive_open_loop,
-                           open_loop, teardown_service, wait_for_service)
+                           OrchestratorScaler, burst_rate,
+                           drive_engine_open_loop, open_loop, reset_router,
+                           teardown_service, wait_for_service)
 
-IMAGE = TaskImage(name="svc", kind="serve", arch="yi-9b-smoke",
-                  prompt_len=16, global_batch=2, total_steps=100000,
-                  tokens_per_step=2)
+SLOTS = 2
+TOKENS_RANGE = (3, 9)
+IMAGE = TaskImage(name="svc", kind="engine-serve", arch="yi-9b-smoke",
+                  prompt_len=8, global_batch=SLOTS, total_steps=10 ** 9,
+                  max_new_tokens=TOKENS_RANGE[1])
 
 SLO_S = 1.0
-SERVICE_RATE = 40.0      # requests/s one replica can terminate
+# a 2-slot smoke replica terminates roughly 300 req/s of (3,9)-token
+# requests; the 6x burst pushes the offered rate past that so the
+# latency-SLO policy has something to do
+REQUEST_RATE = 75.0      # base req/s knob (burst = 3.6x this)
 DURATION_S = 9.0
 
 
@@ -34,12 +44,15 @@ def main():
     cluster = make_cluster(num_nodes=4, slices_per_node=1,
                            images={"svc": IMAGE})
     orch = cluster.orchestrator
+    router = reset_router("svc")
+    router.registry = orch.metrics
 
     cid = orch.submit("svc", priority=5)
     orch.start(tick_interval=0.02)
     print("waiting for the service task to boot (program compilation)...")
     node = wait_for_service(cluster, orch, cid)
-    print(f"  {cid} serving on {node}")
+    print(f"  {cid} serving on {node} "
+          f"({SLOTS} decode slots, continuous batching)")
 
     scaler = OrchestratorScaler(orch, cid, service="svc")
     autoscaler = Autoscaler(LatencySLOPolicy(slo_p95_s=0.6, growth=2.0),
@@ -51,8 +64,9 @@ def main():
 
     # bursty open-loop traffic; the middle third runs at 6x the base rate
     reqs = open_loop(
-        burst_rate(0.6 * SERVICE_RATE, 6.0, DURATION_S / 3, DURATION_S / 3),
-        DURATION_S, seed=7, mean_service_s=1.0 / SERVICE_RATE)
+        burst_rate(0.6 * REQUEST_RATE, 6.0, DURATION_S / 3, DURATION_S / 3),
+        DURATION_S, seed=7, mean_service_s=1.0 / REQUEST_RATE,
+        tokens_range=TOKENS_RANGE)
     print(f"replaying {len(reqs)} requests over {DURATION_S:.0f}s "
           f"(burst in the middle third)...")
 
@@ -60,13 +74,14 @@ def main():
         print(f"  t={now:4.1f}s replicas={replicas} queue={queue_len:4d} "
               f"p95={p95 if p95 == p95 else 0:.2f}s")
 
-    res = drive_open_loop(orch, scaler, reqs, duration_s=DURATION_S,
-                          service_rate=SERVICE_RATE, slo_s=SLO_S,
-                          service="svc", on_tick=report)
+    res = drive_engine_open_loop(
+        orch, scaler, reqs, duration_s=DURATION_S, slo_s=SLO_S,
+        service="svc", prompt_len=IMAGE.prompt_len,
+        slots_per_replica=SLOTS, drain_timeout_s=20.0, on_tick=report)
 
     print("burst over; stopping the reconcile loop and draining to 1...")
     teardown_service(orch, scaler)
-    print(f"served {res.served} requests, "
+    print(f"served {res.served} requests on-device, "
           f"SLO attainment {res.attainment:.3f}")
     print("scaling events:",
           [e[1] for e in orch.events if e[1] in ("replicate", "scale_in",
@@ -75,8 +90,18 @@ def main():
     print("telemetry counters:", {k: int(v)
                                   for k, v in snap["counters"].items()
                                   if "{service=svc}" in k})
+    for name in ("request_ttft_seconds", "request_tbt_seconds",
+                 "request_latency_seconds"):
+        h = snap["histograms"].get(f"{name}{{service=svc}}")
+        if h and h["window_count"]:
+            print(f"  {name}: n={h['count']} p50={h['p50'] * 1e3:.1f}ms "
+                  f"p99={h['p99'] * 1e3:.1f}ms")
+        elif h:
+            print(f"  {name}: n={h['count']} (window drained)")
     for d in autoscaler.decisions[-5:]:
         print(f"  decision {d.current}->{d.desired} ({d.reason})")
+    print("flight recorder tail:",
+          [e[1] for e in cluster.metrics.flight_record()["events"][-8:]])
     cluster.stop()
     sys.stdout.flush()
     # XLA worker threads of killed guest tasks can abort CPython teardown

@@ -13,12 +13,14 @@ from repro.core.scheduler import (Action, FunkyScheduler, Policy, SchedTask,
                                   TaskState)
 from repro.core.state import (Buffer, BufferState, BufferTable, GuestState,
                               TaskSnapshot, tree_bytes)
-from repro.core.tasks import GuestTask, ServeTask, TaskImage, TrainTask
+from repro.core.tasks import (EngineServeTask, GuestTask, ServeTask,
+                              TaskImage, TrainTask)
 from repro.core.vslice import SliceAllocator, VSlice
 
 __all__ = [
     "Action", "Buffer", "BufferState", "BufferTable", "Cluster", "Completion",
-    "DeviceMemoryExceeded", "Direction", "FunkyCL", "FunkyRequest",
+    "DeviceMemoryExceeded", "Direction", "EngineServeTask", "FunkyCL",
+    "FunkyRequest",
     "FunkyRuntime", "FunkyScheduler", "GuestState", "GuestTask", "Monitor",
     "MonitorError", "MonitorState", "Node", "NoSliceAvailable", "Policy",
     "Program", "ProgramCache", "RequestKind", "SchedTask", "ServeTask",

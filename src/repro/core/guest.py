@@ -81,13 +81,17 @@ class FunkyCL:
     # ------------------------------------------------------------------
     def clEnqueueKernel(self, program_id: str, in_buffs: Sequence[str],
                         out_buffs: Sequence[str],
-                        const_args: tuple = ()) -> Completion:
+                        const_args: tuple = (),
+                        donate: bool = False) -> Completion:
         """Async kernel launch; kernel args travel with the EXECUTE request
-        (clSetKernelArg coalescing, paper §4)."""
+        (clSetKernelArg coalescing, paper §4).  ``donate=True`` donates
+        inputs that are also outputs (in-place update, no device copy) —
+        register the program with matching donate_argnums to avoid a
+        recompile on first use."""
         req = FunkyRequest(
             kind=RequestKind.EXECUTE, program_id=program_id,
             in_buffs=tuple(in_buffs), out_buffs=tuple(out_buffs),
-            const_args=tuple(const_args))
+            const_args=tuple(const_args), donate=donate)
         return self._track(self._monitor.submit(req))
 
     def clFinish(self) -> None:

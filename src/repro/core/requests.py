@@ -95,7 +95,11 @@ class FunkyRequest:
     in_buffs: tuple = ()
     out_buffs: tuple = ()
     const_args: tuple = ()              # small scalars passed by value
-    donate: bool = True                 # donate inputs that are also outputs
+    # opt-in: donate inputs that are also outputs, so in-place updates
+    # (KV caches, decode state) don't copy the buffer every step.  The
+    # program must have been registered with matching donate_argnums or
+    # the first EXECUTE pays a recompile.
+    donate: bool = False
 
     # SYNC
     upto_req_id: Optional[int] = None   # None = all outstanding

@@ -163,6 +163,10 @@ class FunkyRuntime:
             rec.driver.join(timeout=30)
         if rec.monitor.state in (MonitorState.RUNNING,):
             rec.monitor.vfpga_exit()
+        try:
+            rec.task.on_kill()
+        except Exception:  # noqa: BLE001 - best-effort cleanup hook
+            pass
         rec.status = TaskStatus.REMOVED
         rec.log("kill")
 

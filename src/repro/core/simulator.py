@@ -302,6 +302,23 @@ class ServingParams:
     hist_window_s: float = 10.0         # signal window for tail latency
 
 
+def engine_service_model(ttft_s: float, tbt_s: float,
+                         default_tokens: int = 8):
+    """Service-time function from engine-reported latencies.
+
+    ``ttft_s``/``tbt_s`` come from the live engine's ``request_ttft_seconds``
+    / ``request_tbt_seconds`` histograms, so the simulator's SLO attainment
+    is grounded in on-device measurements (the paper's §5.6 methodology:
+    overheads measured live, replayed at trace scale) instead of an assumed
+    exponential service time.  Requests carrying ``n_tokens`` get
+    ``ttft + (n-1) * tbt``; others fall back to ``default_tokens``.
+    """
+    def service_time(req: Request) -> float:
+        n = req.n_tokens if getattr(req, "n_tokens", None) else default_tokens
+        return ttft_s + max(0, n - 1) * tbt_s
+    return service_time
+
+
 class ServingSimulator:
     """Discrete-event M/G/n serving loop with the autoscaler in the loop.
 
@@ -319,11 +336,15 @@ class ServingSimulator:
                  autoscaler: Optional[Autoscaler] = None,
                  initial_replicas: int = 1, service: str = "svc",
                  params: Optional[ServingParams] = None,
-                 closed_gen: Optional[ClosedLoopGen] = None):
+                 closed_gen: Optional[ClosedLoopGen] = None,
+                 service_time_fn=None):
         self.params = params or ServingParams()
         self.autoscaler = autoscaler
         self.service = service
         self.closed_gen = closed_gen
+        # default: the trace's pre-drawn exponential demand; engine-served
+        # figures pass engine_service_model(...) instead
+        self._service_time = service_time_fn or (lambda r: r.service_s)
         self.now = 0.0
         self.metrics = MetricsRegistry(clock=lambda: self.now)
         self.active = initial_replicas          # provisioned servers
@@ -375,7 +396,7 @@ class ServingSimulator:
         while self.queue and self.busy < self.active:
             req = self.queue.popleft()
             self.busy += 1
-            self._push(self.now + req.service_s, "depart", req)
+            self._push(self.now + self._service_time(req), "depart", req)
 
     def _on_arrive(self, req: Request):
         self._pending_arrivals -= 1

@@ -44,6 +44,20 @@ def to_host(tree: Any) -> Any:
     return jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
 
 
+def same_avals(a: Any, b: Any) -> bool:
+    """True when two pytrees have identical structure and leaf shape/dtype
+    (values ignored) — the invariant the monitor's execute-signature cache
+    keys on."""
+    if a is None or b is None:
+        return False
+    if jax.tree.structure(a) != jax.tree.structure(b):
+        return False
+    return all(
+        getattr(x, "shape", None) == getattr(y, "shape", None)
+        and getattr(x, "dtype", None) == getattr(y, "dtype", None)
+        for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
 @dataclass
 class Buffer:
     buff_id: str
@@ -53,6 +67,7 @@ class Buffer:
     host_value: Any = None              # pytree of numpy arrays (or None)
     nbytes: int = 0
     version: int = 0                    # bumped on every device-side write
+    spec_token: int = 0                 # bumped only when shapes may change
 
     def __post_init__(self):
         if not self.nbytes:
@@ -64,6 +79,9 @@ class BufferTable:
 
     def __init__(self):
         self._buffers: Dict[str, Buffer] = {}
+        # buffers written (h2d or execute) since the last SYNC drain; the
+        # monitor's SYNC blocks on exactly these instead of the whole table
+        self._unsynced: set = set()
 
     # -- registry -------------------------------------------------------------
     def register(self, buff_id: str, spec: Any) -> Buffer:
@@ -88,11 +106,16 @@ class BufferTable:
     # -- transitions ----------------------------------------------------------
     def on_h2d(self, buff_id: str, host_value: Any, device_value: Any):
         b = self.get(buff_id)
+        # same-shaped overwrites (streamed prompts/batches) keep the spec
+        # token so downstream execute-signature cache entries stay warm
+        if not same_avals(b.device_value, device_value):
+            b.spec_token += 1
         b.host_value = host_value
         b.device_value = device_value
         b.state = BufferState.SYNC
         b.nbytes = tree_bytes(device_value)
         b.version += 1
+        self._unsynced.add(buff_id)
 
     def on_d2h(self, buff_id: str) -> Any:
         b = self.get(buff_id)
@@ -100,12 +123,30 @@ class BufferTable:
         b.state = BufferState.SYNC
         return b.host_value
 
-    def on_execute_write(self, buff_id: str, device_value: Any):
+    def on_execute_write(self, buff_id: str, device_value: Any,
+                         stable: bool = False):
+        """``stable=True`` marks a write whose shapes are known to match the
+        previous contents (same compiled program, same signature): the
+        per-leaf byte walk is skipped and the spec token is preserved, so
+        the monitor's execute-signature cache stays valid."""
         b = self.get(buff_id)
         b.device_value = device_value
         b.state = BufferState.DIRTY
-        b.nbytes = tree_bytes(device_value)
+        if not stable:
+            b.nbytes = tree_bytes(device_value)
+            b.spec_token += 1
         b.version += 1
+        self._unsynced.add(buff_id)
+
+    # -- sync tracking --------------------------------------------------------
+    def take_unsynced(self) -> list:
+        """Ids written since the last drain; clears the pending set."""
+        out = list(self._unsynced)
+        self._unsynced.clear()
+        return out
+
+    def unsynced_count(self) -> int:
+        return len(self._unsynced)
 
     # -- evict / restore --------------------------------------------------------
     def dirty_ids(self):
@@ -127,6 +168,7 @@ class BufferTable:
             else:
                 skipped += b.nbytes
             b.device_value = None
+        self._unsynced.clear()          # every device ref was just dropped
         return {"saved_bytes": saved, "skipped_bytes": skipped,
                 "n_dirty": n_dirty}
 
@@ -139,6 +181,7 @@ class BufferTable:
                 b.device_value = put(b.host_value)
                 b.state = BufferState.SYNC
                 restored += b.nbytes
+                self._unsynced.add(b.buff_id)   # device_put is async
         return {"restored_bytes": restored}
 
     def host_snapshot(self) -> dict:
@@ -172,6 +215,7 @@ class BufferTable:
     def zero_and_clear(self):
         """Release everything (monitor zeroes freed device memory, §3.4)."""
         self._buffers.clear()
+        self._unsynced.clear()
 
 
 @dataclass

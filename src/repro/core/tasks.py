@@ -14,6 +14,7 @@ EXECUTE, so preemption waits at most one microbatch (Fig 9).
 
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
 from typing import Any, Optional
 
@@ -34,7 +35,7 @@ class TaskImage:
     """The "OCI image" of a task: guest binary + config (+ bitstreams)."""
 
     name: str
-    kind: str                       # train | serve
+    kind: str                       # train | serve | engine-serve
     arch: str = "yi-9b-smoke"
     seq_len: int = 32
     global_batch: int = 4
@@ -42,6 +43,7 @@ class TaskImage:
     chunks: int = 2                 # microbatches per step (request splitting)
     tokens_per_step: int = 4        # serve: decode tokens per step() call
     prompt_len: int = 16
+    max_new_tokens: int = 8         # engine-serve: per-request cap
     seed: int = 0
     opt: OptConfig = field(default_factory=lambda: OptConfig(
         warmup_steps=2, decay_steps=100))
@@ -51,6 +53,8 @@ class TaskImage:
             return TrainTask(self)
         if self.kind == "serve":
             return ServeTask(self)
+        if self.kind == "engine-serve":
+            return EngineServeTask(self)
         raise ValueError(self.kind)
 
 
@@ -69,6 +73,10 @@ class GuestTask:
 
     def on_update(self, vfpga_num: int) -> None:
         """Vertical-scaling hook (paper `update` command)."""
+
+    def on_kill(self) -> None:
+        """Forced-removal hook (scale-in / node drain): release any work
+        the task holds that outlives it (e.g. requeue in-flight requests)."""
 
 
 class TrainTask(GuestTask):
@@ -249,3 +257,62 @@ class ServeTask(GuestTask):
         gs.user["last_token"] = cl.read_buffer("token").tolist()
         for pid in ("init_params", "prefill", "decode"):
             cl.clReleaseProgram(pid)
+
+
+class EngineServeTask(GuestTask):
+    """Per-request serving replica: a continuous-batching engine pulling
+    admissible requests from the service's ``RequestRouter`` and pushing
+    engine-reported completions back.
+
+    One ``step()`` = one engine iteration (admissions + one vmapped decode
+    EXECUTE), so orchestration commands land between iterations and the
+    whole in-flight batch is preemptible at token boundaries.  The task
+    finishes when the router is closed and every lane has drained; a
+    replicate-clone starts with empty lanes (the source keeps its own
+    in-flight sequences) and immediately joins the admission pool.
+    """
+
+    def __init__(self, image: TaskImage):
+        self.image = image
+        self._engine = None
+
+    def setup(self, cl: FunkyCL, gs: GuestState, restore: bool) -> None:
+        from repro.scaling.serving import get_router
+        from repro.serve.engine import ContinuousBatchingEngine
+
+        im = self.image
+        self._router = get_router(im.name,
+                                  registry=cl._monitor.telemetry)
+        self._engine = ContinuousBatchingEngine(
+            im.arch, cl, slots=im.global_batch, prompt_len=im.prompt_len,
+            max_new_tokens=im.max_new_tokens, service=im.name,
+            engine_id=cl._monitor.task_id, seed=im.seed)
+        self._engine.setup(restore=restore)
+
+    def step(self, cl: FunkyCL, gs: GuestState) -> bool:
+        moved = self._engine.pump(self._router)
+        gs.step += 1
+        if not moved:
+            if self._router.closed:
+                return True
+            time.sleep(0.002)            # idle poll; don't spin the monitor
+        return gs.step >= self.image.total_steps
+
+    def teardown(self, cl: FunkyCL, gs: GuestState) -> None:
+        gs.user["completed"] = len(self._engine.completed)
+        for pid in ("init_params", "init_slots", "prefill_one",
+                    "admit_slot", "decode_step"):
+            cl.clReleaseProgram(pid)
+
+    def on_kill(self) -> None:
+        # scale-in removed this replica: report anything already finished,
+        # then hand un-finished sequences back to the router so another
+        # replica re-serves them (greedy decode is deterministic — the
+        # client sees the same tokens again)
+        if self._engine is None:
+            return
+        for rec in self._engine.drain_completions():
+            self._router.complete(rec)
+        reqs = self._engine.evacuate()
+        if reqs:
+            self._router.requeue(reqs)

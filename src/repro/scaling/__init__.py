@@ -16,15 +16,19 @@ from repro.scaling.loadgen import (ClosedLoopGen, Request, burst_rate,
                                    constant_rate, diurnal_rate, open_loop)
 from repro.scaling.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
                                    TimeSeries, metric_key)
-from repro.scaling.serving import (DriveResult, drive_open_loop,
+from repro.scaling.serving import (DriveResult, RequestRouter,
+                                   drive_engine_open_loop, drive_open_loop,
+                                   get_router, reset_router,
                                    teardown_service, wait_for_service)
 
 __all__ = [
     "Autoscaler", "ClosedLoopGen", "Counter", "DriveResult", "Gauge",
     "Histogram", "LatencySLOPolicy", "MetricsRegistry", "OrchestratorScaler",
-    "QueueLengthPolicy", "Request", "ScalingDecision", "ScalingPolicy",
+    "QueueLengthPolicy", "Request", "RequestRouter", "ScalingDecision",
+    "ScalingPolicy",
     "ScalingSignals", "TargetUtilizationPolicy", "TimeSeries", "burst_rate",
-    "constant_rate", "diurnal_rate", "drive_open_loop", "metric_key",
-    "open_loop", "signals_from_registry", "teardown_service",
-    "wait_for_service",
+    "constant_rate", "diurnal_rate", "drive_engine_open_loop",
+    "drive_open_loop", "get_router", "metric_key",
+    "open_loop", "reset_router", "signals_from_registry",
+    "teardown_service", "wait_for_service",
 ]

@@ -32,6 +32,7 @@ class Request:
     arrival_t: float                # seconds from trace start
     service_s: float                # work one replica needs to serve it
     client: Optional[int] = None    # closed-loop issuer
+    n_tokens: Optional[int] = None  # generation length (engine-served runs)
 
 
 # ---------------------------------------------------------------------------
@@ -64,8 +65,13 @@ def burst_rate(base: float, burst_mult: float, burst_start: float,
 # ---------------------------------------------------------------------------
 def open_loop(rate_fn: RateFn, horizon_s: float, *, seed: int = 0,
               mean_service_s: float = 0.2,
+              tokens_range: Optional[tuple] = None,
               rate_cap: Optional[float] = None) -> List[Request]:
-    """Sample a non-homogeneous Poisson arrival stream by thinning."""
+    """Sample a non-homogeneous Poisson arrival stream by thinning.
+
+    ``tokens_range=(lo, hi)`` additionally draws a ragged generation
+    length per request (uniform ints) for engine-served runs.
+    """
     rng = np.random.Generator(np.random.Philox(seed))
     if rate_cap is None:
         # conservative envelope for the thinning proposal
@@ -81,7 +87,9 @@ def open_loop(rate_fn: RateFn, horizon_s: float, *, seed: int = 0,
         if rng.uniform() * rate_cap <= rate_fn(t):
             out.append(Request(
                 rid=f"req-{i:06d}", arrival_t=t,
-                service_s=float(rng.exponential(mean_service_s))))
+                service_s=float(rng.exponential(mean_service_s)),
+                n_tokens=(None if tokens_range is None
+                          else int(rng.integers(*tokens_range)))))
             i += 1
     return out
 

@@ -174,13 +174,23 @@ class MetricsRegistry:
     emitted schema is identical across planes.
     """
 
-    def __init__(self, clock: Optional[Clock] = None):
+    def __init__(self, clock: Optional[Clock] = None,
+                 flight_capacity: int = 4096):
         self.clock: Clock = clock or time.time
         self._lock = threading.Lock()
         self._counters: Dict[str, Counter] = {}
         self._gauges: Dict[str, Gauge] = {}
         self._histograms: Dict[str, Histogram] = {}
         self._series: Dict[str, TimeSeries] = {}
+        # key -> (bare name, sorted label items); lets the Prometheus
+        # exporter re-quote labels without parsing flattened keys
+        self._meta: Dict[str, Tuple[str, Tuple[Tuple[str, str], ...]]] = {}
+        # flight recorder: bounded ring of notable events (admissions,
+        # retirements, evictions, scaling actions) for post-mortem dumps
+        self._events: deque = deque(maxlen=flight_capacity)
+
+    def _remember(self, key: str, name: str, labels: Dict[str, str]):
+        self._meta[key] = (name, tuple(sorted(labels.items())))
 
     # -- get-or-create accessors -------------------------------------------
     def counter(self, name: str, **labels) -> Counter:
@@ -188,6 +198,7 @@ class MetricsRegistry:
         with self._lock:
             if key not in self._counters:
                 self._counters[key] = Counter()
+                self._remember(key, name, labels)
             return self._counters[key]
 
     def gauge(self, name: str, **labels) -> Gauge:
@@ -195,6 +206,7 @@ class MetricsRegistry:
         with self._lock:
             if key not in self._gauges:
                 self._gauges[key] = Gauge()
+                self._remember(key, name, labels)
             return self._gauges[key]
 
     def histogram(self, name: str, window_s: Optional[float] = None,
@@ -211,6 +223,7 @@ class MetricsRegistry:
                               window_s=60.0 if window_s is None else window_s,
                               max_samples=max_samples or 4096)
                 self._histograms[key] = h
+                self._remember(key, name, labels)
             else:
                 if window_s is not None:
                     h.window_s = window_s
@@ -226,9 +239,86 @@ class MetricsRegistry:
         with self._lock:
             if key not in self._series:
                 self._series[key] = TimeSeries(self.clock, capacity=capacity)
+                self._remember(key, name, labels)
             return self._series[key]
 
+    # -- flight recorder ----------------------------------------------------
+    def record_event(self, kind: str, **fields):
+        """Append a (t, kind, fields) event to the post-mortem ring buffer.
+        Not for per-token hot paths — admissions, retirements, evictions,
+        scaling decisions and the like."""
+        with self._lock:
+            self._events.append((self.clock(), kind, fields))
+
+    def flight_record(self, series_tail: int = 64) -> dict:
+        """Post-mortem dump: the event ring plus the tail of every time
+        series — everything needed to reconstruct 'what just happened'
+        after an SLO blowup, without scraping histories elsewhere."""
+        with self._lock:
+            events = list(self._events)
+            series = {k: s.points()[-series_tail:]
+                      for k, s in self._series.items()}
+        return {"ts": self.clock(), "events": events,
+                "series_tail": series}
+
     # -- export ------------------------------------------------------------
+    @staticmethod
+    def _prom_quote(items: Tuple[Tuple[str, str], ...]) -> str:
+        """Prometheus-quoted label string (escaped backslash/quote/newline)."""
+        if not items:
+            return ""
+        def esc(v) -> str:
+            return (str(v).replace("\\", "\\\\").replace('"', '\\"')
+                    .replace("\n", "\\n"))
+        return "{" + ",".join(f'{k}="{esc(v)}"' for k, v in items) + "}"
+
+    def to_prometheus_text(self) -> str:
+        """Prometheus exposition format (text/plain; version 0.0.4).
+
+        Counters and gauges map directly; histograms are exported as
+        summaries (windowed quantiles + cumulative _sum/_count).  Samples
+        are grouped per metric family (one # TYPE header, contiguous
+        lines), as strict parsers require.  Time series are post-mortem
+        artifacts and are served by ``flight_record`` instead."""
+        with self._lock:
+            counters = list(self._counters.items())
+            gauges = list(self._gauges.items())
+            hists = list(self._histograms.items())
+            meta = dict(self._meta)
+
+        families: Dict[str, List[str]] = {}
+        order: List[Tuple[str, str]] = []    # (name, kind) in first-seen order
+
+        def family(key: str, kind: str) -> Tuple[str, List[str], tuple]:
+            name, items = meta.get(key, (key, ()))
+            if name not in families:
+                families[name] = []
+                order.append((name, kind))
+            return name, families[name], items
+
+        for key, c in counters:
+            name, fam, items = family(key, "counter")
+            fam.append(f"{name}{self._prom_quote(items)} {c.value:g}")
+        for key, g in gauges:
+            name, fam, items = family(key, "gauge")
+            fam.append(f"{name}{self._prom_quote(items)} {g.value:g}")
+        for key, h in hists:
+            name, fam, items = family(key, "summary")
+            for q in (0.5, 0.95, 0.99):
+                v = h.quantile(q)
+                lab = self._prom_quote(items + (("quantile", f"{q:g}"),))
+                fam.append(f"{name}{lab} "
+                           f"{'NaN' if math.isnan(v) else f'{v:g}'}")
+            lab = self._prom_quote(items)
+            fam.append(f"{name}_sum{lab} {h.sum:g}")
+            fam.append(f"{name}_count{lab} {h.count:g}")
+
+        lines: List[str] = []
+        for name, kind in order:
+            lines.append(f"# TYPE {name} {kind}")
+            lines.extend(families[name])
+        return "\n".join(lines) + "\n"
+
     def snapshot(self) -> dict:
         """One schema for live and simulated runs (ts = injected clock)."""
         with self._lock:

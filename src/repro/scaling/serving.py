@@ -1,22 +1,34 @@
-"""Live-plane elastic-serving drive loop, shared by
+"""Live-plane elastic-serving drive loops, shared by
 ``examples/elastic_serving.py`` and ``benchmarks/fig14_autoscale.py``.
 
-The guest serve tasks decode continuously; request *termination* is modeled
-here in the load-driver (each RUNNING replica retires ``service_rate``
-requests/s) while every scaling action underneath is the real paper
-machinery — checkpoint-clone replicate and kill+delete through node agents
-and CRI.  The driver publishes the canonical service signals into the
-orchestrator's registry; the orchestrator's autoscaler reconcile thread
-consumes them.  Routing requests through the monitor queue per-request is a
-ROADMAP item.
+Two drivers:
+
+* ``drive_engine_open_loop`` — the per-request serving path.  Requests are
+  published to a service-scoped ``RequestRouter``; every RUNNING replica is
+  an ``EngineServeTask`` whose continuous-batching engine pulls admissible
+  requests from the router and dispatches each decode iteration as an
+  EXECUTE through its monitor.  Request *termination happens on-device*:
+  TTFT/TBT/end-to-end latencies are engine-reported into the shared
+  registry, and SLO attainment is computed from those.
+* ``drive_open_loop`` — the legacy modeled-completion driver (each RUNNING
+  replica retires ``service_rate`` requests/s in the load generator); kept
+  for quick experiments that don't need real decoding.
+
+Either way, every scaling action underneath is the real paper machinery —
+checkpoint-clone replicate and kill+delete through node agents and CRI —
+and the orchestrator's autoscaler reconcile thread consumes the canonical
+service signals from the registry.
 """
 
 from __future__ import annotations
 
+import threading
 import time
 from collections import deque
 from dataclasses import dataclass
-from typing import Callable, List, Optional
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
 
 from repro.scaling.autoscaler import (M_COMPLETIONS, M_LATENCY,
                                       M_QUEUE_DEPTH, M_REQUESTS,
@@ -35,6 +47,161 @@ class DriveResult:
         if not self.served:
             return float("nan")
         return (self.served - self.violations) / self.served
+
+
+# ---------------------------------------------------------------------------
+# Per-request serving path: router + engine replicas
+# ---------------------------------------------------------------------------
+class RequestRouter:
+    """Service-scoped request frontend shared by every engine replica.
+
+    The drive loop publishes arrivals here; each replica's
+    ``ContinuousBatchingEngine.pump`` pops as many as it has free decode
+    slots.  The router is intake + bookkeeping only — per-request latency
+    metrics are engine-reported at retirement (``complete``), so the
+    numbers in the registry are measured on-device, not modeled.  In a
+    multi-host deployment this object is the service's RPC frontend; here
+    replicas share it in-process.
+    """
+
+    def __init__(self, service: str = "svc", registry=None):
+        self.service = service
+        self.registry = registry
+        self.closed = False
+        self._lock = threading.Lock()
+        self._pending: deque = deque()
+        self.in_flight = 0
+        self.completed: Dict[str, object] = {}   # rid -> CompletedRequest
+
+    def submit(self, req) -> None:
+        with self._lock:
+            if self.closed:
+                raise RuntimeError(f"router {self.service} is closed")
+            if req.arrival_t is None and self.registry is not None:
+                req.arrival_t = self.registry.clock()
+            self._pending.append(req)
+        if self.registry is not None:
+            self.registry.counter(M_REQUESTS, service=self.service).inc()
+
+    def pop(self, n: int) -> list:
+        if n <= 0:
+            return []
+        with self._lock:
+            out = []
+            while self._pending and len(out) < n:
+                out.append(self._pending.popleft())
+            self.in_flight += len(out)
+            return out
+
+    def complete(self, record) -> None:
+        with self._lock:
+            self.completed[record.rid] = record
+            self.in_flight -= 1
+
+    def requeue(self, reqs: list) -> None:
+        """Return popped-but-unfinished requests (killed replica) to the
+        head of the queue; original arrival times stick, so the disruption
+        shows up in their end-to-end latency."""
+        with self._lock:
+            self.in_flight -= len(reqs)
+            if not self.closed:
+                self._pending.extendleft(reversed(reqs))
+
+    def pending_count(self) -> int:
+        return len(self._pending)
+
+    def outstanding(self) -> int:
+        with self._lock:
+            return len(self._pending) + self.in_flight
+
+    def close(self) -> None:
+        self.closed = True
+
+
+# Engine replicas are instantiated by the runtime from a TaskImage, which
+# must stay a plain serializable config (it rides in snapshots) — so tasks
+# find their router here by service name instead of carrying a handle.
+_ROUTERS: Dict[str, RequestRouter] = {}
+_ROUTERS_LOCK = threading.Lock()
+
+
+def get_router(service: str, registry=None) -> RequestRouter:
+    with _ROUTERS_LOCK:
+        r = _ROUTERS.get(service)
+        if r is None:
+            r = RequestRouter(service, registry=registry)
+            _ROUTERS[service] = r
+        if registry is not None and r.registry is None:
+            r.registry = registry
+        return r
+
+
+def reset_router(service: str) -> RequestRouter:
+    """Fresh router for a new run (tests/benchmarks)."""
+    with _ROUTERS_LOCK:
+        r = RequestRouter(service)
+        _ROUTERS[service] = r
+        return r
+
+
+def drive_engine_open_loop(orch, scaler, requests: List[Request], *,
+                           duration_s: float, slo_s: float,
+                           service: str = "svc", prompt_len: int = 16,
+                           slots_per_replica: int = 4,
+                           latency_window_s: float = 3.0,
+                           tokens_range: tuple = (4, 9),
+                           tick_s: float = 0.05, drain_timeout_s: float = 60.0,
+                           on_tick: Optional[Callable] = None) -> DriveResult:
+    """Replay an open-loop trace through the per-request serving path.
+
+    Arrivals become ``ServeRequest``s on the service's router; the engine
+    replicas terminate them on-device and report TTFT/TBT/e2e into
+    ``orch.metrics``.  This loop only feeds the router and publishes the
+    service-level queue/utilization gauges the autoscaler reads.
+    """
+    from repro.serve.engine import ServeRequest
+
+    reg = orch.metrics
+    # pin the shared window config before engines observe into it
+    reg.histogram(M_LATENCY, window_s=latency_window_s, service=service)
+    router = get_router(service, registry=reg)
+    rng = np.random.Generator(np.random.Philox(1234))
+    pending = deque(sorted(requests, key=lambda r: r.arrival_t))
+    t0 = time.time()
+    max_replicas = 1
+    last_report = 0.0
+    deadline = None
+    while True:
+        now = time.time() - t0
+        while pending and pending[0].arrival_t <= now:
+            r = pending.popleft()
+            n_tok = (r.n_tokens if getattr(r, "n_tokens", None)
+                     else int(rng.integers(*tokens_range)))
+            router.submit(ServeRequest(
+                rid=r.rid, prompt=rng.integers(0, 512, prompt_len),
+                max_new_tokens=n_tok, arrival_t=reg.clock(), slo_s=slo_s))
+        if not pending and router.outstanding() == 0 and now > duration_s:
+            break
+        if not pending and deadline is None and now > duration_s:
+            deadline = time.time() + drain_timeout_s
+        if deadline is not None and time.time() > deadline:
+            break                        # replicas wedged; report what we have
+        n_rep = scaler.current_replicas()
+        max_replicas = max(max_replicas, n_rep)
+        reg.gauge(M_QUEUE_DEPTH, service=service).set(router.pending_count())
+        cap = max(1, n_rep * slots_per_replica)
+        reg.gauge(M_UTILIZATION, service=service).set(
+            min(1.0, router.in_flight / cap))
+        if on_tick is not None and now - last_report >= 1.0:
+            last_report = now
+            on_tick(now, n_rep, router.pending_count(),
+                    reg.histogram(M_LATENCY, service=service).quantile(0.95))
+        time.sleep(tick_s)
+    router.close()
+    completed = list(router.completed.values())
+    violations = sum(1 for c in completed if c.e2e_s > slo_s)
+    return DriveResult(served=len(completed), violations=violations,
+                       max_replicas=max_replicas)
 
 
 def wait_for_service(cluster, orch, cid: str, timeout_s: float = 120.0,

@@ -1,6 +1,9 @@
+from repro.serve.engine import (CompletedRequest, ContinuousBatchingEngine,
+                                ServeRequest)
 from repro.serve.kvcache import cache_bytes, init_caches_from_specs
 from repro.serve.serve_step import (generate, make_decode_step,
                                     make_prefill_step, sample_token)
 
-__all__ = ["cache_bytes", "generate", "init_caches_from_specs",
+__all__ = ["CompletedRequest", "ContinuousBatchingEngine", "ServeRequest",
+           "cache_bytes", "generate", "init_caches_from_specs",
            "make_decode_step", "make_prefill_step", "sample_token"]

@@ -1,0 +1,371 @@
+"""Continuous-batching serving engine (vLLM/Orca-style iteration-level
+scheduling on top of the Funky monitor).
+
+The engine owns ``slots`` fixed decode lanes.  Each lane is an independent
+sequence with its own position counter and its own KV-cache stripe; one
+*iteration* advances every occupied lane by one token through a single
+vmapped EXECUTE request.  Between iterations the engine retires finished
+sequences and backfills freed lanes with prefills of waiting requests —
+admission happens at iteration granularity, so a long-running batch never
+stalls behind a straggler and newly arrived requests never wait for the
+whole batch to drain (the continuous-batching property).
+
+Every device interaction is a Funky request through ``Monitor.submit``:
+
+    prefill_one   EXECUTE (params, pf_prompt)        -> (pf_tok, pf_cache)
+    admit_slot    EXECUTE scatter into lane ``slot`` (donated, in-place)
+    decode_step   EXECUTE vmapped one-token step     (donated, in-place)
+    token d2h     TRANSFER — the per-iteration token delivery/sync point
+
+so serving stays preemptible at token boundaries (the paper's
+minimal-granularity best case, §3.3/Fig 9-10): ``Monitor.evict`` between
+iterations snapshots the lanes like any other DIRTY buffers, and ``resume``
+continues every in-flight sequence bit-exactly.  Buffer donation on the
+decode/admit path means the KV cache is updated in place instead of being
+copied every token, and the monitor's execute-signature cache keeps the
+per-request dispatch cost flat.
+
+Per-request latencies (TTFT, time-between-tokens, end-to-end) land in the
+shared ``repro.scaling.metrics`` registry under the canonical service
+schema, so fig14/fig15 SLO attainment is computed from engine-reported
+numbers rather than load-generator models.
+
+Greedy decoding only (deterministic across preemption); prompts are padded
+or truncated to the engine's fixed ``prompt_len`` — raggedness lives in
+arrival times and generation lengths.
+"""
+
+from __future__ import annotations
+
+import heapq
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.guest import FunkyCL
+from repro.core.programs import Program
+from repro.scaling.autoscaler import (M_COMPLETIONS, M_QUEUE_DEPTH,
+                                      M_SLO_VIOLATIONS, M_UTILIZATION)
+from repro.scaling.metrics import MetricsRegistry
+from repro.serve.kvcache import init_caches_from_specs
+
+# Canonical per-request serving metrics (one schema across planes).
+M_TTFT = "request_ttft_seconds"
+M_TBT = "request_tbt_seconds"
+M_E2E = "request_latency_seconds"
+M_TOKENS = "engine_tokens_total"
+M_ITERS = "engine_iterations_total"
+
+
+@dataclass
+class ServeRequest:
+    """One generation request admitted into a decode slot."""
+    rid: str
+    prompt: np.ndarray                  # (P,) int32 token ids
+    max_new_tokens: int = 8
+    arrival_t: Optional[float] = None   # registry-clock timestamp
+    slo_s: Optional[float] = None       # end-to-end SLO (None = untracked)
+
+
+@dataclass
+class CompletedRequest:
+    rid: str
+    tokens: List[int]
+    arrival_t: float
+    admit_t: float
+    first_token_t: float
+    finish_t: float
+    tbts: List[float] = field(default_factory=list)
+
+    @property
+    def ttft_s(self) -> float:
+        return self.first_token_t - self.arrival_t
+
+    @property
+    def e2e_s(self) -> float:
+        return self.finish_t - self.arrival_t
+
+
+@dataclass
+class _SlotState:
+    req: ServeRequest
+    slot: int
+    tokens: List[int]
+    admit_t: float
+    first_token_t: float
+    last_token_t: float
+    tbts: List[float] = field(default_factory=list)
+
+
+class ContinuousBatchingEngine:
+    def __init__(self, arch: str, cl: FunkyCL, *, slots: int = 4,
+                 prompt_len: int = 16, max_new_tokens: int = 16,
+                 service: str = "svc", engine_id: str = "engine0",
+                 seed: int = 0, registry: Optional[MetricsRegistry] = None,
+                 publish_gauges: bool = True):
+        from repro.configs import get_arch
+        from repro.models import build_model
+
+        self.cl = cl
+        self.slots = slots
+        self.prompt_len = prompt_len
+        self.max_new_tokens = max_new_tokens   # per-request cap (cache size)
+        self.service = service
+        self.engine_id = engine_id
+        self.seed = seed
+        self.cfg = get_arch(arch)
+        # cache capacity = prompt_len + max_new_tokens: prefill reserves the
+        # decode headroom so admission is a pure scatter, never a regrow
+        self.bundle = build_model(self.cfg, cache_margin=max_new_tokens)
+        self.registry = (registry if registry is not None
+                         else cl._monitor.telemetry)
+        self._clock = self.registry.clock
+        self._publish_gauges = publish_gauges
+        # handles resolved once — the per-iteration loop never takes the
+        # registry lock (same rule as the monitor's dispatch loop)
+        self._h_ttft = self.registry.histogram(M_TTFT, service=service)
+        self._h_tbt = self.registry.histogram(M_TBT, service=service)
+        self._h_e2e = self.registry.histogram(M_E2E, service=service)
+        self._c_tokens = self.registry.counter(M_TOKENS, service=service)
+        self._c_iters = self.registry.counter(M_ITERS, service=service)
+        self._c_completions = self.registry.counter(M_COMPLETIONS,
+                                                    service=service)
+        self._c_violations = self.registry.counter(M_SLO_VIOLATIONS,
+                                                   service=service)
+        if publish_gauges:
+            self._g_queue = self.registry.gauge(
+                M_QUEUE_DEPTH, service=service, engine=engine_id)
+            self._g_util = self.registry.gauge(
+                M_UTILIZATION, service=service, engine=engine_id)
+
+        self.pending: deque = deque()
+        self._free: List[int] = list(range(slots))
+        heapq.heapify(self._free)
+        self._active: Dict[int, _SlotState] = {}
+        self.completed: Dict[str, CompletedRequest] = {}
+        self._unreported: deque = deque()   # completions not yet drained
+        self.iterations = 0
+        self._setup_done = False
+
+    # ------------------------------------------------------------------
+    # Program/buffer setup (Funky guest-style, via FunkyCL only)
+    # ------------------------------------------------------------------
+    def setup(self, restore: bool = False) -> None:
+        bundle, B, P = self.bundle, self.slots, self.prompt_len
+
+        def init_params(seed):
+            return bundle.init(jax.random.PRNGKey(seed))
+
+        def prefill_one(params, tokens):
+            logits, cache = bundle.prefill_fn(params, {"tokens": tokens})
+            return jnp.argmax(logits, -1).astype(jnp.int32), cache
+
+        def decode_step(params, toks, pos, caches):
+            def lane(tok, p, cache):
+                logits, new_cache = bundle.decode_fn(params, tok, p, cache)
+                return (jnp.argmax(logits, -1).astype(jnp.int32),
+                        p + jnp.int32(1), new_cache)
+            return jax.vmap(lane)(toks, pos, caches)
+
+        def admit_slot(toks, pos, caches, pf_tok, pf_cache, slot):
+            slot = jnp.asarray(slot, jnp.int32)
+            toks = jax.lax.dynamic_update_slice(
+                toks, pf_tok[:, None], (slot, jnp.int32(0)))
+            pos = jax.lax.dynamic_update_slice(
+                pos, jnp.full((1,), P, jnp.int32), (slot,))
+            caches = jax.tree.map(
+                lambda c, n: jax.lax.dynamic_update_slice(
+                    c, n[None], (slot,) + (jnp.int32(0),) * n.ndim),
+                caches, pf_cache)
+            return toks, pos, caches
+
+        params_abs = jax.eval_shape(lambda: init_params(0))
+        prompt_abs = jax.ShapeDtypeStruct((1, P), jnp.int32)
+        pf_tok_abs, pf_cache_abs = jax.eval_shape(
+            prefill_one, params_abs, prompt_abs)
+        caches_abs = jax.tree.map(
+            lambda l: jax.ShapeDtypeStruct((B,) + l.shape, l.dtype),
+            pf_cache_abs)
+        toks_abs = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+        pos_abs = jax.ShapeDtypeStruct((B,), jnp.int32)
+        self._caches_abs = caches_abs
+
+        def init_slots():
+            return (jnp.zeros((B, 1), jnp.int32), jnp.zeros((B,), jnp.int32),
+                    init_caches_from_specs(caches_abs))
+
+        cl = self.cl
+        cl.clCreateProgramWithBinary(Program("init_params", init_params),
+                                     (0,))
+        cl.clCreateProgramWithBinary(Program("init_slots", init_slots), ())
+        cl.clCreateProgramWithBinary(Program("prefill_one", prefill_one),
+                                     (params_abs, prompt_abs))
+        slot_abs = jnp.int32(0)
+        cl.clCreateProgramWithBinary(
+            Program("admit_slot", admit_slot),
+            (toks_abs, pos_abs, caches_abs, pf_tok_abs, pf_cache_abs,
+             slot_abs),
+            donate_argnums=(0, 1, 2))
+        cl.clCreateProgramWithBinary(
+            Program("decode_step", decode_step),
+            (params_abs, toks_abs, pos_abs, caches_abs),
+            donate_argnums=(1, 2, 3))
+        if not restore:
+            cl.clCreateBuffer("params", params_abs)
+            cl.clCreateBuffer("toks", toks_abs)
+            cl.clCreateBuffer("pos", pos_abs)
+            cl.clCreateBuffer("caches", caches_abs)
+            cl.clCreateBuffer("pf_prompt", prompt_abs)
+            cl.clCreateBuffer("pf_tok", pf_tok_abs)
+            cl.clCreateBuffer("pf_cache", pf_cache_abs)
+            cl.clEnqueueKernel("init_params", (), ("params",),
+                               const_args=(self.seed,))
+            cl.clEnqueueKernel("init_slots", (), ("toks", "pos", "caches"))
+            cl.clFinish()
+        self._setup_done = True
+
+    # ------------------------------------------------------------------
+    # Request intake
+    # ------------------------------------------------------------------
+    def submit(self, req: ServeRequest) -> None:
+        if req.arrival_t is None:
+            req.arrival_t = self._clock()
+        self.pending.append(req)
+
+    @property
+    def idle(self) -> bool:
+        return not self._active and not self.pending
+
+    @property
+    def active_count(self) -> int:
+        return len(self._active)
+
+    def _pad_prompt(self, prompt: np.ndarray) -> np.ndarray:
+        p = np.asarray(prompt, np.int32).reshape(-1)[: self.prompt_len]
+        if p.shape[0] < self.prompt_len:
+            p = np.pad(p, (0, self.prompt_len - p.shape[0]))
+        return p.reshape(1, self.prompt_len)
+
+    # ------------------------------------------------------------------
+    # One iteration: admit into free lanes, decode all occupied lanes
+    # ------------------------------------------------------------------
+    def _admit(self) -> int:
+        admitted = 0
+        cl = self.cl
+        while self._free and self.pending:
+            slot = heapq.heappop(self._free)
+            req = self.pending.popleft()
+            cl.write_buffer("pf_prompt", self._pad_prompt(req.prompt))
+            cl.clEnqueueKernel("prefill_one", ("params", "pf_prompt"),
+                               ("pf_tok", "pf_cache"))
+            cl.clEnqueueKernel(
+                "admit_slot",
+                ("toks", "pos", "caches", "pf_tok", "pf_cache"),
+                ("toks", "pos", "caches"),
+                const_args=(np.int32(slot),), donate=True)
+            first_tok = int(np.asarray(cl.read_buffer("pf_tok"))[0])
+            now = self._clock()
+            st = _SlotState(req=req, slot=slot, tokens=[first_tok],
+                            admit_t=now, first_token_t=now,
+                            last_token_t=now)
+            self._h_ttft.observe(now - req.arrival_t)
+            self._c_tokens.inc()
+            self.registry.record_event("engine_admit", rid=req.rid,
+                                       slot=slot, engine=self.engine_id)
+            admitted += 1
+            if len(st.tokens) >= req.max_new_tokens:
+                self._retire(st, now)       # degenerate 1-token request
+            else:
+                self._active[slot] = st
+        return admitted
+
+    def _retire(self, st: _SlotState, now: float) -> None:
+        rec = CompletedRequest(
+            rid=st.req.rid, tokens=st.tokens, arrival_t=st.req.arrival_t,
+            admit_t=st.admit_t, first_token_t=st.first_token_t,
+            finish_t=now, tbts=st.tbts)
+        self.completed[st.req.rid] = rec
+        self._unreported.append(rec)
+        self._active.pop(st.slot, None)
+        heapq.heappush(self._free, st.slot)
+        self._h_e2e.observe(rec.e2e_s)
+        self._c_completions.inc()
+        if st.req.slo_s is not None and rec.e2e_s > st.req.slo_s:
+            self._c_violations.inc()
+        self.registry.record_event("engine_retire", rid=st.req.rid,
+                                   slot=st.slot, tokens=len(st.tokens),
+                                   engine=self.engine_id)
+
+    def step(self) -> dict:
+        """One engine iteration; returns counts for the caller's pacing."""
+        if not self._setup_done:
+            raise RuntimeError("engine.setup() has not run")
+        admitted = self._admit()
+        decoded = 0
+        if self._active:
+            self.cl.clEnqueueKernel(
+                "decode_step", ("params", "toks", "pos", "caches"),
+                ("toks", "pos", "caches"), donate=True)
+            # token delivery doubles as the iteration's sync point — the
+            # d2h TRANSFER drains the queue and lands on a token boundary
+            toks = np.asarray(self.cl.read_buffer("toks"))
+            now = self._clock()
+            for st in list(self._active.values()):
+                st.tokens.append(int(toks[st.slot, 0]))
+                st.tbts.append(now - st.last_token_t)
+                self._h_tbt.observe(now - st.last_token_t)
+                st.last_token_t = now
+                decoded += 1
+                if len(st.tokens) >= st.req.max_new_tokens:
+                    self._retire(st, now)
+            self._c_tokens.inc(decoded)
+        self.iterations += 1
+        self._c_iters.inc()
+        if self._publish_gauges:
+            self._g_queue.set(len(self.pending))
+            self._g_util.set(len(self._active) / self.slots)
+        return {"admitted": admitted, "decoded": decoded,
+                "active": len(self._active), "pending": len(self.pending)}
+
+    def drain_completions(self) -> List[CompletedRequest]:
+        out = list(self._unreported)
+        self._unreported.clear()
+        return out
+
+    def evacuate(self) -> List[ServeRequest]:
+        """Hand back every un-finished request (kill / drain path) and
+        reset the lanes.  Finished-but-unreported completions stay
+        available via ``drain_completions`` — report those first so the
+        caller's in-flight accounting stays exact."""
+        reqs = ([st.req for st in self._active.values()]
+                + list(self.pending))
+        self._active.clear()
+        self.pending.clear()
+        self._free = list(range(self.slots))
+        heapq.heapify(self._free)
+        return reqs
+
+    def run_until_drained(self, max_iterations: int = 100000) -> None:
+        while not self.idle:
+            self.step()
+            if self.iterations >= max_iterations:
+                raise RuntimeError("engine did not drain "
+                                   f"in {max_iterations} iterations")
+
+    # ------------------------------------------------------------------
+    # Router integration (live plane): pull admissible work, push results
+    # ------------------------------------------------------------------
+    def pump(self, router) -> bool:
+        """One iteration against a ``RequestRouter``; True if work moved."""
+        for req in router.pop(len(self._free)):
+            self.submit(req)
+        moved = bool(self._active or self.pending)
+        if moved:
+            self.step()
+        for rec in self.drain_completions():
+            router.complete(rec)
+        return moved

@@ -41,19 +41,40 @@ def sample_token(logits: jax.Array, rng: Optional[jax.Array],
 def generate(bundle: ModelBundle, params, prompt_batch: dict, num_tokens: int,
              *, temperature: float = 0.0, rng=None,
              jit: bool = True):
-    """Prefill + decode ``num_tokens`` tokens. Returns (B, num_tokens) ids."""
-    prefill = jax.jit(make_prefill_step(bundle)) if jit else make_prefill_step(bundle)
-    decode = jax.jit(make_decode_step(bundle)) if jit else make_decode_step(bundle)
+    """Prefill + decode ``num_tokens`` tokens. Returns (B, num_tokens) ids.
+
+    This is the *sequential* baseline the continuous-batching engine
+    (``repro.serve.engine``) is benchmarked against in fig15: one request
+    at a time, tokens delivered only when the loop finishes.  RNG keys are
+    pre-split once (one host-side ``jax.random.split`` total, not one per
+    token); greedy decoding skips key handling entirely.
+    """
+    if jit:
+        # cache the jitted steps on the bundle so back-to-back generate
+        # calls (the sequential serving baseline) hit warm executables
+        # instead of re-tracing fresh closures per request
+        steps = getattr(bundle, "_jit_steps", None)
+        if steps is None:
+            steps = (jax.jit(make_prefill_step(bundle)),
+                     jax.jit(make_decode_step(bundle)))
+            bundle._jit_steps = steps
+        prefill, decode = steps
+    else:
+        prefill = make_prefill_step(bundle)
+        decode = make_decode_step(bundle)
     logits, caches = prefill(params, prompt_batch)
     key = prompt_batch.get("tgt_tokens", prompt_batch.get("tokens"))
     pos = key.shape[1]
     if bundle.cfg.family == "vlm":
         pos += bundle.cfg.num_image_tokens
     toks = []
-    rng = rng if rng is not None else jax.random.key(0)
+    keys = None
+    if temperature > 0.0:
+        rng = rng if rng is not None else jax.random.key(0)
+        keys = jax.random.split(rng, num_tokens)
     for i in range(num_tokens):
-        rng, sub = jax.random.split(rng)
-        tok = sample_token(logits, sub, temperature)
+        tok = sample_token(logits, None if keys is None else keys[i],
+                           temperature)
         toks.append(tok)
         logits, caches = decode(params, tok, jnp.int32(pos + i), caches)
     return jnp.stack(toks, axis=1)

@@ -141,6 +141,74 @@ def test_simulated_clock_injection():
     assert snap["ts"] == 106.0
 
 
+def test_to_prometheus_text():
+    reg = MetricsRegistry(clock=FakeClock(1.0))
+    reg.counter("requests_total", service="svc").inc(3)
+    reg.gauge("queue_depth", service="svc").set(2)
+    reg.gauge("running_tasks").set(1)
+    h = reg.histogram("request_latency_seconds", service="svc")
+    for v in (0.1, 0.2, 0.3):
+        h.observe(v)
+    text = reg.to_prometheus_text()
+    lines = text.splitlines()
+    assert "# TYPE requests_total counter" in lines
+    assert 'requests_total{service="svc"} 3' in lines
+    assert "# TYPE queue_depth gauge" in lines
+    assert 'queue_depth{service="svc"} 2' in lines
+    assert "running_tasks 1" in lines                  # label-free metric
+    assert "# TYPE request_latency_seconds summary" in lines
+    assert ('request_latency_seconds{service="svc",quantile="0.5"} 0.2'
+            in lines)
+    assert 'request_latency_seconds_count{service="svc"} 3' in lines
+    assert 'request_latency_seconds_sum{service="svc"} 0.6' in lines
+    assert text.endswith("\n")
+
+
+def test_prometheus_families_are_contiguous_and_escaped():
+    reg = MetricsRegistry()
+    # interleave creation order across two families
+    reg.gauge("queue_depth", service="svc").set(1)
+    reg.gauge("utilization", service="svc").set(0.5)
+    reg.gauge("queue_depth", service="svc", engine="e0").set(2)
+    reg.counter("requests_total", service='we"ird\nsvc').inc()
+    lines = reg.to_prometheus_text().splitlines()
+    qd = [i for i, l in enumerate(lines) if l.startswith("queue_depth")]
+    assert qd == list(range(qd[0], qd[0] + len(qd)))   # one contiguous block
+    assert 'requests_total{service="we\\"ird\\nsvc"} 1' in lines
+
+
+def test_prometheus_empty_histogram_is_nan_not_crash():
+    reg = MetricsRegistry()
+    reg.histogram("request_latency_seconds", service="svc")
+    text = reg.to_prometheus_text()
+    assert 'quantile="0.99"} NaN' in text
+
+
+def test_flight_record_ring_and_order():
+    clock = FakeClock()
+    reg = MetricsRegistry(clock=clock, flight_capacity=4)
+    for i in range(6):
+        clock.t = float(i)
+        reg.record_event("evict", task=f"t{i}")
+    dump = reg.flight_record()
+    assert len(dump["events"]) == 4                    # ring bound
+    assert [e[2]["task"] for e in dump["events"]] == ["t2", "t3", "t4", "t5"]
+    assert [e[0] for e in dump["events"]] == [2.0, 3.0, 4.0, 5.0]
+    assert dump["ts"] == 5.0
+
+
+def test_flight_record_series_tail():
+    clock = FakeClock()
+    reg = MetricsRegistry(clock=clock)
+    ts = reg.series("replicas_ts", service="svc")
+    for i in range(100):
+        clock.t = float(i)
+        ts.record(i)
+    dump = reg.flight_record(series_tail=8)
+    tail = dump["series_tail"]["replicas_ts{service=svc}"]
+    assert len(tail) == 8 and tail[-1] == (99.0, 99.0)
+
+
 def test_snapshot_schema():
     reg = MetricsRegistry(clock=FakeClock(7.0))
     reg.counter("requests_total", service="svc").inc()

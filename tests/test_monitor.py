@@ -121,6 +121,101 @@ def test_no_slice_available():
                       (jax.ShapeDtypeStruct((2,), jnp.float32),))
 
 
+def test_sync_blocks_only_buffers_written_since_last_sync():
+    """SYNC drains the dirty-since-last-sync set, not the whole table."""
+    m = _monitor()
+    cl = FunkyCL(m)
+    cl.clCreateBuffer("a", jax.ShapeDtypeStruct((8,), jnp.float32))
+    cl.clCreateBuffer("b", jax.ShapeDtypeStruct((8,), jnp.float32))
+    cl.write_buffer("a", np.ones(8, np.float32))
+    cl.write_buffer("b", np.ones(8, np.float32))
+    cl.clFinish()
+    assert m.buffers.unsynced_count() == 0
+    cl.clEnqueueKernel("double", ("a",), ("a",))
+    # queue the sync behind the execute; only "a" is pending
+    req = FunkyRequest(kind=RequestKind.SYNC)
+    m.submit(req)
+    pending_before = m.buffers.unsynced_count()
+    req.completion.wait()
+    assert pending_before <= 1           # b was never re-dirtied
+    assert m.buffers.unsynced_count() == 0
+
+
+def test_exec_signature_cache_invalidated_on_reshape():
+    """A shape-changing h2d bumps the spec token; the cached signature is
+    dropped and the request recompiles instead of calling a stale entry."""
+    m = _monitor()
+    cl = FunkyCL(m)
+    cl.clCreateBuffer("x", jax.ShapeDtypeStruct((8,), jnp.float32))
+    cl.write_buffer("x", np.ones(8, np.float32))
+    cl.clEnqueueKernel("double", ("x",), ("x",))
+    cl.clEnqueueKernel("double", ("x",), ("x",))
+    cl.clFinish()
+    misses0 = m.programs.stats["misses"]
+    cl.write_buffer("x", np.ones(4, np.float32))    # reshape
+    cl.clEnqueueKernel("double", ("x",), ("x",))
+    cl.clFinish()
+    assert m.programs.stats["misses"] == misses0 + 1
+    np.testing.assert_array_equal(np.asarray(cl.read_buffer("x")),
+                                  np.full(4, 2.0, np.float32))
+
+
+def test_shape_changing_inplace_program_never_replays_stale_entry():
+    """A program that writes a different shape back into its own input
+    must miss the signature cache every call (compiled-entry avals can't
+    be replayed against the grown buffer)."""
+    m = _monitor()
+    m.register_program(Program("grow", lambda x: jnp.concatenate([x, x])),
+                       (jax.ShapeDtypeStruct((8,), jnp.float32),))
+    cl = FunkyCL(m)
+    cl.clCreateBuffer("x", jax.ShapeDtypeStruct((8,), jnp.float32))
+    cl.write_buffer("x", np.ones(8, np.float32))
+    for _ in range(3):
+        cl.clEnqueueKernel("grow", ("x",), ("x",))
+    cl.clFinish()
+    assert np.asarray(cl.read_buffer("x")).shape == (64,)
+
+
+def test_same_shape_h2d_keeps_signature_cache_warm():
+    m = _monitor()
+    cl = FunkyCL(m)
+    cl.clCreateBuffer("x", jax.ShapeDtypeStruct((8,), jnp.float32))
+    for i in range(3):
+        cl.write_buffer("x", np.full(8, float(i), np.float32))
+        cl.clEnqueueKernel("double", ("x",), ("x",))
+    cl.clFinish()
+    assert m.metrics["exec_sig_cache_hits"] >= 2
+
+
+def test_donated_execute_roundtrip():
+    """donate=True updates in place; values stay correct and the buffer
+    survives evict/resume."""
+    alloc = SliceAllocator("n0", 1)
+    m = Monitor("t", alloc)
+    m.vfpga_init(Program("double", lambda x: x * 2.0),
+                 (jax.ShapeDtypeStruct((8,), jnp.float32),),
+                 donate_argnums=(0,))
+    cl = FunkyCL(m)
+    cl.clCreateBuffer("x", jax.ShapeDtypeStruct((8,), jnp.float32))
+    cl.write_buffer("x", np.ones(8, np.float32))
+    for _ in range(3):
+        cl.clEnqueueKernel("double", ("x",), ("x",), donate=True)
+    cl.clFinish()
+    np.testing.assert_array_equal(np.asarray(cl.read_buffer("x")),
+                                  np.full(8, 8.0, np.float32))
+    # only the donate_argnums=(0,) variant was compiled (no double compile)
+    keys = [(pid, d) for (pid, _, d) in m.programs._compiled.keys()]
+    assert keys.count(("double", (0,))) == 1
+    assert ("double", ()) not in keys
+    m.evict()
+    m.resume()
+    cl2 = FunkyCL(m)
+    cl2.clEnqueueKernel("double", ("x",), ("x",), donate=True)
+    cl2.clFinish()
+    np.testing.assert_array_equal(np.asarray(cl2.read_buffer("x")),
+                                  np.full(8, 16.0, np.float32))
+
+
 def test_program_cache_hit_is_warm():
     m = _monitor()
     stats0 = dict(m.programs.stats)
@@ -132,4 +227,7 @@ def test_program_cache_hit_is_warm():
     cl.clFinish()
     stats = m.programs.stats
     assert stats["misses"] == stats0["misses"]   # compiled at vfpga_init
-    assert stats["hits"] >= 3
+    # first EXECUTE fingerprints once; the monitor's signature cache then
+    # short-circuits the per-request abstract walk entirely
+    assert stats["hits"] == stats0["hits"] + 1
+    assert m.metrics["exec_sig_cache_hits"] >= 2
