@@ -1,8 +1,9 @@
 """Fig 15 (extension): continuous-batching engine vs the naive sequential
-``generate`` loop under ragged multi-request load.
+``generate`` loop, and paged vs worst-case-reserved KV memory.
 
-Both servers face the *same* arrival schedule (a quick burst of requests
-with ragged generation lengths) on the same smoke model:
+Part 1 — serving discipline.  Both servers face the *same* arrival schedule
+(a quick burst of requests with ragged generation lengths) on the same
+smoke model:
 
 * **naive** — the ``repro.serve.generate`` loop, FIFO, one request at a
   time, batch 1, jitted directly (no monitor in the way — this *favors*
@@ -14,15 +15,26 @@ with ragged generation lengths) on the same smoke model:
   at token boundaries).  Tokens stream at iteration granularity; TBT is
   the measured inter-token gap from the shared metrics registry.
 
-Reported: tokens/sec over the busy window, p50/p99 TTFT, p99 TBT.  The
-run asserts the engine beats the baseline on both throughput and p99 TBT
-— the continuous-batching property the serving plane depends on.
+Part 2 — memory discipline.  Two engines get the *same KV pool byte
+budget* (the paged pool is rounded down, never up):
+
+* **reserved** — every lane owns a worst-case ``prompt_len +
+  max_new_tokens`` stripe, so the budget caps the lane count;
+* **paged** — twice the lanes over a block-table pool of equal bytes;
+  lanes hold pages at token granularity and free them at retirement.
+
+The run asserts the engine beats the baseline on throughput and p99 TBT,
+and that the paged engine sustains strictly more concurrent in-flight
+requests than the reservation baseline at the same pool size (the §3.4
+virtualization payoff the ROADMAP names) while completing the identical
+workload.
 
     PYTHONPATH=src python -m benchmarks.fig15_serving [--smoke]
 """
 
 from __future__ import annotations
 
+import gc
 import sys
 import time
 
@@ -39,6 +51,7 @@ from repro.serve.engine import (M_TBT, M_TTFT, ContinuousBatchingEngine,
                                 ServeRequest)
 
 ARCH = "yi-9b-smoke"
+PAGE_SIZE = 4
 
 
 def make_workload(n_requests: int, prompt_len: int, tokens_range: tuple,
@@ -63,52 +76,74 @@ def run_naive(bundle, params, workload, prompt_len):
     # warm the jit cache outside the timed window (steady-state serving)
     warm = {"tokens": np.zeros((1, prompt_len), np.int32)}
     jax.block_until_ready(generate(bundle, params, warm, 2))
-    t0 = time.perf_counter()
-    results = []
-    for w in workload:
-        now = time.perf_counter() - t0
-        if now < w["arrival_t"]:
-            time.sleep(w["arrival_t"] - now)
-        toks = generate(bundle, params,
-                        {"tokens": w["prompt"].reshape(1, -1)},
-                        w["n_tokens"])
-        jax.block_until_ready(toks)
-        finish = time.perf_counter() - t0
-        latency = finish - w["arrival_t"]
-        results.append({"rid": w["rid"], "ttft": latency,  # 1st delivery
-                        "eff_tbt": latency / w["n_tokens"],
-                        "n": w["n_tokens"], "finish": finish})
+    gc.collect()
+    gc.disable()        # no collector pauses inside the latency window
+    try:
+        t0 = time.perf_counter()
+        results = []
+        for w in workload:
+            now = time.perf_counter() - t0
+            if now < w["arrival_t"]:
+                time.sleep(w["arrival_t"] - now)
+            toks = generate(bundle, params,
+                            {"tokens": w["prompt"].reshape(1, -1)},
+                            w["n_tokens"])
+            jax.block_until_ready(toks)
+            finish = time.perf_counter() - t0
+            latency = finish - w["arrival_t"]
+            results.append({"rid": w["rid"], "ttft": latency,  # 1st token
+                            "eff_tbt": latency / w["n_tokens"],
+                            "n": w["n_tokens"], "finish": finish})
+    finally:
+        gc.enable()
     busy_s = max(r["finish"] for r in results) - workload[0]["arrival_t"]
     return results, busy_s
 
 
-def run_engine(workload, prompt_len, slots, max_new_cap):
+def run_engine(workload, prompt_len, slots, max_new_cap, *, paged=True,
+               pool_pages=None, tag="fig15-engine"):
     """Continuous-batching server through a real monitor; returns the
-    completion records, the registry, and the busy-window seconds."""
+    engine (peak_active/preemptions/completed), the registry, and the
+    busy-window seconds."""
     # perf_counter clock so request arrival_t and engine timestamps share
     # one monotonic timebase
     reg = MetricsRegistry(clock=time.perf_counter)
     alloc = SliceAllocator("bench0", 1)
-    mon = Monitor("fig15-engine", alloc, telemetry=reg)
+    mon = Monitor(tag, alloc, telemetry=reg)
     eng = ContinuousBatchingEngine(ARCH, FunkyCL(mon), slots=slots,
                                    prompt_len=prompt_len,
-                                   max_new_tokens=max_new_cap, registry=reg)
+                                   max_new_tokens=max_new_cap, registry=reg,
+                                   paged=paged, page_size=PAGE_SIZE,
+                                   pool_pages=pool_pages)
     eng.setup()        # compiles outside the timed window, like the baseline
-    t0 = time.perf_counter()
-    pending = list(workload)
-    while pending or not eng.idle:
-        now = time.perf_counter() - t0
-        while pending and pending[0]["arrival_t"] <= now:
-            w = pending.pop(0)
-            eng.submit(ServeRequest(
-                rid=w["rid"], prompt=w["prompt"],
-                max_new_tokens=w["n_tokens"],
-                arrival_t=t0 + w["arrival_t"]))   # registry clock basis
-        if eng.idle:
-            time.sleep(0.001)
-            continue
-        eng.step()
-    busy_s = (time.perf_counter() - t0) - workload[0]["arrival_t"]
+    # one throwaway request warms the full admit/append/decode path (the
+    # naive baseline gets the same steady-state treatment above)
+    eng.submit(ServeRequest(rid="__warm__", prompt=np.zeros(
+        prompt_len, np.int32), max_new_tokens=PAGE_SIZE + 2))
+    eng.run_until_drained()
+    eng.completed.pop("__warm__")
+    eng.drain_completions()
+    eng.peak_active = 0
+    gc.collect()
+    gc.disable()        # no collector pauses inside the latency window
+    try:
+        t0 = time.perf_counter()
+        pending = list(workload)
+        while pending or not eng.idle:
+            now = time.perf_counter() - t0
+            while pending and pending[0]["arrival_t"] <= now:
+                w = pending.pop(0)
+                eng.submit(ServeRequest(
+                    rid=w["rid"], prompt=w["prompt"],
+                    max_new_tokens=w["n_tokens"],
+                    arrival_t=t0 + w["arrival_t"]))   # registry clock basis
+            if eng.idle:
+                time.sleep(0.001)
+                continue
+            eng.step()
+        busy_s = (time.perf_counter() - t0) - workload[0]["arrival_t"]
+    finally:
+        gc.enable()
     mon.vfpga_exit()
     return eng, reg, busy_s
 
@@ -121,13 +156,17 @@ def p99(values):
 
 
 def main(smoke: bool = False):
+    # max_new_cap is the *server-side* per-request cap the reservation
+    # baseline must provision for; actual generations (tokens_range) are
+    # ragged and stop well short of it — the gap is what paging reclaims
     if smoke:
-        n_req, prompt_len, tokens_range = 12, 8, (6, 13)
-        slots, arrival_gap = 4, 0.005
+        n_req, prompt_len, tokens_range = 12, 8, (2, 13)
+        slots, arrival_gap, reserved_slots = 4, 0.005, 1
+        max_new_cap = 24
     else:
-        n_req, prompt_len, tokens_range = 24, 16, (8, 25)
-        slots, arrival_gap = 8, 0.01
-    max_new_cap = tokens_range[1]
+        n_req, prompt_len, tokens_range = 24, 16, (4, 25)
+        slots, arrival_gap, reserved_slots = 8, 0.01, 2
+        max_new_cap = 40
     workload = make_workload(n_req, prompt_len, tokens_range, arrival_gap)
     total_tokens = sum(w["n_tokens"] for w in workload)
 
@@ -151,15 +190,18 @@ def main(smoke: bool = False):
     ttfts = [rec.ttft_s for rec in eng.completed.values()]
     emit("fig15/engine", eng_busy * 1e6 / total_tokens,
          f"tokens_per_s={eng_tps:.1f} p99_tbt={eng_p99_tbt * 1e3:.1f}ms "
-         f"p99_ttft={p99(ttfts) * 1e3:.1f}ms slots={slots}")
+         f"p99_ttft={p99(ttfts) * 1e3:.1f}ms slots={slots} "
+         f"page={PAGE_SIZE}")
 
     # per-request latencies must be in the shared registry schema
+    # (+1s: the warmup request also reports through the registry)
     snap = reg.snapshot()
-    assert snap["histograms"][f"{M_TTFT}{{service=svc}}"]["count"] == n_req
+    assert (snap["histograms"][f"{M_TTFT}{{service=svc}}"]["count"]
+            == n_req + 1)
     assert (snap["histograms"][f"{M_TBT}{{service=svc}}"]["count"]
-            == total_tokens - n_req)
+            >= total_tokens - n_req)
     assert (snap["histograms"]["request_latency_seconds{service=svc}"]
-            ["count"] == n_req)
+            ["count"] == n_req + 1)
 
     speedup = eng_tps / naive_tps
     emit("fig15/speedup", 0.0,
@@ -174,6 +216,46 @@ def main(smoke: bool = False):
             f"continuous batching did not beat sequential generate on "
             f"p99 TBT: {eng_p99_tbt * 1e3:.1f} vs "
             f"{naive_p99_tbt * 1e3:.1f} ms")
+
+    # ---------------------------------------------------------------
+    # Paged vs worst-case-reserved at an identical KV pool byte budget
+    # ---------------------------------------------------------------
+    res_eng, _, res_busy = run_engine(
+        workload, prompt_len, reserved_slots, max_new_cap, paged=False,
+        tag="fig15-reserved")
+    assert len(res_eng.completed) == n_req
+    # the reserved engine's whole-cache byte budget, re-cut into pages
+    # (rounded DOWN: the paged engine never gets more bytes)
+    budget_tokens = reserved_slots * (prompt_len + max_new_cap)
+    pool_pages = budget_tokens // PAGE_SIZE
+    paged_eng, _, paged_busy = run_engine(
+        workload, prompt_len, 2 * reserved_slots, max_new_cap, paged=True,
+        pool_pages=pool_pages, tag="fig15-paged")
+    assert len(paged_eng.completed) == n_req
+    assert paged_eng.pool_bytes <= res_eng.pool_bytes, (
+        paged_eng.pool_bytes, res_eng.pool_bytes)
+    emit("fig15/reserved", res_busy * 1e6 / total_tokens,
+         f"tokens_per_s={total_tokens / res_busy:.1f} "
+         f"slots={reserved_slots} peak_active={res_eng.peak_active} "
+         f"pool_bytes={res_eng.pool_bytes}")
+    emit("fig15/paged", paged_busy * 1e6 / total_tokens,
+         f"tokens_per_s={total_tokens / paged_busy:.1f} "
+         f"slots={2 * reserved_slots} peak_active={paged_eng.peak_active} "
+         f"pool_bytes={paged_eng.pool_bytes} "
+         f"oom_preemptions={paged_eng.preemptions}")
+    emit("fig15/paged_vs_reserved", 0.0,
+         f"concurrency={paged_eng.peak_active}/{res_eng.peak_active} "
+         f"tokens_per_s={res_busy / paged_busy:.2f}x")
+    if paged_eng.peak_active <= res_eng.peak_active:
+        raise SystemExit(
+            "paged engine did not admit more concurrent requests than the "
+            f"reservation baseline at equal pool bytes: "
+            f"{paged_eng.peak_active} vs {res_eng.peak_active}")
+    if paged_busy >= res_busy:
+        raise SystemExit(
+            "paged engine did not beat the reservation baseline on "
+            f"throughput at equal pool bytes: {total_tokens / paged_busy:.1f}"
+            f" vs {total_tokens / res_busy:.1f} tokens/s")
 
 
 if __name__ == "__main__":

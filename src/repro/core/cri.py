@@ -102,6 +102,13 @@ class ContainerEngine:
         if A_VFPGA_NUM in annotations:
             self.runtime.update(cid, int(annotations[A_VFPGA_NUM]))
 
+    def DrainContainer(self, cid: str, timeout_s: float = 30.0) -> dict:
+        """Graceful-decommission prelude to RemoveContainer: stop the
+        task's admissions and wait (bounded) for held work to finish."""
+        if cid not in self.runtime.tasks:
+            return {"drained": True, "waited_s": 0.0}
+        return self.runtime.drain(cid, timeout_s=timeout_s)
+
     def RemoveContainer(self, cid: str):
         rec = self.runtime.tasks.get(cid)
         if rec and rec.status is TaskStatus.RUNNING:

@@ -62,8 +62,13 @@ class FunkyCL:
     # ------------------------------------------------------------------
     # Buffers & transfers
     # ------------------------------------------------------------------
-    def clCreateBuffer(self, buff_id: str, spec: Any) -> str:
-        req = FunkyRequest(kind=RequestKind.MEMORY, buff_id=buff_id, spec=spec)
+    def clCreateBuffer(self, buff_id: str, spec: Any,
+                       paged: bool = False) -> str:
+        """``paged=True`` registers a page-pool buffer (every leaf's axis 0
+        is the page axis): subsequent EXECUTEs can report ``dirty_pages`` so
+        evict/checkpoint serialize only the pages actually written."""
+        req = FunkyRequest(kind=RequestKind.MEMORY, buff_id=buff_id,
+                           spec=spec, paged=paged)
         self._track(self._monitor.submit(req))
         return buff_id
 
@@ -82,16 +87,20 @@ class FunkyCL:
     def clEnqueueKernel(self, program_id: str, in_buffs: Sequence[str],
                         out_buffs: Sequence[str],
                         const_args: tuple = (),
-                        donate: bool = False) -> Completion:
+                        donate: bool = False,
+                        dirty_pages: Optional[dict] = None) -> Completion:
         """Async kernel launch; kernel args travel with the EXECUTE request
         (clSetKernelArg coalescing, paper §4).  ``donate=True`` donates
         inputs that are also outputs (in-place update, no device copy) —
         register the program with matching donate_argnums to avoid a
-        recompile on first use."""
+        recompile on first use.  ``dirty_pages`` maps a paged out buffer to
+        the page ids this launch writes, keeping evict/checkpoint costs
+        proportional to pages touched rather than pool size."""
         req = FunkyRequest(
             kind=RequestKind.EXECUTE, program_id=program_id,
             in_buffs=tuple(in_buffs), out_buffs=tuple(out_buffs),
-            const_args=tuple(const_args), donate=donate)
+            const_args=tuple(const_args), donate=donate,
+            dirty_pages=dirty_pages)
         return self._track(self._monitor.submit(req))
 
     def clFinish(self) -> None:

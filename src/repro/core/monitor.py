@@ -209,7 +209,7 @@ class Monitor:
             raise DeviceMemoryExceeded(
                 f"vSlice memory cap {cap} exceeded by buffer "
                 f"{req.buff_id!r} (+{new_bytes} bytes)")
-        self.buffers.register(req.buff_id, req.spec)
+        self.buffers.register(req.buff_id, req.spec, paged=req.paged)
         return req.buff_id
 
     def _do_transfer(self, req: FunkyRequest):
@@ -277,7 +277,10 @@ class Monitor:
             # instead of re-fingerprinting forever
             stable = hit or same_avals(
                 self.buffers.get(buff_id).device_value, val)
-            self.buffers.on_execute_write(buff_id, val, stable=stable)
+            dp = (None if req.dirty_pages is None
+                  else req.dirty_pages.get(buff_id))
+            self.buffers.on_execute_write(buff_id, val, stable=stable,
+                                          dirty_pages=dp)
         if not hit:
             # keyed on the PRE-execute tokens: stable writes leave them
             # unchanged (next call hits), while a shape-changing write

@@ -108,6 +108,16 @@ class NodeAgent:
             cid, {A_VFPGA_NUM: str(vfpga_num)})
         self._count_op("update")
 
+    def drain(self, cid: str, timeout_s: float = 30.0) -> dict:
+        """Scale-in prelude: stop the replica's admissions and let its
+        in-flight lanes finish (request-boundary decommission) before the
+        kill.  Falls through after ``timeout_s`` — the subsequent remove
+        then requeues whatever is still unfinished."""
+        self._check()
+        stats = self.engine.DrainContainer(cid, timeout_s=timeout_s)
+        self._count_op("drain")
+        return stats
+
     def remove(self, cid: str):
         """Scale-in: kill the replica and delete its record."""
         self._check()

@@ -120,8 +120,19 @@ class Orchestrator:
         self.agents[node].update(cid, vfpga_num)
         self._log("update", cid=cid, vfpga_num=vfpga_num)
 
-    def scale_in(self, cid: str):
-        """Remove a replica (scale-down): kill + delete through the agent."""
+    def scale_in(self, cid: str, drain_s: float = 0.0):
+        """Remove a replica (scale-down): optionally drain first (stop
+        admissions, let in-flight lanes finish at their request boundary),
+        then kill + delete through the agent.  Draining happens outside the
+        lock — it blocks for up to ``drain_s``."""
+        if drain_s > 0:
+            node = self._sched_tasks[cid].node_id
+            if node is not None and node in self.agents:
+                try:
+                    stats = self.agents[node].drain(cid, timeout_s=drain_s)
+                    self._log("drain", cid=cid, node=node, **stats)
+                except Exception:  # noqa: BLE001 - node may be gone
+                    pass
         with self._lock:
             st = self._sched_tasks[cid]
             node = st.node_id

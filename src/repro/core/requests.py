@@ -85,6 +85,7 @@ class FunkyRequest:
     # MEMORY
     buff_id: Optional[str] = None
     spec: Any = None                    # abstract pytree (ShapeDtypeStructs)
+    paged: bool = False                 # page-granular dirtiness (axis 0)
 
     # TRANSFER
     direction: Optional[Direction] = None
@@ -100,6 +101,9 @@ class FunkyRequest:
     # program must have been registered with matching donate_argnums or
     # the first EXECUTE pays a recompile.
     donate: bool = False
+    # {out_buff_id: page ids written} for paged out buffers; a paged out
+    # buffer absent from the dict is treated as fully dirtied
+    dirty_pages: Optional[dict] = None
 
     # SYNC
     upto_req_id: Optional[int] = None   # None = all outstanding

@@ -155,6 +155,34 @@ class FunkyRuntime:
         with rec.step_lock:
             pass
 
+    def drain(self, cid: str, timeout_s: float = 30.0) -> dict:
+        """Graceful decommission: flip the task into its draining state
+        (no new admissions) and wait until the work it already holds has
+        finished — request-boundary scale-in without requeueing.  Tasks
+        with no drain hook return immediately; a wedged drain times out
+        and the caller falls back to the hard kill."""
+        rec = self.tasks[cid]
+        if rec.status is not TaskStatus.RUNNING:
+            return {"drained": True, "waited_s": 0.0}
+        if type(rec.task).drain is GuestTask.drain:
+            # no draining notion (train tasks etc.): don't stall the
+            # scale-in for the full timeout waiting on a no-op hook
+            return {"drained": True, "waited_s": 0.0}
+        t0 = time.perf_counter()
+        rec.task.drain()
+        # the driver notices the drained state on its next step and runs
+        # teardown, flipping the status off RUNNING — wait (bounded) for
+        # that so the follow-up kill finds a finished task
+        deadline = t0 + timeout_s
+        while (time.perf_counter() < deadline
+               and rec.status is TaskStatus.RUNNING):
+            time.sleep(0.005)
+        waited = time.perf_counter() - t0
+        stats = {"drained": rec.status is not TaskStatus.RUNNING
+                 or rec.task.drained, "waited_s": waited}
+        rec.log("drain", **stats)
+        return stats
+
     def kill(self, cid: str):
         rec = self.tasks[cid]
         rec.stop_flag = True

@@ -27,7 +27,8 @@ from typing import Dict, List, Optional
 from repro.core.scheduler import (Action, FunkyScheduler, Policy, SchedTask,
                                   TaskState)
 from repro.core.traces import TraceJob
-from repro.scaling.autoscaler import (M_COMPLETIONS, M_LATENCY, M_QUEUE_DEPTH,
+from repro.scaling.autoscaler import (M_COMPLETIONS, M_KV_PAGES, M_LATENCY,
+                                      M_PREEMPTIONS, M_QUEUE_DEPTH,
                                       M_REPLICAS, M_REPLICAS_SERIES,
                                       M_REQUESTS, M_SLO_VIOLATIONS,
                                       M_UTILIZATION, Autoscaler,
@@ -302,6 +303,30 @@ class ServingParams:
     hist_window_s: float = 10.0         # signal window for tail latency
 
 
+@dataclass
+class KVModelParams:
+    """Cache-memory occupancy model for the serving simulator, mirroring
+    the live engine's paged KV pool: a request holds its prompt pages for
+    its whole service time and grows by one page per ``page_tokens``
+    generated tokens.  When the (service-wide ``active * pool_pages``)
+    pool exhausts, the growing request is OOM-preempted back to the queue
+    head — the same recomputation rule as the live engine — so memory
+    pressure shows up both as the ``kv_pages_in_use_ratio`` signal and as
+    preemption-inflated latency."""
+    pool_pages: int = 64                # per replica
+    page_tokens: int = 8
+    prompt_tokens: int = 16
+    default_tokens: int = 8             # requests without n_tokens
+
+    def prompt_pages(self) -> int:
+        return max(1, -(-self.prompt_tokens // self.page_tokens))
+
+    def total_pages(self, req: Request) -> int:
+        n = (req.n_tokens if getattr(req, "n_tokens", None)
+             else self.default_tokens)
+        return max(1, -(-(self.prompt_tokens + n) // self.page_tokens))
+
+
 def engine_service_model(ttft_s: float, tbt_s: float,
                          default_tokens: int = 8):
     """Service-time function from engine-reported latencies.
@@ -337,7 +362,8 @@ class ServingSimulator:
                  initial_replicas: int = 1, service: str = "svc",
                  params: Optional[ServingParams] = None,
                  closed_gen: Optional[ClosedLoopGen] = None,
-                 service_time_fn=None):
+                 service_time_fn=None,
+                 kv_model: Optional[KVModelParams] = None):
         self.params = params or ServingParams()
         self.autoscaler = autoscaler
         self.service = service
@@ -359,6 +385,14 @@ class ServingSimulator:
         self._latencies: List[float] = []
         self.violations = 0
         self.events_processed = 0
+        # paged KV occupancy model (optional): pages held per in-service
+        # request, epochs invalidate depart/grow events after a preemption
+        self.kv = kv_model
+        self._kv_used = 0
+        self._kv_held: Dict[str, int] = {}
+        self._kv_epoch: Dict[str, int] = {}
+        self.kv_preemptions = 0
+        self.kv_peak_occupancy = 0.0
         for r in requests:
             self._push(r.arrival_t, "arrive", r)
         self._record_replicas()
@@ -384,19 +418,48 @@ class ServingSimulator:
         self.metrics.series(M_REPLICAS_SERIES, service=self.service,
                             capacity=65536).record(self.active)
 
+    def _kv_capacity(self) -> int:
+        return max(self.active, 1) * self.kv.pool_pages
+
+    def _kv_occupancy(self) -> float:
+        return self._kv_used / max(self._kv_capacity(), 1)
+
     def _publish_signals(self):
         self.metrics.gauge(M_QUEUE_DEPTH, service=self.service).set(
             len(self.queue))
         self.metrics.gauge(M_UTILIZATION, service=self.service).set(
             self.busy / max(self.active, 1))
+        if self.kv is not None:
+            self.metrics.gauge(M_KV_PAGES, service=self.service).set(
+                self._kv_occupancy())
         self._record_replicas()
 
     # -- event handlers ----------------------------------------------------
     def _dispatch(self):
         while self.queue and self.busy < self.active:
+            if self.kv is not None:
+                # memory-based admission: an idle server alone is not
+                # enough, the prompt's pages must fit in the pool
+                need = self.kv.prompt_pages()
+                if self._kv_used + need > self._kv_capacity():
+                    break
             req = self.queue.popleft()
             self.busy += 1
-            self._push(self.now + self._service_time(req), "depart", req)
+            dur = self._service_time(req)
+            epoch = self._kv_epoch.get(req.rid, 0)
+            if self.kv is not None:
+                need = self.kv.prompt_pages()
+                self._kv_used += need
+                self._kv_held[req.rid] = need
+                self.kv_peak_occupancy = max(self.kv_peak_occupancy,
+                                             self._kv_occupancy())
+                extra = self.kv.total_pages(req) - need
+                for i in range(extra):
+                    # decode crosses one page boundary per page_tokens
+                    # tokens; spread the growth across the service time
+                    self._push(self.now + dur * (i + 1) / (extra + 1),
+                               "kv_grow", (req, epoch))
+            self._push(self.now + dur, "depart", (req, epoch))
 
     def _on_arrive(self, req: Request):
         self._pending_arrivals -= 1
@@ -404,7 +467,34 @@ class ServingSimulator:
         self.queue.append(req)
         self._dispatch()
 
-    def _on_depart(self, req: Request):
+    def _on_kv_grow(self, payload):
+        req, epoch = payload
+        if (req.rid not in self._kv_held
+                or epoch != self._kv_epoch.get(req.rid, 0)):
+            return                       # departed or already preempted
+        if self._kv_used < self._kv_capacity():
+            self._kv_used += 1
+            self._kv_held[req.rid] += 1
+            self.kv_peak_occupancy = max(self.kv_peak_occupancy,
+                                         self._kv_occupancy())
+            return
+        # pool exhausted: OOM-preempt this request back to the queue head
+        # (deterministic recomputation, like the live engine) — its pages
+        # free up, its depart event is invalidated by the epoch bump
+        self._kv_used -= self._kv_held.pop(req.rid)
+        self._kv_epoch[req.rid] = epoch + 1
+        self.busy -= 1
+        self.queue.appendleft(req)
+        self.kv_preemptions += 1
+        self.metrics.counter(M_PREEMPTIONS, service=self.service).inc()
+        self._dispatch()
+
+    def _on_depart(self, payload):
+        req, epoch = payload
+        if epoch != self._kv_epoch.get(req.rid, 0):
+            return                       # stale: request was OOM-preempted
+        if self.kv is not None:
+            self._kv_used -= self._kv_held.pop(req.rid, 0)
         self.busy -= 1
         latency = self.now - req.arrival_t
         self._latencies.append(latency)
@@ -500,7 +590,7 @@ class ServingSimulator:
                                           service=self.service,
                                           capacity=65536)
         n = len(lat)
-        return {
+        out = {
             "completed": n,
             "slo_attainment": (n - self.violations) / n if n else
             float("nan"),
@@ -514,3 +604,7 @@ class ServingSimulator:
             "events": self.events_processed,
             "horizon_s": self.now,
         }
+        if self.kv is not None:
+            out["kv_preemptions"] = self.kv_preemptions
+            out["kv_peak_occupancy"] = self.kv_peak_occupancy
+        return out

@@ -44,6 +44,12 @@ class TaskImage:
     tokens_per_step: int = 4        # serve: decode tokens per step() call
     prompt_len: int = 16
     max_new_tokens: int = 8         # engine-serve: per-request cap
+    # engine-serve paged KV memory (None/() keep the engine defaults)
+    paged_kv: bool = True
+    page_size: int = 8
+    kv_pool_pages: Optional[int] = None
+    kv_reserve_pages: int = 1
+    prompt_buckets: tuple = ()      # e.g. (8, 16, 32); empty = (prompt_len,)
     seed: int = 0
     opt: OptConfig = field(default_factory=lambda: OptConfig(
         warmup_steps=2, decay_steps=100))
@@ -77,6 +83,15 @@ class GuestTask:
     def on_kill(self) -> None:
         """Forced-removal hook (scale-in / node drain): release any work
         the task holds that outlives it (e.g. requeue in-flight requests)."""
+
+    def drain(self) -> None:
+        """Graceful-decommission hook: stop taking new work and finish what
+        is already held.  Tasks without a notion of draining ignore it."""
+
+    @property
+    def drained(self) -> bool:
+        """True once a draining task holds no unfinished work."""
+        return True
 
 
 class TrainTask(GuestTask):
@@ -270,11 +285,17 @@ class EngineServeTask(GuestTask):
     finishes when the router is closed and every lane has drained; a
     replicate-clone starts with empty lanes (the source keeps its own
     in-flight sequences) and immediately joins the admission pool.
+
+    ``drain()`` puts the replica into a *draining* state: it stops pulling
+    admissions from the router and finishes the sequences it already holds,
+    so request-boundary scale-in decommissions the replica without
+    requeueing (and recomputing) in-flight work.
     """
 
     def __init__(self, image: TaskImage):
         self.image = image
         self._engine = None
+        self._draining = False
 
     def setup(self, cl: FunkyCL, gs: GuestState, restore: bool) -> None:
         from repro.scaling.serving import get_router
@@ -286,22 +307,34 @@ class EngineServeTask(GuestTask):
         self._engine = ContinuousBatchingEngine(
             im.arch, cl, slots=im.global_batch, prompt_len=im.prompt_len,
             max_new_tokens=im.max_new_tokens, service=im.name,
-            engine_id=cl._monitor.task_id, seed=im.seed)
+            engine_id=cl._monitor.task_id, seed=im.seed,
+            paged=im.paged_kv, page_size=im.page_size,
+            pool_pages=im.kv_pool_pages,
+            reserve_pages=im.kv_reserve_pages,
+            prompt_buckets=im.prompt_buckets or None)
         self._engine.setup(restore=restore)
 
     def step(self, cl: FunkyCL, gs: GuestState) -> bool:
-        moved = self._engine.pump(self._router)
+        moved = self._engine.pump(self._router, admit=not self._draining)
         gs.step += 1
+        if self._draining and self._engine.idle:
+            return True                  # drained: exit at request boundary
         if not moved:
             if self._router.closed:
                 return True
             time.sleep(0.002)            # idle poll; don't spin the monitor
         return gs.step >= self.image.total_steps
 
+    def drain(self) -> None:
+        self._draining = True
+
+    @property
+    def drained(self) -> bool:
+        return self._engine is None or self._engine.idle
+
     def teardown(self, cl: FunkyCL, gs: GuestState) -> None:
         gs.user["completed"] = len(self._engine.completed)
-        for pid in ("init_params", "init_slots", "prefill_one",
-                    "admit_slot", "decode_step"):
+        for pid in self._engine.program_ids():
             cl.clReleaseProgram(pid)
 
     def on_kill(self) -> None:

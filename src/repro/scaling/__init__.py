@@ -7,10 +7,11 @@
 ``serving``     live-plane drive loop for elastic-serving demos/benchmarks
 """
 
-from repro.scaling.autoscaler import (Autoscaler, LatencySLOPolicy,
-                                      OrchestratorScaler, QueueLengthPolicy,
-                                      ScalingDecision, ScalingPolicy,
-                                      ScalingSignals, TargetUtilizationPolicy,
+from repro.scaling.autoscaler import (Autoscaler, KVPressurePolicy,
+                                      LatencySLOPolicy, OrchestratorScaler,
+                                      QueueLengthPolicy, ScalingDecision,
+                                      ScalingPolicy, ScalingSignals,
+                                      TargetUtilizationPolicy,
                                       signals_from_registry)
 from repro.scaling.loadgen import (ClosedLoopGen, Request, burst_rate,
                                    constant_rate, diurnal_rate, open_loop)
@@ -23,7 +24,8 @@ from repro.scaling.serving import (DriveResult, RequestRouter,
 
 __all__ = [
     "Autoscaler", "ClosedLoopGen", "Counter", "DriveResult", "Gauge",
-    "Histogram", "LatencySLOPolicy", "MetricsRegistry", "OrchestratorScaler",
+    "Histogram", "KVPressurePolicy", "LatencySLOPolicy", "MetricsRegistry",
+    "OrchestratorScaler",
     "QueueLengthPolicy", "Request", "RequestRouter", "ScalingDecision",
     "ScalingPolicy",
     "ScalingSignals", "TargetUtilizationPolicy", "TimeSeries", "burst_rate",

@@ -22,7 +22,7 @@ from __future__ import annotations
 
 import math
 import threading
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import List, Optional, Protocol
 
 from repro.scaling.metrics import MetricsRegistry
@@ -36,6 +36,11 @@ M_REPLICAS = "replicas"
 M_UTILIZATION = "utilization"
 M_LATENCY = "request_latency_seconds"
 M_REPLICAS_SERIES = "replicas_ts"
+# cache-memory occupancy (paged KV pool): fraction of pool pages in use,
+# free page count, and OOM preemptions forced by pool exhaustion
+M_KV_PAGES = "kv_pages_in_use_ratio"
+M_KV_FREE_PAGES = "kv_free_pages"
+M_PREEMPTIONS = "engine_oom_preemptions_total"
 
 
 @dataclass
@@ -45,6 +50,7 @@ class ScalingSignals:
     utilization: float = 0.0        # busy replica fraction, 0..1
     queue_depth: float = 0.0        # requests waiting for a replica
     p95_latency_s: float = math.nan
+    kv_pressure: float = 0.0        # KV pool pages in use, 0..1
 
 
 def signals_from_registry(reg: MetricsRegistry, service: str,
@@ -55,6 +61,7 @@ def signals_from_registry(reg: MetricsRegistry, service: str,
         queue_depth=reg.gauge(M_QUEUE_DEPTH, service=service).value,
         p95_latency_s=reg.histogram(M_LATENCY, service=service)
         .quantile(0.95),
+        kv_pressure=reg.gauge(M_KV_PAGES, service=service).value,
     )
 
 
@@ -112,6 +119,24 @@ class LatencySLOPolicy(ScalingPolicy):
                 and s.queue_depth == 0):
             return max(1, s.replicas - 1)
         return s.replicas
+
+
+@dataclass
+class KVPressurePolicy(ScalingPolicy):
+    """Compose any policy with cache-memory pressure: when the paged KV
+    pool runs hot, add a replica even while latency/queue still look fine
+    — pool exhaustion means OOM preemptions (wasted recomputation) are
+    about to burn throughput.  Memory pressure is a *leading* indicator;
+    tail latency only moves after the preemptions start."""
+    inner: ScalingPolicy = field(default_factory=QueueLengthPolicy)
+    high_watermark: float = 0.85
+    name: str = "kv-pressure"
+
+    def desired_replicas(self, s: ScalingSignals) -> int:
+        desired = self.inner.desired_replicas(s)
+        if s.kv_pressure > self.high_watermark:
+            desired = max(desired, s.replicas + 1)
+        return desired
 
 
 # ---------------------------------------------------------------------------
@@ -199,13 +224,17 @@ class OrchestratorScaler:
 
     Scale-out clones the base task's live snapshot onto the node with the
     most free vSlices (warm caches included, per the paper's replicate
-    command); scale-in removes the youngest replica, never the base.
+    command); scale-in removes the youngest replica, never the base —
+    draining it first (``drain_timeout_s``) so in-flight sequences finish
+    at their request boundary instead of being requeued and recomputed.
     """
 
-    def __init__(self, orch, base_cid: str, service: str = "svc"):
+    def __init__(self, orch, base_cid: str, service: str = "svc",
+                 drain_timeout_s: float = 10.0):
         self.orch = orch
         self.base_cid = base_cid
         self.service = service
+        self.drain_timeout_s = drain_timeout_s
         self.replica_cids: List[str] = []
         self._lock = threading.Lock()   # serializes scale_to convergence
 
@@ -228,9 +257,16 @@ class OrchestratorScaler:
                     break               # cluster full: partial convergence
                 new_cid = self.orch.scale_horizontal(self.base_cid, node)
                 self.replica_cids.append(new_cid)
+            # pick scale-in victims under the lock, but drain+remove them
+            # outside it: a drain blocks for up to drain_timeout_s and must
+            # not stall a concurrent scale-out decision behind the lock.
+            # A popped victim no longer counts toward current_replicas()
+            victims = []
             while self.current_replicas() > n and self.replica_cids:
-                victim = self.replica_cids.pop()
-                self.orch.scale_in(victim)
+                victims.append(self.replica_cids.pop())
+        for victim in victims:
+            self.orch.scale_in(victim, drain_s=self.drain_timeout_s)
+        with self._lock:
             now_n = self.current_replicas()
             self.orch.metrics.gauge(
                 M_REPLICAS, service=self.service).set(now_n)

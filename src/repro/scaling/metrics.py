@@ -242,6 +242,20 @@ class MetricsRegistry:
                 self._remember(key, name, labels)
             return self._series[key]
 
+    def gauge_values(self, name: str, **labels) -> Dict[str, float]:
+        """All gauges of one metric family whose labels contain ``labels``
+        — e.g. every replica's ``kv_pages_in_use_ratio`` for a service, so
+        a drive loop can aggregate per-engine gauges into the service-level
+        signal the autoscaler reads."""
+        want = set(labels.items())
+        out = {}
+        with self._lock:
+            for key, g in self._gauges.items():
+                mname, items = self._meta.get(key, (None, ()))
+                if mname == name and want <= set(items):
+                    out[key] = g.value
+        return out
+
     # -- flight recorder ----------------------------------------------------
     def record_event(self, kind: str, **fields):
         """Append a (t, kind, fields) event to the post-mortem ring buffer.

@@ -30,10 +30,11 @@ from typing import Callable, Dict, List, Optional
 
 import numpy as np
 
-from repro.scaling.autoscaler import (M_COMPLETIONS, M_LATENCY,
+from repro.scaling.autoscaler import (M_COMPLETIONS, M_KV_PAGES, M_LATENCY,
                                       M_QUEUE_DEPTH, M_REQUESTS,
                                       M_SLO_VIOLATIONS, M_UTILIZATION)
 from repro.scaling.loadgen import Request
+from repro.scaling.metrics import metric_key
 
 
 @dataclass
@@ -192,6 +193,16 @@ def drive_engine_open_loop(orch, scaler, requests: List[Request], *,
         cap = max(1, n_rep * slots_per_replica)
         reg.gauge(M_UTILIZATION, service=service).set(
             min(1.0, router.in_flight / cap))
+        # cache-memory occupancy: fold per-engine KV pool gauges into the
+        # service-level pressure signal (worst replica wins — that is the
+        # one about to OOM-preempt), so the autoscaler sees memory
+        # pressure alongside queue depth and tail latency
+        svc_key = metric_key(M_KV_PAGES, {"service": service})
+        kv = [v for k, v in
+              reg.gauge_values(M_KV_PAGES, service=service).items()
+              if k != svc_key]
+        if kv:
+            reg.gauge(M_KV_PAGES, service=service).set(max(kv))
         if on_tick is not None and now - last_report >= 1.0:
             last_report = now
             on_tick(now, n_rep, router.pending_count(),

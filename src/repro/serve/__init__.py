@@ -1,9 +1,11 @@
 from repro.serve.engine import (CompletedRequest, ContinuousBatchingEngine,
                                 ServeRequest)
-from repro.serve.kvcache import cache_bytes, init_caches_from_specs
+from repro.serve.kvcache import (BlockPool, cache_bytes,
+                                 init_caches_from_specs)
 from repro.serve.serve_step import (generate, make_decode_step,
                                     make_prefill_step, sample_token)
 
-__all__ = ["CompletedRequest", "ContinuousBatchingEngine", "ServeRequest",
-           "cache_bytes", "generate", "init_caches_from_specs",
-           "make_decode_step", "make_prefill_step", "sample_token"]
+__all__ = ["BlockPool", "CompletedRequest", "ContinuousBatchingEngine",
+           "ServeRequest", "cache_bytes", "generate",
+           "init_caches_from_specs", "make_decode_step", "make_prefill_step",
+           "sample_token"]

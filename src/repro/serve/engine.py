@@ -1,46 +1,57 @@
 """Continuous-batching serving engine (vLLM/Orca-style iteration-level
-scheduling on top of the Funky monitor).
+scheduling on top of the Funky monitor) over **paged** vFPGA device memory.
 
 The engine owns ``slots`` fixed decode lanes.  Each lane is an independent
-sequence with its own position counter and its own KV-cache stripe; one
-*iteration* advances every occupied lane by one token through a single
-vmapped EXECUTE request.  Between iterations the engine retires finished
-sequences and backfills freed lanes with prefills of waiting requests —
-admission happens at iteration granularity, so a long-running batch never
-stalls behind a straggler and newly arrived requests never wait for the
-whole batch to drain (the continuous-batching property).
+sequence with its own position counter; one *iteration* advances every
+occupied lane by one token through a single vmapped EXECUTE request.
+Between iterations the engine retires finished sequences and backfills
+freed lanes with prefills of waiting requests — admission happens at
+iteration granularity, so a long-running batch never stalls behind a
+straggler (the continuous-batching property).
 
-Every device interaction is a Funky request through ``Monitor.submit``:
+KV memory comes in two modes:
 
-    prefill_one   EXECUTE (params, pf_prompt)        -> (pf_tok, pf_cache)
-    admit_slot    EXECUTE scatter into lane ``slot`` (donated, in-place)
-    decode_step   EXECUTE vmapped one-token step     (donated, in-place)
-    token d2h     TRANSFER — the per-iteration token delivery/sync point
+* **paged** (default) — device KV memory is a ``BlockPool`` of fixed-size
+  pages shared by every lane.  A per-lane *block table* row maps logical
+  page index -> physical page; the vmapped decode step gathers each lane's
+  cache through its row and scatters back only the page it wrote.  Lanes
+  hold pages at token granularity: prompt pages at admission, one more
+  page whenever decode crosses a page boundary, all freed the moment the
+  request retires.  Admission is therefore **memory-based** — admit while
+  ``free_pages - prompt_pages >= reserve_pages`` — so ``slots`` can exceed
+  what worst-case reservations would allow.  If the pool exhausts
+  mid-decode the youngest lane is OOM-preempted: its pages are freed and
+  its request requeued for deterministic recomputation (greedy decode, so
+  the client sees identical tokens).  Freed pages are scrubbed (positions
+  invalidated) on reallocation — the §3.4 freed-memory-zeroing rule — so a
+  new owner can never attend to a previous lane's tokens.
+* **reserved** — the old worst-case layout: every lane owns a
+  ``prompt_len + max_new_tokens`` stripe up front.  Kept as the fig15
+  baseline the paged mode is measured against.
 
-so serving stays preemptible at token boundaries (the paper's
-minimal-granularity best case, §3.3/Fig 9-10): ``Monitor.evict`` between
-iterations snapshots the lanes like any other DIRTY buffers, and ``resume``
-continues every in-flight sequence bit-exactly.  Buffer donation on the
-decode/admit path means the KV cache is updated in place instead of being
-copied every token, and the monitor's execute-signature cache keeps the
-per-request dispatch cost flat.
+Paged mode also supports **prompt buckets**: 2-3 prefill lengths compiled
+up front, with each admission routed to the smallest bucket that fits
+instead of padding everything to one ``prompt_len``.
+
+Every device interaction is a Funky request through ``Monitor.submit``, so
+serving stays preemptible at token boundaries: ``Monitor.evict`` between
+iterations snapshots the dirty pages plus the (tiny) block table — the
+``BufferTable`` tracks the pool at page granularity — and ``resume``
+continues every in-flight ragged sequence bit-exactly.
 
 Per-request latencies (TTFT, time-between-tokens, end-to-end) land in the
 shared ``repro.scaling.metrics`` registry under the canonical service
-schema, so fig14/fig15 SLO attainment is computed from engine-reported
-numbers rather than load-generator models.
-
-Greedy decoding only (deterministic across preemption); prompts are padded
-or truncated to the engine's fixed ``prompt_len`` — raggedness lives in
-arrival times and generation lengths.
+schema, together with KV occupancy gauges the autoscaler reads as a memory
+pressure signal.
 """
 
 from __future__ import annotations
 
 import heapq
+import math
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -48,10 +59,17 @@ import numpy as np
 
 from repro.core.guest import FunkyCL
 from repro.core.programs import Program
-from repro.scaling.autoscaler import (M_COMPLETIONS, M_QUEUE_DEPTH,
-                                      M_SLO_VIOLATIONS, M_UTILIZATION)
+from repro.scaling.autoscaler import (M_COMPLETIONS, M_KV_FREE_PAGES,
+                                      M_KV_PAGES, M_PREEMPTIONS,
+                                      M_QUEUE_DEPTH, M_SLO_VIOLATIONS,
+                                      M_UTILIZATION)
 from repro.scaling.metrics import MetricsRegistry
-from repro.serve.kvcache import init_caches_from_specs
+from repro.serve.kvcache import (BlockPool, cache_bytes, compact_pool,
+                                 extract_written_page, gather_lane_cache,
+                                 init_caches_from_specs,
+                                 pool_specs_from_lane_cache, scatter_pages,
+                                 scatter_prefill, scrub_pages,
+                                 token_axes_from_lengths)
 
 # Canonical per-request serving metrics (one schema across planes).
 M_TTFT = "request_ttft_seconds"
@@ -99,6 +117,14 @@ class _SlotState:
     first_token_t: float
     last_token_t: float
     tbts: List[float] = field(default_factory=list)
+    # effective generation cap: min(request ask, engine cap) — the engine's
+    # cache/pages are provisioned for max_new_tokens, so an over-cap ask is
+    # clamped instead of walking past the block table / ring capacity
+    limit: int = 1
+    # paged mode
+    bucket: int = 0                     # prompt bucket this lane prefetched
+    pos: int = 0                        # absolute position of the next write
+    blocks: List[int] = field(default_factory=list)
 
 
 class ContinuousBatchingEngine:
@@ -106,21 +132,64 @@ class ContinuousBatchingEngine:
                  prompt_len: int = 16, max_new_tokens: int = 16,
                  service: str = "svc", engine_id: str = "engine0",
                  seed: int = 0, registry: Optional[MetricsRegistry] = None,
-                 publish_gauges: bool = True):
+                 publish_gauges: bool = True, paged: bool = True,
+                 page_size: int = 8, pool_pages: Optional[int] = None,
+                 reserve_pages: int = 1,
+                 prompt_buckets: Optional[Sequence[int]] = None):
         from repro.configs import get_arch
         from repro.models import build_model
 
         self.cl = cl
         self.slots = slots
-        self.prompt_len = prompt_len
-        self.max_new_tokens = max_new_tokens   # per-request cap (cache size)
+        self.max_new_tokens = max_new_tokens   # per-request cap
         self.service = service
         self.engine_id = engine_id
         self.seed = seed
         self.cfg = get_arch(arch)
-        # cache capacity = prompt_len + max_new_tokens: prefill reserves the
-        # decode headroom so admission is a pure scatter, never a regrow
-        self.bundle = build_model(self.cfg, cache_margin=max_new_tokens)
+        self.paged = paged
+        if prompt_buckets and prompt_len > max(prompt_buckets):
+            raise ValueError(
+                f"prompt_len {prompt_len} exceeds the largest prompt "
+                f"bucket {max(prompt_buckets)}: prompts would be silently "
+                "truncated — add prompt_len as the largest bucket")
+        if paged:
+            self.buckets = tuple(sorted(set(prompt_buckets or (prompt_len,))))
+            self.prompt_len = max(self.buckets)
+            self.page_size = page_size
+            self.max_ctx = self.prompt_len + max_new_tokens
+            self.max_blocks = math.ceil(self.max_ctx / page_size)
+            # default pool covers the worst case (no oversubscription);
+            # benchmarks/servers pass a smaller pool to oversubscribe
+            self.pool_pages = (pool_pages if pool_pages is not None
+                               else slots * self.max_blocks)
+            if self.pool_pages < self.max_blocks:
+                raise ValueError(
+                    f"pool of {self.pool_pages} pages cannot hold one "
+                    f"worst-case request ({self.max_blocks} pages)")
+            max_prompt_pages = math.ceil(self.prompt_len / page_size)
+            if self.pool_pages - max_prompt_pages < reserve_pages:
+                raise ValueError(
+                    f"reserve watermark {reserve_pages} can never clear for "
+                    f"a {max_prompt_pages}-page prompt in a "
+                    f"{self.pool_pages}-page pool (admission would starve)")
+            self.pool = BlockPool(self.pool_pages, page_size,
+                                  reserve_pages=reserve_pages)
+            # paged prefill writes exactly the prompt (margin 0); decode
+            # headroom comes from pages appended at token granularity
+            self.bundle = build_model(self.cfg, cache_margin=0)
+            self._bt_host = np.full((slots, self.max_blocks), -1, np.int32)
+            self._bt_dirty = True
+            self._first_token: Dict[str, float] = {}
+        else:
+            if prompt_buckets:
+                raise ValueError("prompt buckets need paged=True (dense "
+                                 "lanes are compiled to one prompt_len)")
+            self.buckets = (prompt_len,)
+            self.prompt_len = prompt_len
+            # cache capacity = prompt_len + max_new_tokens: prefill reserves
+            # the decode headroom so admission is a pure scatter
+            self.bundle = build_model(self.cfg, cache_margin=max_new_tokens)
+            self.pool = None
         self.registry = (registry if registry is not None
                          else cl._monitor.telemetry)
         self._clock = self.registry.clock
@@ -136,11 +205,17 @@ class ContinuousBatchingEngine:
                                                     service=service)
         self._c_violations = self.registry.counter(M_SLO_VIOLATIONS,
                                                    service=service)
+        self._c_preemptions = self.registry.counter(M_PREEMPTIONS,
+                                                    service=service)
         if publish_gauges:
             self._g_queue = self.registry.gauge(
                 M_QUEUE_DEPTH, service=service, engine=engine_id)
             self._g_util = self.registry.gauge(
                 M_UTILIZATION, service=service, engine=engine_id)
+            self._g_kv = self.registry.gauge(
+                M_KV_PAGES, service=service, engine=engine_id)
+            self._g_kv_free = self.registry.gauge(
+                M_KV_FREE_PAGES, service=service, engine=engine_id)
 
         self.pending: deque = deque()
         self._free: List[int] = list(range(slots))
@@ -149,20 +224,167 @@ class ContinuousBatchingEngine:
         self.completed: Dict[str, CompletedRequest] = {}
         self._unreported: deque = deque()   # completions not yet drained
         self.iterations = 0
+        self.peak_active = 0                # max concurrent in-flight lanes
+        self.preemptions = 0
         self._setup_done = False
+        self._program_ids: List[str] = []
 
     # ------------------------------------------------------------------
     # Program/buffer setup (Funky guest-style, via FunkyCL only)
     # ------------------------------------------------------------------
     def setup(self, restore: bool = False) -> None:
-        bundle, B, P = self.bundle, self.slots, self.prompt_len
+        if self.paged:
+            self._setup_paged(restore)
+        else:
+            self._setup_reserved(restore)
+        self._setup_done = True
 
-        def init_params(seed):
-            return bundle.init(jax.random.PRNGKey(seed))
+    def program_ids(self) -> tuple:
+        return tuple(self._program_ids)
+
+    def _register(self, cl, name, fn, abstracts, donate_argnums=()):
+        cl.clCreateProgramWithBinary(Program(name, fn), abstracts,
+                                     donate_argnums=donate_argnums)
+        self._program_ids.append(name)
+
+    def _prefill_fn(self):
+        bundle = self.bundle
 
         def prefill_one(params, tokens):
             logits, cache = bundle.prefill_fn(params, {"tokens": tokens})
             return jnp.argmax(logits, -1).astype(jnp.int32), cache
+
+        return prefill_one
+
+    # -- paged layout ----------------------------------------------------
+    def _setup_paged(self, restore: bool) -> None:
+        bundle, B, ps = self.bundle, self.slots, self.page_size
+        NP, max_blocks = self.pool_pages, self.max_blocks
+        prefill_one = self._prefill_fn()
+
+        def init_params(seed):
+            return bundle.init(jax.random.PRNGKey(seed))
+
+        params_abs = jax.eval_shape(lambda: init_params(0))
+        pf_abs = {}
+        for P in self.buckets:
+            prompt_abs = jax.ShapeDtypeStruct((1, P), jnp.int32)
+            pf_tok_abs, pf_cache_abs = jax.eval_shape(
+                prefill_one, params_abs, prompt_abs)
+            pf_abs[P] = (prompt_abs, pf_tok_abs, pf_cache_abs)
+        # discover each cache leaf's token axis by diffing two prompt
+        # lengths (rejects layouts paging cannot virtualize, e.g.
+        # window-bounded rings) — buckets give the second length for free
+        if len(self.buckets) > 1:
+            alt, alt_cache = self.buckets[0], pf_abs[self.buckets[0]][2]
+        else:
+            alt = self.prompt_len - 1
+            if alt < 1:
+                raise ValueError("paged mode needs prompt_len >= 2")
+            _, alt_cache = jax.eval_shape(
+                prefill_one, params_abs,
+                jax.ShapeDtypeStruct((1, alt), jnp.int32))
+        token_axes = token_axes_from_lengths(
+            alt_cache, pf_abs[self.prompt_len][2], alt, self.prompt_len)
+        self._token_axes = token_axes
+        pool_abs = pool_specs_from_lane_cache(
+            pf_abs[self.prompt_len][2], token_axes, NP, ps)
+        self._pool_abs = pool_abs
+        self.pool_bytes = cache_bytes(pool_abs)
+        self.page_bytes = self.pool_bytes // NP
+        toks_abs = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+        pos_abs = jax.ShapeDtypeStruct((B,), jnp.int32)
+        bt_abs = jax.ShapeDtypeStruct((B, max_blocks), jnp.int32)
+
+        def init_paged():
+            return (jnp.zeros((B, 1), jnp.int32), jnp.zeros((B,), jnp.int32),
+                    init_caches_from_specs(pool_abs))
+
+        def decode_step(params, toks, pos, bt, pool):
+            def lane(tok, p, bt_row):
+                caches = gather_lane_cache(pool, bt_row, token_axes,
+                                           page_size=ps)
+                logits, new_cache = bundle.decode_fn(params, tok, p, caches)
+                new_tok = jnp.argmax(logits, -1).astype(jnp.int32)
+                active = bt_row[0] >= 0
+                lp = (p % (max_blocks * ps)) // ps
+                pages = extract_written_page(new_cache, lp, token_axes,
+                                             page_size=ps)
+                phys = jnp.where(active, bt_row[lp], jnp.int32(NP))
+                new_p = jnp.where(active, p + jnp.int32(1), p)
+                return new_tok, new_p, pages, phys
+
+            toks2, pos2, pages, phys = jax.vmap(
+                lane, in_axes=(0, 0, 0))(toks, pos, bt)
+            return toks2, pos2, scatter_pages(pool, phys, pages)
+
+        def scrub(pool, page_ids):
+            return scrub_pages(pool, page_ids)
+
+        def compact(pool, src_ids, dst_ids):
+            return compact_pool(pool, src_ids, dst_ids)
+
+        cl = self.cl
+        self._register(cl, "init_params", init_params, (0,))
+        self._register(cl, "init_paged", init_paged, ())
+        slot_abs = jnp.int32(0)
+        ids_abs = jax.ShapeDtypeStruct((B,), jnp.int32)
+        np_abs = jax.ShapeDtypeStruct((NP,), jnp.int32)
+        for P, (prompt_abs, pf_tok_abs, pf_cache_abs) in pf_abs.items():
+            self._register(cl, f"prefill_{P}", prefill_one,
+                           (params_abs, prompt_abs))
+            n_pp = self.pool.pages_for_tokens(P)
+
+            def admit(toks, pos, pool, pf_tok, pf_cache, slot, page_ids,
+                      P=P):
+                slot = jnp.asarray(slot, jnp.int32)
+                toks = jax.lax.dynamic_update_slice(
+                    toks, pf_tok[:, None], (slot, jnp.int32(0)))
+                pos = jax.lax.dynamic_update_slice(
+                    pos, jnp.full((1,), P, jnp.int32), (slot,))
+                pool = scatter_prefill(pool, page_ids, pf_cache,
+                                       token_axes, page_size=ps,
+                                       prompt_len=P)
+                return toks, pos, pool
+
+            pp_abs = jax.ShapeDtypeStruct((n_pp,), jnp.int32)
+            self._register(
+                cl, f"admit_{P}", admit,
+                (toks_abs, pos_abs, pool_abs, pf_tok_abs, pf_cache_abs,
+                 slot_abs, pp_abs),
+                donate_argnums=(0, 1, 2))
+        self._register(cl, "scrub", scrub, (pool_abs, ids_abs),
+                       donate_argnums=(0,))
+        self._register(cl, "compact_pool", compact,
+                       (pool_abs, np_abs, np_abs), donate_argnums=(0,))
+        self._register(cl, "decode_step", decode_step,
+                       (params_abs, toks_abs, pos_abs, bt_abs, pool_abs),
+                       donate_argnums=(1, 2, 4))
+        if not restore:
+            cl.clCreateBuffer("params", params_abs)
+            cl.clCreateBuffer("toks", toks_abs)
+            cl.clCreateBuffer("pos", pos_abs)
+            cl.clCreateBuffer("block_table", bt_abs)
+            cl.clCreateBuffer("kv_pool", pool_abs, paged=True)
+            cl.clCreateBuffer("pf_tok", pf_abs[self.prompt_len][1])
+            for P, (prompt_abs, _, pf_cache_abs) in pf_abs.items():
+                cl.clCreateBuffer(f"pf_prompt_{P}", prompt_abs)
+                cl.clCreateBuffer(f"pf_cache_{P}", pf_cache_abs)
+            cl.clEnqueueKernel("init_params", (), ("params",),
+                               const_args=(self.seed,))
+            cl.clEnqueueKernel("init_paged", (),
+                               ("toks", "pos", "kv_pool"))
+            cl.write_buffer("block_table", self._bt_host.copy())
+            cl.clFinish()
+            self._bt_dirty = False
+
+    # -- reserved (worst-case stripe) layout -----------------------------
+    def _setup_reserved(self, restore: bool) -> None:
+        bundle, B, P = self.bundle, self.slots, self.prompt_len
+        prefill_one = self._prefill_fn()
+
+        def init_params(seed):
+            return bundle.init(jax.random.PRNGKey(seed))
 
         def decode_step(params, toks, pos, caches):
             def lane(tok, p, cache):
@@ -193,25 +415,25 @@ class ContinuousBatchingEngine:
         toks_abs = jax.ShapeDtypeStruct((B, 1), jnp.int32)
         pos_abs = jax.ShapeDtypeStruct((B,), jnp.int32)
         self._caches_abs = caches_abs
+        self.pool_bytes = cache_bytes(caches_abs)
 
         def init_slots():
             return (jnp.zeros((B, 1), jnp.int32), jnp.zeros((B,), jnp.int32),
                     init_caches_from_specs(caches_abs))
 
         cl = self.cl
-        cl.clCreateProgramWithBinary(Program("init_params", init_params),
-                                     (0,))
-        cl.clCreateProgramWithBinary(Program("init_slots", init_slots), ())
-        cl.clCreateProgramWithBinary(Program("prefill_one", prefill_one),
-                                     (params_abs, prompt_abs))
+        self._register(cl, "init_params", init_params, (0,))
+        self._register(cl, "init_slots", init_slots, ())
+        self._register(cl, f"prefill_{P}", prefill_one,
+                       (params_abs, prompt_abs))
         slot_abs = jnp.int32(0)
-        cl.clCreateProgramWithBinary(
-            Program("admit_slot", admit_slot),
+        self._register(
+            cl, "admit_slot", admit_slot,
             (toks_abs, pos_abs, caches_abs, pf_tok_abs, pf_cache_abs,
              slot_abs),
             donate_argnums=(0, 1, 2))
-        cl.clCreateProgramWithBinary(
-            Program("decode_step", decode_step),
+        self._register(
+            cl, "decode_step", decode_step,
             (params_abs, toks_abs, pos_abs, caches_abs),
             donate_argnums=(1, 2, 3))
         if not restore:
@@ -219,14 +441,13 @@ class ContinuousBatchingEngine:
             cl.clCreateBuffer("toks", toks_abs)
             cl.clCreateBuffer("pos", pos_abs)
             cl.clCreateBuffer("caches", caches_abs)
-            cl.clCreateBuffer("pf_prompt", prompt_abs)
+            cl.clCreateBuffer(f"pf_prompt_{P}", prompt_abs)
             cl.clCreateBuffer("pf_tok", pf_tok_abs)
-            cl.clCreateBuffer("pf_cache", pf_cache_abs)
+            cl.clCreateBuffer(f"pf_cache_{P}", pf_cache_abs)
             cl.clEnqueueKernel("init_params", (), ("params",),
                                const_args=(self.seed,))
             cl.clEnqueueKernel("init_slots", (), ("toks", "pos", "caches"))
             cl.clFinish()
-        self._setup_done = True
 
     # ------------------------------------------------------------------
     # Request intake
@@ -244,11 +465,30 @@ class ContinuousBatchingEngine:
     def active_count(self) -> int:
         return len(self._active)
 
-    def _pad_prompt(self, prompt: np.ndarray) -> np.ndarray:
-        p = np.asarray(prompt, np.int32).reshape(-1)[: self.prompt_len]
-        if p.shape[0] < self.prompt_len:
-            p = np.pad(p, (0, self.prompt_len - p.shape[0]))
-        return p.reshape(1, self.prompt_len)
+    def _pick_bucket(self, prompt_len: int) -> int:
+        for b in self.buckets:
+            if prompt_len <= b:
+                return b
+        return self.buckets[-1]         # over-long prompts truncate
+
+    def _pad_prompt(self, prompt: np.ndarray, bucket: int) -> np.ndarray:
+        p = np.asarray(prompt, np.int32).reshape(-1)[:bucket]
+        if p.shape[0] < bucket:
+            p = np.pad(p, (0, bucket - p.shape[0]))
+        return p.reshape(1, bucket)
+
+    def kv_stats(self) -> dict:
+        """Cache-memory occupancy in the shared byte accounting."""
+        if not self.paged:
+            return {"paged": False, "pool_bytes": self.pool_bytes,
+                    "bytes_in_use": self.pool_bytes, "occupancy": 1.0}
+        used = self.pool.used_count()
+        return {"paged": True, "pool_bytes": self.pool_bytes,
+                "page_bytes": self.page_bytes,
+                "pages_used": used, "pages_free": self.pool.free_count(),
+                "bytes_in_use": used * self.page_bytes,
+                "occupancy": self.pool.occupancy(),
+                "used_span": self.pool.used_span()}
 
     # ------------------------------------------------------------------
     # One iteration: admit into free lanes, decode all occupied lanes
@@ -257,27 +497,68 @@ class ContinuousBatchingEngine:
         admitted = 0
         cl = self.cl
         while self._free and self.pending:
+            req = self.pending[0]
+            bucket = self._pick_bucket(
+                np.asarray(req.prompt).reshape(-1).shape[0])
+            page_ids = None
+            if self.paged:
+                n_pp = self.pool.pages_for_tokens(bucket)
+                if not self.pool.can_admit(n_pp):
+                    break               # memory-based admission gate
+                page_ids = self.pool.alloc(n_pp)
+            self.pending.popleft()
             slot = heapq.heappop(self._free)
-            req = self.pending.popleft()
-            cl.write_buffer("pf_prompt", self._pad_prompt(req.prompt))
-            cl.clEnqueueKernel("prefill_one", ("params", "pf_prompt"),
-                               ("pf_tok", "pf_cache"))
-            cl.clEnqueueKernel(
-                "admit_slot",
-                ("toks", "pos", "caches", "pf_tok", "pf_cache"),
-                ("toks", "pos", "caches"),
-                const_args=(np.int32(slot),), donate=True)
+            cl.write_buffer(f"pf_prompt_{bucket}",
+                            self._pad_prompt(req.prompt, bucket))
+            cl.clEnqueueKernel(f"prefill_{bucket}",
+                               ("params", f"pf_prompt_{bucket}"),
+                               ("pf_tok", f"pf_cache_{bucket}"))
+            if self.paged:
+                cl.clEnqueueKernel(
+                    f"admit_{bucket}",
+                    ("toks", "pos", "kv_pool", "pf_tok",
+                     f"pf_cache_{bucket}"),
+                    ("toks", "pos", "kv_pool"),
+                    const_args=(np.int32(slot),
+                                np.asarray(page_ids, np.int32)),
+                    donate=True,
+                    dirty_pages={"kv_pool": tuple(page_ids)})
+                self._bt_host[slot, :] = -1
+                self._bt_host[slot, :len(page_ids)] = page_ids
+                self._bt_dirty = True
+            else:
+                cl.clEnqueueKernel(
+                    "admit_slot",
+                    ("toks", "pos", "caches", "pf_tok",
+                     f"pf_cache_{bucket}"),
+                    ("toks", "pos", "caches"),
+                    const_args=(np.int32(slot),), donate=True)
             first_tok = int(np.asarray(cl.read_buffer("pf_tok"))[0])
             now = self._clock()
+            first_t = now
+            if self.paged:
+                # an OOM-preempted request recomputes, but the client saw
+                # its first token on the first admission — keep that TTFT
+                prior = self._first_token.get(req.rid)
+                if prior is not None:
+                    first_t = prior
+                else:
+                    self._first_token[req.rid] = now
+                    self._h_ttft.observe(now - req.arrival_t)
+            else:
+                self._h_ttft.observe(now - req.arrival_t)
             st = _SlotState(req=req, slot=slot, tokens=[first_tok],
-                            admit_t=now, first_token_t=now,
-                            last_token_t=now)
-            self._h_ttft.observe(now - req.arrival_t)
+                            admit_t=now, first_token_t=first_t,
+                            last_token_t=now,
+                            limit=max(1, min(req.max_new_tokens,
+                                             self.max_new_tokens)),
+                            bucket=bucket, pos=bucket,
+                            blocks=list(page_ids) if page_ids else [])
             self._c_tokens.inc()
             self.registry.record_event("engine_admit", rid=req.rid,
                                        slot=slot, engine=self.engine_id)
             admitted += 1
-            if len(st.tokens) >= req.max_new_tokens:
+            if len(st.tokens) >= st.limit:
                 self._retire(st, now)       # degenerate 1-token request
             else:
                 self._active[slot] = st
@@ -292,6 +573,13 @@ class ContinuousBatchingEngine:
         self._unreported.append(rec)
         self._active.pop(st.slot, None)
         heapq.heappush(self._free, st.slot)
+        if self.paged:
+            # pages return to the pool the moment the request retires; the
+            # cleared row deactivates the lane for the next decode gather
+            self.pool.free(st.blocks)
+            self._bt_host[st.slot, :] = -1
+            self._bt_dirty = True
+            self._first_token.pop(st.req.rid, None)
         self._h_e2e.observe(rec.e2e_s)
         self._c_completions.inc()
         if st.req.slo_s is not None and rec.e2e_s > st.req.slo_s:
@@ -300,27 +588,118 @@ class ContinuousBatchingEngine:
                                    slot=st.slot, tokens=len(st.tokens),
                                    engine=self.engine_id)
 
+    # -- paged-mode page lifecycle ---------------------------------------
+    def _pick_victim(self) -> _SlotState:
+        """Youngest admission loses (its recomputation is cheapest); the
+        oldest lane always keeps making progress, so the engine never
+        livelocks as long as the pool holds one worst-case request."""
+        return max(self._active.values(), key=lambda s: (s.admit_t, s.slot))
+
+    def _preempt(self, st: _SlotState) -> None:
+        self.pool.free(st.blocks)
+        self._bt_host[st.slot, :] = -1
+        self._bt_dirty = True
+        self._active.pop(st.slot)
+        heapq.heappush(self._free, st.slot)
+        self.pending.appendleft(st.req)     # deterministic recompute
+        self.preemptions += 1
+        self._c_preemptions.inc()
+        self.registry.record_event("engine_oom_preempt", rid=st.req.rid,
+                                   slot=st.slot, engine=self.engine_id)
+
+    def _append_pages(self) -> None:
+        """Token-granularity growth: map the page each lane's next write
+        lands in, preempting the youngest lane(s) when the pool runs dry."""
+        scrub_ids: List[int] = []
+        for slot in sorted(self._active):
+            st = self._active.get(slot)
+            if st is None:
+                continue                # preempted by an earlier append
+            lp = st.pos // self.page_size
+            if self._bt_host[slot, lp] >= 0:
+                continue
+            got = self.pool.alloc(1, urgent=True)
+            while got is None:
+                victim = self._pick_victim()
+                self._preempt(victim)
+                if victim is st:
+                    break
+                got = self.pool.alloc(1, urgent=True)
+            if got is None:
+                continue                # st preempted itself
+            assert lp == len(st.blocks), (lp, st.blocks)
+            st.blocks.append(got[0])
+            self._bt_host[slot, lp] = got[0]
+            self._bt_dirty = True
+            scrub_ids.append(got[0])
+        if scrub_ids:
+            ids = np.full((self.slots,), self.pool_pages, np.int32)
+            ids[:len(scrub_ids)] = scrub_ids
+            self.cl.clEnqueueKernel(
+                "scrub", ("kv_pool",), ("kv_pool",), const_args=(ids,),
+                donate=True, dirty_pages={"kv_pool": tuple(scrub_ids)})
+
+    def compact(self) -> dict:
+        """Defragment the pool: pack used pages into the lowest physical
+        ids (shrinks the evict-time dirty-page span after churn).  Call
+        between iterations only."""
+        if not self.paged:
+            return {"moved": 0}
+        mapping = self.pool.compact()
+        if mapping:
+            src = np.full((self.pool_pages,), self.pool_pages, np.int32)
+            dst = np.full((self.pool_pages,), self.pool_pages, np.int32)
+            src[:len(mapping)] = list(mapping.keys())
+            dst[:len(mapping)] = list(mapping.values())
+            self.cl.clEnqueueKernel(
+                "compact_pool", ("kv_pool",), ("kv_pool",),
+                const_args=(src, dst), donate=True,
+                dirty_pages={"kv_pool": tuple(mapping.values())})
+            for st in self._active.values():
+                st.blocks = [mapping.get(p, p) for p in st.blocks]
+                self._bt_host[st.slot, :len(st.blocks)] = st.blocks
+            self._bt_dirty = True
+        return {"moved": len(mapping), "span": self.pool.used_span()}
+
+    # -- one iteration ---------------------------------------------------
     def step(self) -> dict:
         """One engine iteration; returns counts for the caller's pacing."""
         if not self._setup_done:
             raise RuntimeError("engine.setup() has not run")
         admitted = self._admit()
+        self.peak_active = max(self.peak_active, len(self._active))
         decoded = 0
+        if self._active and self.paged:
+            self._append_pages()
         if self._active:
-            self.cl.clEnqueueKernel(
-                "decode_step", ("params", "toks", "pos", "caches"),
-                ("toks", "pos", "caches"), donate=True)
+            if self.paged:
+                if self._bt_dirty:
+                    self.cl.write_buffer("block_table", self._bt_host.copy())
+                    self._bt_dirty = False
+                dirty = sorted({int(self._bt_host[
+                    s.slot, s.pos // self.page_size])
+                    for s in self._active.values()})
+                self.cl.clEnqueueKernel(
+                    "decode_step",
+                    ("params", "toks", "pos", "block_table", "kv_pool"),
+                    ("toks", "pos", "kv_pool"), donate=True,
+                    dirty_pages={"kv_pool": tuple(dirty)})
+            else:
+                self.cl.clEnqueueKernel(
+                    "decode_step", ("params", "toks", "pos", "caches"),
+                    ("toks", "pos", "caches"), donate=True)
             # token delivery doubles as the iteration's sync point — the
             # d2h TRANSFER drains the queue and lands on a token boundary
             toks = np.asarray(self.cl.read_buffer("toks"))
             now = self._clock()
             for st in list(self._active.values()):
                 st.tokens.append(int(toks[st.slot, 0]))
+                st.pos += 1
                 st.tbts.append(now - st.last_token_t)
                 self._h_tbt.observe(now - st.last_token_t)
                 st.last_token_t = now
                 decoded += 1
-                if len(st.tokens) >= st.req.max_new_tokens:
+                if len(st.tokens) >= st.limit:
                     self._retire(st, now)
             self._c_tokens.inc(decoded)
         self.iterations += 1
@@ -328,6 +707,9 @@ class ContinuousBatchingEngine:
         if self._publish_gauges:
             self._g_queue.set(len(self.pending))
             self._g_util.set(len(self._active) / self.slots)
+            if self.paged:
+                self._g_kv.set(self.pool.occupancy())
+                self._g_kv_free.set(self.pool.free_count())
         return {"admitted": admitted, "decoded": decoded,
                 "active": len(self._active), "pending": len(self.pending)}
 
@@ -347,6 +729,18 @@ class ContinuousBatchingEngine:
         self.pending.clear()
         self._free = list(range(self.slots))
         heapq.heapify(self._free)
+        if self.paged:
+            self.pool = BlockPool(self.pool_pages, self.page_size,
+                                  reserve_pages=self.pool.reserve_pages)
+            self._bt_host[:] = -1
+            self._bt_dirty = True
+            self._first_token.clear()
+            if self._publish_gauges:
+                # a killed replica must not pin the service-level pressure
+                # signal at its last (hot) value — the aggregator keeps
+                # gauges of dead engines forever
+                self._g_kv.set(0.0)
+                self._g_kv_free.set(self.pool.free_count())
         return reqs
 
     def run_until_drained(self, max_iterations: int = 100000) -> None:
@@ -359,10 +753,13 @@ class ContinuousBatchingEngine:
     # ------------------------------------------------------------------
     # Router integration (live plane): pull admissible work, push results
     # ------------------------------------------------------------------
-    def pump(self, router) -> bool:
-        """One iteration against a ``RequestRouter``; True if work moved."""
-        for req in router.pop(len(self._free)):
-            self.submit(req)
+    def pump(self, router, admit: bool = True) -> bool:
+        """One iteration against a ``RequestRouter``; True if work moved.
+        ``admit=False`` (a draining replica) pulls nothing new and only
+        finishes what it already holds."""
+        if admit:
+            for req in router.pop(len(self._free)):
+                self.submit(req)
         moved = bool(self._active or self.pending)
         if moved:
             self.step()

@@ -1,24 +1,306 @@
-"""Concrete cache construction + prompt utilities for serving."""
+"""Paged vFPGA device-memory virtualization for KV caches (paper §3.4).
+
+The serving engine used to reserve a worst-case ``prompt_len +
+max_new_tokens`` KV stripe per decode lane at admission.  This module
+virtualizes that memory behind an indirection layer, PagedAttention-style:
+
+* ``BlockPool`` — the host-side allocator.  Device KV memory is a pool of
+  fixed-size pages; lanes hold pages at *token* granularity (prompt pages
+  at admission, one page at a time as decode crosses page boundaries) and
+  free them the moment a request retires.  Admission is memory-based:
+  admit while ``free_pages - need >= reserve_pages``, so the lane count can
+  exceed what worst-case reservations would allow.
+* **block table** — per-lane ``(max_blocks,)`` int32 rows mapping logical
+  page index -> physical page id (-1 = unmapped).  The vmapped decode step
+  gathers each lane's logical cache through its row; admission scatters the
+  prefill cache into freshly allocated pages.
+* traced helpers (``gather_lane_cache`` / ``extract_written_page`` /
+  ``scatter_pages`` / ``scatter_prefill`` / ``scrub_pages`` /
+  ``compact_pool``) — the kernel-side pieces the engine's programs are
+  built from.  ``scrub_pages`` invalidates the position row of every page
+  on (re)allocation, the paged analogue of the monitor zeroing freed device
+  memory (§3.4 isolation): a new owner can never attend to a previous
+  lane's tokens.
+* ``BlockPool.compact`` — defragmentation: pack used pages into the lowest
+  physical ids so the pool's high-water span (and therefore the worst-case
+  dirty-page walk on evict) shrinks after churn.
+
+Every leaf of the device pool has the page axis as axis 0, matching the
+``BufferTable``'s page-granular dirtiness: evict/checkpoint serialize only
+the pages written since the last sync plus the (tiny) block table.
+"""
 
 from __future__ import annotations
+
+import heapq
+import math
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ModelConfig
+from repro.core.state import tree_bytes
 from repro.models.attention import _INVALID_POS
+
+# one exported byte-accounting helper (shared with the buffer state machine)
+cache_bytes = tree_bytes
 
 
 def init_caches_from_specs(specs):
     """Zeros for k/v/state leaves; INVALID sentinel for kv_pos leaves."""
     def mk(path, leaf):
-        names = [k.key for k in path if hasattr(k, "key")]
-        if names and names[-1] == "kv_pos":
+        if _is_pos_leaf(path):
             return jnp.full(leaf.shape, _INVALID_POS, jnp.int32)
         return jnp.zeros(leaf.shape, leaf.dtype)
 
     return jax.tree_util.tree_map_with_path(mk, specs)
 
 
-def cache_bytes(caches) -> int:
-    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(caches))
+def _is_pos_leaf(path) -> bool:
+    names = [k.key for k in path if hasattr(k, "key")]
+    return bool(names) and names[-1] == "kv_pos"
+
+
+def pages_for_tokens(n_tokens: int, page_size: int) -> int:
+    return max(1, math.ceil(n_tokens / page_size))
+
+
+# ---------------------------------------------------------------------------
+# Host-side page allocator
+# ---------------------------------------------------------------------------
+class BlockPoolError(RuntimeError):
+    pass
+
+
+class BlockPool:
+    """Fixed-size page allocator over the device KV pool.
+
+    Deterministic by construction (lowest free id first) so paged decoding
+    replays bit-exactly across evict/resume.  ``reserve_pages`` is the
+    admission watermark: normal allocations keep that many pages free for
+    in-flight decode appends; ``urgent=True`` (the append path) may dip
+    into the reserve — when even that fails the engine preempts a lane.
+    """
+
+    def __init__(self, num_pages: int, page_size: int, *,
+                 reserve_pages: int = 0):
+        if num_pages <= 0 or page_size <= 0:
+            raise ValueError("need num_pages > 0 and page_size > 0")
+        if reserve_pages >= num_pages:
+            raise ValueError("reserve watermark leaves no usable pages")
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self.reserve_pages = reserve_pages
+        self._free: List[int] = list(range(num_pages))
+        heapq.heapify(self._free)
+        self._used: set = set()
+
+    # -- accounting ------------------------------------------------------
+    def free_count(self) -> int:
+        return len(self._free)
+
+    def used_count(self) -> int:
+        return len(self._used)
+
+    def occupancy(self) -> float:
+        return len(self._used) / self.num_pages
+
+    def used_span(self) -> int:
+        """High-water mark: 1 + the highest physical id in use."""
+        return max(self._used) + 1 if self._used else 0
+
+    def pages_for_tokens(self, n_tokens: int) -> int:
+        return pages_for_tokens(n_tokens, self.page_size)
+
+    def can_admit(self, n_pages: int) -> bool:
+        return self.free_count() - n_pages >= self.reserve_pages
+
+    # -- alloc / free ----------------------------------------------------
+    def alloc(self, n_pages: int, *, urgent: bool = False,
+              ) -> Optional[List[int]]:
+        """Allocate ``n_pages`` (lowest ids first), or None if the request
+        would breach the watermark (``urgent`` ignores the watermark)."""
+        avail = self.free_count() - (0 if urgent else self.reserve_pages)
+        if n_pages > avail:
+            return None
+        out = [heapq.heappop(self._free) for _ in range(n_pages)]
+        self._used.update(out)
+        return out
+
+    def free(self, page_ids: Sequence[int]) -> None:
+        for p in page_ids:
+            if p not in self._used:
+                raise BlockPoolError(f"double free of page {p}")
+            self._used.discard(p)
+            heapq.heappush(self._free, p)
+
+    # -- defragmentation -------------------------------------------------
+    def compact(self) -> Dict[int, int]:
+        """Pack used pages into the lowest physical ids.
+
+        Returns {old_id: new_id} for every page that moves (destinations
+        are free before the call, so a single gather+scatter applies the
+        whole mapping without ordering hazards).  The caller must rewrite
+        its block tables and move the device pages.
+        """
+        k = len(self._used)
+        dests = [i for i in range(k) if i not in self._used]
+        movers = [p for p in sorted(self._used) if p >= k]
+        mapping = dict(zip(movers, dests))
+        if mapping:
+            self._used = (self._used - set(movers)) | set(mapping.values())
+            self._free = [i for i in range(self.num_pages)
+                          if i not in self._used]
+            heapq.heapify(self._free)
+        return mapping
+
+    def check_invariants(self) -> None:
+        free = set(self._free)
+        if len(free) != len(self._free):
+            raise BlockPoolError("duplicate ids in free list")
+        if free & self._used:
+            raise BlockPoolError("page both free and used")
+        if free | self._used != set(range(self.num_pages)):
+            raise BlockPoolError("pages leaked from the pool")
+
+
+# ---------------------------------------------------------------------------
+# Pool pytree construction
+# ---------------------------------------------------------------------------
+# Models differ in cache leaf layout: a scanned backbone stacks a layer
+# axis in front ((L, 1, cap, H, hd) k/v, (L, cap) kv_pos), MLA keeps
+# compressed latents, etc.  Rather than hard-coding layouts, the engine
+# discovers each leaf's *token axis* once at setup by diffing the abstract
+# prefill cache at two prompt lengths; every traced helper then normalizes
+# a leaf by moving that axis to the front, so the pool layout is always
+# ``(num_pages, page_size, *rest)`` with ``rest`` the per-token residue in
+# original order (layer/batch/head axes included).
+
+def token_axes_from_lengths(cache_a, cache_b, len_a: int, len_b: int):
+    """Per-leaf token-axis pytree: the unique axis whose size tracks the
+    prompt length.  Raises for window-bounded ring caches (no axis moves)
+    or exotic layouts (several axes move) — those need reserved mode."""
+    def ax(la, lb):
+        diffs = [i for i, (x, y) in enumerate(zip(la.shape, lb.shape))
+                 if x != y]
+        if (len(diffs) != 1 or la.shape[diffs[0]] != len_a
+                or lb.shape[diffs[0]] != len_b):
+            raise ValueError(
+                f"cannot page cache leaf {la.shape} -> {lb.shape}: token "
+                "axis is not uniquely prompt-length-sized (window-bounded "
+                "ring cache?); run the engine with paged=False")
+        return diffs[0]
+
+    return jax.tree.map(ax, cache_a, cache_b)
+
+
+def _token_first(leaf, axis):
+    return jnp.moveaxis(leaf, axis, 0)
+
+
+def pool_specs_from_lane_cache(lane_cache_abs, token_axes, num_pages: int,
+                               page_size: int):
+    """Per-lane cache pytree -> page-pool pytree: each leaf becomes
+    ``(num_pages, page_size, *rest)``.  Structure (and the ``kv_pos`` leaf
+    names the init helper keys on) is preserved."""
+    def mk(leaf, axis):
+        rest = leaf.shape[:axis] + leaf.shape[axis + 1:]
+        return jax.ShapeDtypeStruct((num_pages, page_size) + rest,
+                                    leaf.dtype)
+
+    return jax.tree.map(mk, lane_cache_abs, token_axes)
+
+
+# ---------------------------------------------------------------------------
+# Traced kernel-side helpers
+# ---------------------------------------------------------------------------
+def gather_lane_cache(pool, block_row, token_axes, *, page_size: int):
+    """Reassemble one lane's logical cache from the pool through its block
+    table row (traced, vmapped over lanes by the engine).
+
+    Unmapped pages (id < 0) are clamped for the gather but their positions
+    are forced to the INVALID sentinel, so attention masks them out no
+    matter what the clamped page holds.
+    """
+    max_blocks = block_row.shape[0]
+    cap = max_blocks * page_size
+
+    def gk(path, leaf, axis):
+        safe = jnp.clip(block_row, 0, leaf.shape[0] - 1)
+        pages = leaf[safe]                       # (max_blocks, ps, *rest)
+        flat = pages.reshape((cap,) + leaf.shape[2:])
+        if _is_pos_leaf(path):
+            valid = jnp.repeat(block_row >= 0, page_size)
+            flat = jnp.where(
+                valid.reshape((cap,) + (1,) * (flat.ndim - 1)),
+                flat, _INVALID_POS)
+        return jnp.moveaxis(flat, 0, axis)       # original lane layout
+
+    return jax.tree_util.tree_map_with_path(gk, pool, token_axes)
+
+
+def extract_written_page(new_lane_cache, logical_page, token_axes, *,
+                         page_size: int):
+    """Slice the page containing this step's single-token write back out of
+    a lane's updated logical cache (traced; ``logical_page`` is dynamic)."""
+    def ex(leaf, axis):
+        tf = _token_first(leaf, axis)
+        start = (logical_page * page_size,) + (0,) * (tf.ndim - 1)
+        return jax.lax.dynamic_slice(tf, start,
+                                     (page_size,) + tf.shape[1:])
+
+    return jax.tree.map(ex, new_lane_cache, token_axes)
+
+
+def scatter_pages(pool, phys_ids, pages):
+    """Write per-lane updated pages back into the pool.  ``phys_ids`` is
+    (lanes,); out-of-range ids (inactive lanes) are dropped.  Active lanes
+    own disjoint pages, so the scatter is conflict-free."""
+    return jax.tree.map(
+        lambda pl, pg: pl.at[phys_ids].set(pg, mode="drop"), pool, pages)
+
+
+def scatter_prefill(pool, page_ids, pf_cache, token_axes, *,
+                    page_size: int, prompt_len: int):
+    """Admission: distribute a prefill cache across freshly allocated pages.
+
+    The tail page's unfilled slots get zeros / INVALID positions, so decode
+    can write into them later without a scrub.
+    """
+    n_pp = page_ids.shape[0]
+    pad = n_pp * page_size - prompt_len
+
+    def sc(path, pool_leaf, pf_leaf, axis):
+        vals = _token_first(pf_leaf, axis)       # (P, *rest)
+        if pad:
+            fill = (jnp.full((pad,) + vals.shape[1:], _INVALID_POS,
+                             jnp.int32) if _is_pos_leaf(path)
+                    else jnp.zeros((pad,) + vals.shape[1:], vals.dtype))
+            vals = jnp.concatenate([vals, fill])
+        vals = vals.reshape((n_pp, page_size) + vals.shape[1:])
+        return pool_leaf.at[page_ids].set(vals)
+
+    return jax.tree_util.tree_map_with_path(sc, pool, pf_cache, token_axes)
+
+
+def scrub_pages(pool, page_ids):
+    """Invalidate the kv_pos rows of (re)allocated pages — freed-memory
+    zeroing (§3.4): whatever k/v bytes the previous owner left behind are
+    unreachable once their positions read INVALID.  Out-of-range ids in the
+    fixed-width ``page_ids`` vector are padding and dropped."""
+    def f(path, leaf):
+        if _is_pos_leaf(path):
+            return leaf.at[page_ids].set(_INVALID_POS, mode="drop")
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(f, pool)
+
+
+def compact_pool(pool, src_ids, dst_ids):
+    """Apply a ``BlockPool.compact`` mapping on-device: move page ``src``
+    to ``dst`` for each pair (destinations were free, so gather-then-
+    scatter is safe).  Padding entries point out of range and are dropped.
+    """
+    return jax.tree.map(
+        lambda leaf: leaf.at[dst_ids].set(leaf[jnp.clip(
+            src_ids, 0, leaf.shape[0] - 1)], mode="drop"), pool)

@@ -154,7 +154,7 @@ class _FakeOrch:
         self.deployments[new_cid] = _FakeDep()
         return new_cid
 
-    def scale_in(self, cid):
+    def scale_in(self, cid, drain_s=0.0):
         self.deployments[cid].status = "removed"
         self._free += 1
         self.removed.append(cid)
@@ -215,3 +215,51 @@ def test_serving_simulator_emits_canonical_schema():
     # the signal reader the orchestrator uses works against the sim registry
     s = signals_from_registry(sim.metrics, "svc")
     assert s.replicas >= 1
+
+
+# ---------------------------------------------------------------------------
+# cache-memory occupancy: KV pool model + pressure signal/policy
+# ---------------------------------------------------------------------------
+def test_kv_pressure_policy_composes():
+    from repro.scaling.autoscaler import KVPressurePolicy
+
+    p = KVPressurePolicy(inner=QueueLengthPolicy(target_per_replica=2.0),
+                         high_watermark=0.8)
+    calm = sig(replicas=2)
+    calm.kv_pressure = 0.5
+    assert p.desired_replicas(calm) == p.inner.desired_replicas(calm)
+    hot = sig(replicas=2)
+    hot.kv_pressure = 0.95                 # pool nearly full, queue empty
+    assert p.desired_replicas(hot) == 3
+
+
+def test_serving_simulator_kv_pool_model():
+    """A tight pool shows up as the canonical kv signal, blocks admission
+    on memory, and OOM-preempts growing requests — which the autoscaler
+    relieves by adding replicas (capacity = replicas x pool_pages)."""
+    from repro.core.simulator import KVModelParams
+    from repro.scaling.autoscaler import (KVPressurePolicy,
+                                          signals_from_registry)
+
+    reqs = open_loop(burst_rate(3.0, 5.0, 3.0, 8.0), 20.0, seed=5,
+                     mean_service_s=0.4, tokens_range=(8, 33))
+    kv = KVModelParams(pool_pages=5, page_tokens=8, prompt_tokens=16,
+                       default_tokens=16)
+    fixed = ServingSimulator(reqs, initial_replicas=2, kv_model=kv)
+    fixed_rep = fixed.run()
+    assert fixed_rep["completed"] == len(reqs)         # preempts, finishes
+    assert fixed_rep["kv_peak_occupancy"] > 0.9        # pool genuinely hot
+    assert fixed_rep["kv_preemptions"] > 0
+    snap = fixed.metrics.snapshot()
+    assert "kv_pages_in_use_ratio{service=svc}" in snap["gauges"]
+    s = signals_from_registry(fixed.metrics, "svc")
+    assert 0.0 <= s.kv_pressure <= 1.0
+
+    asc = Autoscaler(KVPressurePolicy(QueueLengthPolicy(2.0),
+                                      high_watermark=0.8),
+                     max_replicas=8, scale_down_cooldown_s=5.0)
+    elastic = ServingSimulator(reqs, autoscaler=asc, initial_replicas=2,
+                               kv_model=kv).run()
+    assert elastic["completed"] == len(reqs)
+    assert elastic["max_replicas"] > 2                 # pressure scaled out
+    assert elastic["kv_preemptions"] <= fixed_rep["kv_preemptions"]

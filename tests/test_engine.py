@@ -1,6 +1,9 @@
-"""Continuous-batching engine: slot admission/backfill ordering, mid-batch
-preemption (evict -> resume resumes every in-flight sequence bit-exactly),
-per-request latency metrics, and router integration."""
+"""Continuous-batching engine over paged KV memory: slot admission/backfill
+ordering, paged-vs-reserved bit-exactness, mid-batch preemption (evict ->
+resume resumes every in-flight sequence bit-exactly, serializing only dirty
+pages), pool-exhaustion OOM preemption, block-table reuse without
+stale-page leakage, compaction, prompt buckets, draining, per-request
+latency metrics, and router integration."""
 
 import numpy as np
 import pytest
@@ -13,14 +16,16 @@ from repro.serve.engine import (M_TBT, M_TTFT, ContinuousBatchingEngine,
 
 ARCH = "yi-9b-smoke"
 PROMPT_LEN = 8
+PAGE = 4
 
 
-def make_engine(slots=2, max_new=8, registry=None):
+def make_engine(slots=2, max_new=8, registry=None, **kw):
     reg = registry if registry is not None else MetricsRegistry()
     mon = Monitor("eng-test", SliceAllocator("n0", 1), telemetry=reg)
     eng = ContinuousBatchingEngine(ARCH, FunkyCL(mon), slots=slots,
                                    prompt_len=PROMPT_LEN,
-                                   max_new_tokens=max_new, registry=reg)
+                                   max_new_tokens=max_new, registry=reg,
+                                   page_size=PAGE, **kw)
     eng.setup()
     return mon, eng, reg
 
@@ -90,40 +95,200 @@ def test_latency_metrics_schema(engine_run):
 
 
 def test_decode_and_admit_are_donated(engine_run):
-    """The KV-cache update path compiles with buffer donation (in-place
-    cache update, no per-token copy)."""
+    """The paged KV update path compiles with buffer donation (in-place
+    pool update, no per-token copy of the pool)."""
     eng, _, _ = engine_run
     mon_keys = [(pid, d) for (pid, _, d) in
                 eng.cl._monitor.programs._compiled.keys()]
-    assert ("decode_step", (1, 2, 3)) in mon_keys
-    assert ("admit_slot", (0, 1, 2)) in mon_keys
+    assert ("decode_step", (1, 2, 4)) in mon_keys          # toks, pos, pool
+    assert (f"admit_{PROMPT_LEN}", (0, 1, 2)) in mon_keys
+    assert ("scrub", (0,)) in mon_keys
 
 
-def test_preemption_mid_batch_resumes_identically():
-    """evict -> resume mid-batch: every in-flight sequence continues with
-    identical tokens (greedy decode + DIRTY-buffer snapshot/restore)."""
-    spec = [3, 6, 4, 5]
+SPEC = [3, 6, 4, 5]
 
-    mon_a, eng_a, _ = make_engine(slots=2, max_new=8)
-    for r in make_requests(spec, seed=3):
-        eng_a.submit(r)
-    eng_a.run_until_drained()
-    ref = {rid: rec.tokens for rid, rec in eng_a.completed.items()}
-    mon_a.vfpga_exit()
 
-    mon_b, eng_b, _ = make_engine(slots=2, max_new=8)
-    for r in make_requests(spec, seed=3):
-        eng_b.submit(r)
+@pytest.fixture(scope="module")
+def dense_ref():
+    """Worst-case-reservation (non-paged) reference tokens for SPEC."""
+    mon, eng, _ = make_engine(slots=2, max_new=8, paged=False)
+    for r in make_requests(SPEC, seed=3):
+        eng.submit(r)
+    eng.run_until_drained()
+    ref = {rid: rec.tokens for rid, rec in eng.completed.items()}
+    mon.vfpga_exit()
+    return ref
+
+
+def test_paged_evict_resume_bit_exact_vs_dense(dense_ref):
+    """Mid-batch evict -> resume of the paged engine: every in-flight
+    ragged sequence continues bit-exactly vs the dense baseline, and the
+    second evict serializes only the pages dirtied since the first."""
+    mon, eng, _ = make_engine(slots=2, max_new=8)
+    for r in make_requests(SPEC, seed=3):
+        eng.submit(r)
     for _ in range(2):
-        eng_b.step()
-    assert eng_b.active_count > 0          # genuinely mid-batch
-    stats = mon_b.evict()
+        eng.step()
+    assert eng.active_count > 0            # genuinely mid-batch
+    stats = mon.evict()
     assert stats["n_dirty"] > 0
-    mon_b.resume()
-    eng_b.run_until_drained()
-    got = {rid: rec.tokens for rid, rec in eng_b.completed.items()}
-    mon_b.vfpga_exit()
-    assert got == ref
+    # first evict has no prior host copy of the pool: full save
+    assert stats["paged_saved_pages"] == stats["paged_total_pages"] > 0
+    mon.resume()
+    eng.step()
+    assert eng.active_count > 0
+    stats2 = mon.evict()
+    # page-granular dirtiness: one iteration touches at most one page per
+    # active lane (plus appends), nowhere near the whole pool
+    assert 0 < stats2["paged_saved_pages"] < stats2["paged_total_pages"]
+    mon.resume()
+    eng.run_until_drained()
+    got = {rid: rec.tokens for rid, rec in eng.completed.items()}
+    mon.vfpga_exit()
+    assert got == dense_ref
+
+
+def test_oom_preemption_compaction_and_resume(dense_ref):
+    """A pool too small for every lane's worst case forces OOM preemption;
+    preempted requests recompute deterministically, compaction mid-flight
+    is invisible, and a mid-run evict/resume still lands bit-exactly."""
+    mon, eng, _ = make_engine(slots=2, max_new=8, pool_pages=6,
+                              reserve_pages=1)
+    for r in make_requests(SPEC, seed=3):
+        eng.submit(r)
+    for _ in range(3):
+        eng.step()
+    eng.compact()
+    eng.pool.check_invariants()
+    stats = mon.evict()
+    assert stats["n_dirty"] > 0
+    mon.resume()
+    eng.run_until_drained()
+    got = {rid: rec.tokens for rid, rec in eng.completed.items()}
+    assert eng.preemptions > 0             # the pool genuinely exhausted
+    eng.pool.check_invariants()
+    mon.vfpga_exit()
+    assert got == dense_ref
+
+
+def test_block_table_reuse_no_stale_page_leakage(dense_ref):
+    """Pages freed by one wave of requests are reused by the next; the
+    scrub-on-alloc rule means the new owners never attend to the previous
+    wave's tokens (their results match a fresh dense engine)."""
+    mon, eng, _ = make_engine(slots=2, max_new=8)
+    for r in make_requests([8, 7, 8, 6], seed=11):      # wave A: fill pool
+        eng.submit(r)
+    eng.run_until_drained()
+    assert eng.pool.used_count() == 0      # everything freed at retirement
+    wave_b = make_requests(SPEC, seed=3)
+    for r in wave_b:
+        r.rid = "b-" + r.rid
+        eng.submit(r)
+    eng.run_until_drained()
+    got = {rid[2:]: rec.tokens for rid, rec in eng.completed.items()
+           if rid.startswith("b-")}
+    mon.vfpga_exit()
+    assert got == dense_ref
+
+
+def test_memory_based_admission_and_watermark():
+    """Admission is gated on free pages, not lane count: with a pool that
+    holds one prompt (plus reserve), only one of two free lanes admits."""
+    mon, eng, _ = make_engine(slots=2, max_new=8, pool_pages=4,
+                              reserve_pages=1)
+    for r in make_requests([4, 4], seed=5):
+        eng.submit(r)
+    out = eng.step()
+    # prompt needs 2 pages; after one admission 2 free - 2 < 1 reserve
+    assert out["admitted"] == 1 and out["pending"] == 1
+    eng.run_until_drained()
+    assert len(eng.completed) == 2
+    mon.vfpga_exit()
+
+
+def test_prompt_buckets_route_admissions():
+    """Ragged prompts route to the smallest fitting prefill bucket instead
+    of all padding to one prompt_len."""
+    mon, eng, _ = make_engine(slots=2, max_new=6, prompt_buckets=(4, 8))
+    assert eng._pick_bucket(3) == 4
+    assert eng._pick_bucket(4) == 4
+    assert eng._pick_bucket(5) == 8
+    assert eng._pick_bucket(99) == 8       # over-long prompts truncate
+    mon_keys = [pid for (pid, _, _) in
+                eng.cl._monitor.programs._compiled.keys()]
+    assert {"prefill_4", "prefill_8", "admit_4", "admit_8"} <= set(mon_keys)
+    rng = np.random.Generator(np.random.Philox(9))
+    eng.submit(ServeRequest(rid="short", prompt=rng.integers(0, 100, 3),
+                            max_new_tokens=5))
+    eng.submit(ServeRequest(rid="long", prompt=rng.integers(0, 100, 8),
+                            max_new_tokens=4))
+    # an over-cap ask is clamped to the engine's provisioned cap instead
+    # of walking past the block table (cache is sized for max_new_tokens)
+    eng.submit(ServeRequest(rid="over", prompt=rng.integers(0, 100, 8),
+                            max_new_tokens=99))
+    eng.run_until_drained()
+    assert len(eng.completed["short"].tokens) == 5
+    assert len(eng.completed["long"].tokens) == 4
+    assert len(eng.completed["over"].tokens) == 6
+    # the short request was admitted at bucket width 4: its lane freed
+    # ceil((4 + 5) / PAGE) pages at retirement, not the bucket-8 worst case
+    admits = [e for e in eng.registry.flight_record()["events"]
+              if e[1] == "engine_admit"]
+    assert {a[2]["rid"] for a in admits} == {"short", "long", "over"}
+    mon.vfpga_exit()
+
+
+def test_drain_before_kill_live_replica():
+    """Scale-in prelude through the runtime: ``drain`` flips the replica
+    into its draining state, the driver finishes the held sequences and
+    exits at the request boundary — nothing is requeued for recomputation."""
+    import time
+
+    from repro.core import TaskImage, TaskStatus, make_cluster
+    from repro.scaling.serving import reset_router
+
+    img = TaskImage(name="drain-svc", kind="engine-serve", arch=ARCH,
+                    prompt_len=PROMPT_LEN, global_batch=2,
+                    total_steps=10 ** 9, max_new_tokens=6, page_size=PAGE)
+    cluster = make_cluster(num_nodes=1, slices_per_node=1,
+                           images={"drain-svc": img})
+    router = reset_router("drain-svc")
+    try:
+        rt = cluster.nodes["node0"].runtime
+        rt.create("d1", img)
+        rt.start("d1")
+        for r in make_requests([4, 4, 4], seed=13):
+            router.submit(r)
+        deadline = time.time() + 300
+        while not router.in_flight and time.time() < deadline:
+            time.sleep(0.01)               # wait until the engine has work
+        stats = rt.drain("d1", timeout_s=300)
+        assert stats["drained"]
+        assert rt.wait("d1", timeout=60) == TaskStatus.DONE
+        assert router.in_flight == 0       # held work finished, not requeued
+        assert len(router.completed) + router.pending_count() == 3
+        assert len(router.completed) >= 2
+        rt.kill("d1")                      # the follow-up remove is a no-op
+        assert router.pending_count() + len(router.completed) == 3
+    finally:
+        cluster.stop()
+
+
+def test_drain_stops_admissions_and_finishes_lanes():
+    """pump(admit=False): a draining replica pulls nothing new from the
+    router and retires what it already holds (drain-before-kill)."""
+    mon, eng, reg = make_engine(slots=2, max_new=4)
+    router = RequestRouter("svc", registry=reg)
+    for r in make_requests([3, 3, 3, 3], seed=7):
+        router.submit(r)
+    eng.pump(router)                       # pulls 2 into the lanes
+    assert eng.active_count == 2 and router.pending_count() == 2
+    while eng.pump(router, admit=False):
+        pass
+    assert eng.idle and len(eng.completed) == 2
+    assert router.pending_count() == 2     # untouched by the drained engine
+    assert router.in_flight == 0           # completions reported back
+    mon.vfpga_exit()
 
 
 def test_router_pump_and_requeue():
