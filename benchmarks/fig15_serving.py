@@ -23,6 +23,13 @@ budget* (the paged pool is rounded down, never up):
 * **paged** — twice the lanes over a block-table pool of equal bytes;
   lanes hold pages at token granularity and free them at retirement.
 
+Part 3 — speculative decode.  A third engine runs the same workload with a
+self-draft ``SpecConfig`` (draft == target, the forced-accept ceiling):
+each iteration drafts k tokens and verifies k+1 in a single vmapped
+EXECUTE.  The run asserts >1 accepted tokens per lane-iteration AND a
+token stream bit-exact vs the plain engine arm (the equivalence-harness
+contract: speculation is a throughput mechanism, never a token change).
+
 The run asserts the engine beats the baseline on throughput and p99 TBT,
 and that the paged engine sustains strictly more concurrent in-flight
 requests than the reservation baseline at the same pool size (the §3.4
@@ -48,7 +55,8 @@ from repro.models import build_model
 from repro.scaling.metrics import MetricsRegistry
 from repro.serve import generate
 from repro.serve.engine import (M_TBT, M_TTFT, ContinuousBatchingEngine,
-                                ServeRequest)
+                                ServeRequest, SpecConfig)
+from repro.serve.equivalence import assert_transcripts_equal
 
 ARCH = "yi-9b-smoke"
 PAGE_SIZE = 4
@@ -101,7 +109,7 @@ def run_naive(bundle, params, workload, prompt_len):
 
 
 def run_engine(workload, prompt_len, slots, max_new_cap, *, paged=True,
-               pool_pages=None, tag="fig15-engine"):
+               pool_pages=None, spec=None, tag="fig15-engine"):
     """Continuous-batching server through a real monitor; returns the
     engine (peak_active/preemptions/completed), the registry, and the
     busy-window seconds."""
@@ -114,7 +122,7 @@ def run_engine(workload, prompt_len, slots, max_new_cap, *, paged=True,
                                    prompt_len=prompt_len,
                                    max_new_tokens=max_new_cap, registry=reg,
                                    paged=paged, page_size=PAGE_SIZE,
-                                   pool_pages=pool_pages)
+                                   pool_pages=pool_pages, spec=spec)
     eng.setup()        # compiles outside the timed window, like the baseline
     # one throwaway request warms the full admit/append/decode path (the
     # naive baseline gets the same steady-state treatment above)
@@ -124,6 +132,11 @@ def run_engine(workload, prompt_len, slots, max_new_cap, *, paged=True,
     eng.completed.pop("__warm__")
     eng.drain_completions()
     eng.peak_active = 0
+    # the warmup request ran the full (spec) path: restart the stats so
+    # the emitted line covers only the timed window
+    eng.spec_iterations = eng.spec_lane_iterations = 0
+    eng.spec_committed = 0
+    eng.spec_offered_drafts = eng.spec_accepted_drafts = 0
     gc.collect()
     gc.disable()        # no collector pauses inside the latency window
     try:
@@ -216,6 +229,29 @@ def main(smoke: bool = False):
             f"continuous batching did not beat sequential generate on "
             f"p99 TBT: {eng_p99_tbt * 1e3:.1f} vs "
             f"{naive_p99_tbt * 1e3:.1f} ms")
+
+    # ---------------------------------------------------------------
+    # Speculative decode: >1 accepted tokens/iteration, bit-exact stream
+    # ---------------------------------------------------------------
+    spec_k = 2
+    spec_eng, _, spec_busy = run_engine(
+        workload, prompt_len, slots, max_new_cap,
+        spec=SpecConfig(k=spec_k), tag="fig15-spec")
+    assert len(spec_eng.completed) == n_req
+    stats = spec_eng.spec_stats()
+    emit("fig15/spec", spec_busy * 1e6 / total_tokens,
+         f"tokens_per_s={total_tokens / spec_busy:.1f} k={spec_k} "
+         f"accept_rate={stats['accept_rate']:.2f} "
+         f"tokens_per_iter={stats['tokens_per_lane_iteration']:.2f} "
+         f"iterations={stats['iterations']}")
+    assert_transcripts_equal(
+        {rid: rec.tokens for rid, rec in spec_eng.completed.items()},
+        {rid: rec.tokens for rid, rec in eng.completed.items()},
+        context="fig15 spec vs plain")
+    if stats["tokens_per_lane_iteration"] <= 1.0:
+        raise SystemExit(
+            "speculative decode did not commit more than one token per "
+            f"lane-iteration: {stats['tokens_per_lane_iteration']:.2f}")
 
     # ---------------------------------------------------------------
     # Paged vs worst-case-reserved at an identical KV pool byte budget

@@ -31,8 +31,8 @@ from repro.scaling.autoscaler import (M_COMPLETIONS, M_KV_PAGES, M_LATENCY,
                                       M_PREEMPTIONS, M_QUEUE_DEPTH,
                                       M_REPLICAS, M_REPLICAS_SERIES,
                                       M_REQUESTS, M_SLO_VIOLATIONS,
-                                      M_UTILIZATION, Autoscaler,
-                                      signals_from_registry)
+                                      M_SPEC_ACCEPT_RATE, M_UTILIZATION,
+                                      Autoscaler, signals_from_registry)
 from repro.scaling.loadgen import ClosedLoopGen, Request
 from repro.scaling.metrics import MetricsRegistry
 
@@ -327,8 +327,18 @@ class KVModelParams:
         return max(1, -(-(self.prompt_tokens + n) // self.page_tokens))
 
 
+def spec_tokens_per_iteration(spec_k: int, accept_rate: float) -> float:
+    """Expected tokens committed per speculative iteration under a
+    per-token acceptance probability ``accept_rate``: the accepted prefix
+    is geometric, so E = sum_{i=0..k} a^i (1 at a=0 — plain decode — and
+    k+1 at a=1, the forced-accept ceiling)."""
+    a = min(max(accept_rate, 0.0), 1.0)
+    return sum(a ** i for i in range(spec_k + 1))
+
+
 def engine_service_model(ttft_s: float, tbt_s: float,
-                         default_tokens: int = 8):
+                         default_tokens: int = 8, *, spec_k: int = 0,
+                         spec_accept_rate: float = 0.0):
     """Service-time function from engine-reported latencies.
 
     ``ttft_s``/``tbt_s`` come from the live engine's ``request_ttft_seconds``
@@ -337,10 +347,19 @@ def engine_service_model(ttft_s: float, tbt_s: float,
     overheads measured live, replayed at trace scale) instead of an assumed
     exponential service time.  Requests carrying ``n_tokens`` get
     ``ttft + (n-1) * tbt``; others fall back to ``default_tokens``.
+
+    ``spec_k``/``spec_accept_rate`` model a *hypothetical* speculative
+    deployment from plain-engine calibration: one iteration commits
+    ``spec_tokens_per_iteration`` tokens on average, so the per-token time
+    shrinks by that factor.  (Calibrating ``tbt_s`` from a live speculative
+    engine already folds the speedup in — leave them 0 then.)
     """
+    speedup = (spec_tokens_per_iteration(spec_k, spec_accept_rate)
+               if spec_k > 0 else 1.0)
+
     def service_time(req: Request) -> float:
         n = req.n_tokens if getattr(req, "n_tokens", None) else default_tokens
-        return ttft_s + max(0, n - 1) * tbt_s
+        return ttft_s + max(0, n - 1) * tbt_s / speedup
     return service_time
 
 
@@ -363,11 +382,16 @@ class ServingSimulator:
                  params: Optional[ServingParams] = None,
                  closed_gen: Optional[ClosedLoopGen] = None,
                  service_time_fn=None,
-                 kv_model: Optional[KVModelParams] = None):
+                 kv_model: Optional[KVModelParams] = None,
+                 spec_accept_rate: Optional[float] = None):
         self.params = params or ServingParams()
         self.autoscaler = autoscaler
         self.service = service
         self.closed_gen = closed_gen
+        # speculation acceptance assumed by the service model (published
+        # as the canonical gauge so policies see the same signal shape the
+        # live drive loop folds from per-engine gauges)
+        self.spec_accept_rate = spec_accept_rate
         # default: the trace's pre-drawn exponential demand; engine-served
         # figures pass engine_service_model(...) instead
         self._service_time = service_time_fn or (lambda r: r.service_s)
@@ -432,6 +456,10 @@ class ServingSimulator:
         if self.kv is not None:
             self.metrics.gauge(M_KV_PAGES, service=self.service).set(
                 self._kv_occupancy())
+        if self.spec_accept_rate is not None:
+            self.metrics.gauge(M_SPEC_ACCEPT_RATE,
+                               service=self.service).set(
+                self.spec_accept_rate)
         self._record_replicas()
 
     # -- event handlers ----------------------------------------------------

@@ -50,6 +50,10 @@ class TaskImage:
     kv_pool_pages: Optional[int] = None
     kv_reserve_pages: int = 1
     prompt_buckets: tuple = ()      # e.g. (8, 16, 32); empty = (prompt_len,)
+    # engine-serve speculative decode (0 = off)
+    spec_k: int = 0
+    spec_draft_arch: Optional[str] = None   # None = self-draft (target arch)
+    spec_draft_seed: Optional[int] = None   # None = engine seed
     seed: int = 0
     opt: OptConfig = field(default_factory=lambda: OptConfig(
         warmup_steps=2, decay_steps=100))
@@ -299,11 +303,14 @@ class EngineServeTask(GuestTask):
 
     def setup(self, cl: FunkyCL, gs: GuestState, restore: bool) -> None:
         from repro.scaling.serving import get_router
-        from repro.serve.engine import ContinuousBatchingEngine
+        from repro.serve.engine import ContinuousBatchingEngine, SpecConfig
 
         im = self.image
         self._router = get_router(im.name,
                                   registry=cl._monitor.telemetry)
+        spec = (SpecConfig(k=im.spec_k, draft_arch=im.spec_draft_arch,
+                           draft_seed=im.spec_draft_seed)
+                if im.spec_k > 0 else None)
         self._engine = ContinuousBatchingEngine(
             im.arch, cl, slots=im.global_batch, prompt_len=im.prompt_len,
             max_new_tokens=im.max_new_tokens, service=im.name,
@@ -311,7 +318,7 @@ class EngineServeTask(GuestTask):
             paged=im.paged_kv, page_size=im.page_size,
             pool_pages=im.kv_pool_pages,
             reserve_pages=im.kv_reserve_pages,
-            prompt_buckets=im.prompt_buckets or None)
+            prompt_buckets=im.prompt_buckets or None, spec=spec)
         self._engine.setup(restore=restore)
 
     def step(self, cl: FunkyCL, gs: GuestState) -> bool:

@@ -41,6 +41,10 @@ M_REPLICAS_SERIES = "replicas_ts"
 M_KV_PAGES = "kv_pages_in_use_ratio"
 M_KV_FREE_PAGES = "kv_free_pages"
 M_PREEMPTIONS = "engine_oom_preemptions_total"
+# speculative decode: accepted / offered draft tokens (0..1); per-engine
+# from the live engine, folded to a service mean by the drive loop, and an
+# input to the simulator's speculative service model
+M_SPEC_ACCEPT_RATE = "spec_accept_rate"
 
 
 @dataclass

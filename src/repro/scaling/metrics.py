@@ -256,6 +256,20 @@ class MetricsRegistry:
                     out[key] = g.value
         return out
 
+    def labeled_gauge_values(self, name: str, **labels,
+                             ) -> List[Tuple[Dict[str, str], float]]:
+        """Like ``gauge_values`` but returns ``(label_dict, value)`` pairs,
+        so a caller can select on a specific label (e.g. pick the engine
+        with the most ``kv_free_pages``) without parsing flattened keys."""
+        want = set(labels.items())
+        out = []
+        with self._lock:
+            for key, g in self._gauges.items():
+                mname, items = self._meta.get(key, (None, ()))
+                if mname == name and want <= set(items):
+                    out.append((dict(items), g.value))
+        return out
+
     # -- flight recorder ----------------------------------------------------
     def record_event(self, kind: str, **fields):
         """Append a (t, kind, fields) event to the post-mortem ring buffer.

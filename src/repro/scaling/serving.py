@@ -30,9 +30,10 @@ from typing import Callable, Dict, List, Optional
 
 import numpy as np
 
-from repro.scaling.autoscaler import (M_COMPLETIONS, M_KV_PAGES, M_LATENCY,
-                                      M_QUEUE_DEPTH, M_REQUESTS,
-                                      M_SLO_VIOLATIONS, M_UTILIZATION)
+from repro.scaling.autoscaler import (M_COMPLETIONS, M_KV_FREE_PAGES,
+                                      M_KV_PAGES, M_LATENCY, M_QUEUE_DEPTH,
+                                      M_REQUESTS, M_SLO_VIOLATIONS,
+                                      M_SPEC_ACCEPT_RATE, M_UTILIZATION)
 from repro.scaling.loadgen import Request
 from repro.scaling.metrics import metric_key
 
@@ -63,14 +64,26 @@ class RequestRouter:
     numbers in the registry are measured on-device, not modeled.  In a
     multi-host deployment this object is the service's RPC frontend; here
     replicas share it in-process.
+
+    **KV-aware routing** (``kv_aware=True``, needs a registry): a pop
+    tagged with an ``engine_id`` prefers the replica with the most free KV
+    pages (the per-engine ``kv_free_pages`` gauge every paged engine
+    already publishes) — admitting where memory is plentiful cuts OOM
+    preemptions at high load.  A non-preferred replica is deferred exactly
+    once and served on its next pop, so preference never starves a
+    replica; on ties every replica is preferred and the replicas' pump
+    loops take turns (round-robin).
     """
 
-    def __init__(self, service: str = "svc", registry=None):
+    def __init__(self, service: str = "svc", registry=None,
+                 kv_aware: bool = True):
         self.service = service
         self.registry = registry
+        self.kv_aware = kv_aware
         self.closed = False
         self._lock = threading.Lock()
         self._pending: deque = deque()
+        self._deferred: set = set()     # engines already held back once
         self.in_flight = 0
         self.completed: Dict[str, object] = {}   # rid -> CompletedRequest
 
@@ -84,10 +97,29 @@ class RequestRouter:
         if self.registry is not None:
             self.registry.counter(M_REQUESTS, service=self.service).inc()
 
-    def pop(self, n: int) -> list:
+    def _kv_preferred(self, engine_id: str) -> bool:
+        """True unless another engine publishes strictly more free pages
+        (unknown engines and registry-less routers are always preferred)."""
+        if self.registry is None:
+            return True
+        per_engine = {lbl["engine"]: v for lbl, v in
+                      self.registry.labeled_gauge_values(
+                          M_KV_FREE_PAGES, service=self.service)
+                      if "engine" in lbl}
+        if not per_engine or engine_id not in per_engine:
+            return True
+        return per_engine[engine_id] >= max(per_engine.values())
+
+    def pop(self, n: int, engine_id: Optional[str] = None) -> list:
         if n <= 0:
             return []
         with self._lock:
+            if (self.kv_aware and engine_id is not None and self._pending
+                    and not self._kv_preferred(engine_id)):
+                if engine_id not in self._deferred:
+                    self._deferred.add(engine_id)
+                    return []
+            self._deferred.discard(engine_id)
             out = []
             while self._pending and len(out) < n:
                 out.append(self._pending.popleft())
@@ -203,6 +235,17 @@ def drive_engine_open_loop(orch, scaler, requests: List[Request], *,
               if k != svc_key]
         if kv:
             reg.gauge(M_KV_PAGES, service=service).set(max(kv))
+        # speculation acceptance: service-level mean of the per-engine
+        # gauges (an efficiency signal, so the mean — not the worst — is
+        # what capacity planning and the simulator's service model want);
+        # killed replicas tombstone their gauge with NaN — skip those
+        spec_key = metric_key(M_SPEC_ACCEPT_RATE, {"service": service})
+        sv = [v for k2, v in
+              reg.gauge_values(M_SPEC_ACCEPT_RATE, service=service).items()
+              if k2 != spec_key and not np.isnan(v)]
+        if sv:
+            reg.gauge(M_SPEC_ACCEPT_RATE, service=service).set(
+                sum(sv) / len(sv))
         if on_tick is not None and now - last_report >= 1.0:
             last_report = now
             on_tick(now, n_rep, router.pending_count(),

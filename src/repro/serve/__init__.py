@@ -1,11 +1,15 @@
 from repro.serve.engine import (CompletedRequest, ContinuousBatchingEngine,
-                                ServeRequest)
+                                ServeRequest, SpecConfig)
+from repro.serve.equivalence import (assert_transcripts_equal,
+                                     check_equivalence, evict_resume_every,
+                                     run_transcript)
 from repro.serve.kvcache import (BlockPool, cache_bytes,
                                  init_caches_from_specs)
 from repro.serve.serve_step import (generate, make_decode_step,
                                     make_prefill_step, sample_token)
 
 __all__ = ["BlockPool", "CompletedRequest", "ContinuousBatchingEngine",
-           "ServeRequest", "cache_bytes", "generate",
-           "init_caches_from_specs", "make_decode_step", "make_prefill_step",
-           "sample_token"]
+           "ServeRequest", "SpecConfig", "assert_transcripts_equal",
+           "cache_bytes", "check_equivalence", "evict_resume_every",
+           "generate", "init_caches_from_specs", "make_decode_step",
+           "make_prefill_step", "run_transcript", "sample_token"]

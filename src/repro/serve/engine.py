@@ -33,6 +33,27 @@ Paged mode also supports **prompt buckets**: 2-3 prefill lengths compiled
 up front, with each admission routed to the smallest bucket that fits
 instead of padding everything to one ``prompt_len``.
 
+Paged mode additionally supports **speculative decoding** (``spec=``):
+a draft model runs ``k`` lookahead steps per lane in one EXECUTE, then the
+target model verifies all ``k+1`` positions in a single vmapped EXECUTE —
+sequential in-kernel decode steps over the gathered lane cache, so the
+logits at every position are bit-identical to plain greedy decode.  The
+host commits the accepted prefix plus the target's own token at the first
+mismatch (1..k+1 tokens per iteration), rolls the lane's ``pos`` back past
+the rejected tail and frees the orphaned tail pages
+(``BlockPool.free_tail``).  Rejected writes left in *kept* pages are
+harmless by construction: their ``kv_pos`` exceeds every future query
+position until the lane overwrites them in order, and causal masking hides
+them until then — which is also why evict/resume mid-lookahead stays
+bit-exact (the dirty-page report covers every page the verify wrote,
+including partially-accepted ones).  Speculation lives entirely inside one
+iteration, so token-boundary preemption, OOM preemption (deterministic
+recompute) and drain semantics are unchanged.
+
+The pool auto-defragments: when fragmentation (``1 - used/span``) crosses
+``auto_compact_frag`` the engine runs ``compact()`` at the top of the next
+iteration — never while pages are referenced by an in-flight EXECUTE.
+
 Every device interaction is a Funky request through ``Monitor.submit``, so
 serving stays preemptible at token boundaries: ``Monitor.evict`` between
 iterations snapshots the dirty pages plus the (tiny) block table — the
@@ -59,14 +80,15 @@ import numpy as np
 
 from repro.core.guest import FunkyCL
 from repro.core.programs import Program
+from repro.models.attention import _INVALID_POS
 from repro.scaling.autoscaler import (M_COMPLETIONS, M_KV_FREE_PAGES,
                                       M_KV_PAGES, M_PREEMPTIONS,
                                       M_QUEUE_DEPTH, M_SLO_VIOLATIONS,
-                                      M_UTILIZATION)
+                                      M_SPEC_ACCEPT_RATE, M_UTILIZATION)
 from repro.scaling.metrics import MetricsRegistry
-from repro.serve.kvcache import (BlockPool, cache_bytes, compact_pool,
-                                 extract_written_page, gather_lane_cache,
-                                 init_caches_from_specs,
+from repro.serve.kvcache import (BlockPool, _is_pos_leaf, cache_bytes,
+                                 compact_pool, extract_written_page,
+                                 gather_lane_cache, init_caches_from_specs,
                                  pool_specs_from_lane_cache, scatter_pages,
                                  scatter_prefill, scrub_pages,
                                  token_axes_from_lengths)
@@ -77,6 +99,24 @@ M_TBT = "request_tbt_seconds"
 M_E2E = "request_latency_seconds"
 M_TOKENS = "engine_tokens_total"
 M_ITERS = "engine_iterations_total"
+
+
+@dataclass(frozen=True)
+class SpecConfig:
+    """Speculative-decode configuration.
+
+    ``draft_arch=None`` self-drafts with the target architecture; combined
+    with ``draft_seed=None`` (the engine seed) the draft params equal the
+    target params, so every draft token is accepted — the forced-accept
+    ceiling.  ``draft_mode="antigreedy"`` makes the draft argmin instead of
+    argmax, guaranteeing rejection at every position — the forced-reject
+    floor (1 committed token per iteration, like plain decode).  Committed
+    token streams are bit-exact vs plain greedy decode for *any* draft.
+    """
+    k: int = 2                          # lookahead tokens per iteration
+    draft_arch: Optional[str] = None    # None -> target arch
+    draft_seed: Optional[int] = None    # None -> engine seed
+    draft_mode: str = "greedy"          # "greedy" | "antigreedy"
 
 
 @dataclass
@@ -135,7 +175,10 @@ class ContinuousBatchingEngine:
                  publish_gauges: bool = True, paged: bool = True,
                  page_size: int = 8, pool_pages: Optional[int] = None,
                  reserve_pages: int = 1,
-                 prompt_buckets: Optional[Sequence[int]] = None):
+                 prompt_buckets: Optional[Sequence[int]] = None,
+                 spec: Optional[SpecConfig] = None,
+                 auto_compact_frag: Optional[float] = 0.5,
+                 auto_compact_min_pages: int = 4):
         from repro.configs import get_arch
         from repro.models import build_model
 
@@ -147,6 +190,18 @@ class ContinuousBatchingEngine:
         self.seed = seed
         self.cfg = get_arch(arch)
         self.paged = paged
+        if spec is not None:
+            if not paged:
+                raise ValueError("speculative decode needs paged=True (the "
+                                 "lookahead rolls back through block tables)")
+            if spec.k < 1:
+                raise ValueError("spec.k must be >= 1")
+            if spec.draft_mode not in ("greedy", "antigreedy"):
+                raise ValueError(f"unknown draft_mode {spec.draft_mode!r}")
+        self.spec = spec
+        self.spec_k = spec.k if spec is not None else 0
+        self.auto_compact_frag = auto_compact_frag
+        self.auto_compact_min_pages = auto_compact_min_pages
         if prompt_buckets and prompt_len > max(prompt_buckets):
             raise ValueError(
                 f"prompt_len {prompt_len} exceeds the largest prompt "
@@ -156,7 +211,9 @@ class ContinuousBatchingEngine:
             self.buckets = tuple(sorted(set(prompt_buckets or (prompt_len,))))
             self.prompt_len = max(self.buckets)
             self.page_size = page_size
-            self.max_ctx = self.prompt_len + max_new_tokens
+            # +spec_k: verify writes up to k positions past the commit
+            # horizon, and those in-flight slots must never wrap the table
+            self.max_ctx = self.prompt_len + max_new_tokens + self.spec_k
             self.max_blocks = math.ceil(self.max_ctx / page_size)
             # default pool covers the worst case (no oversubscription);
             # benchmarks/servers pass a smaller pool to oversubscribe
@@ -180,6 +237,20 @@ class ContinuousBatchingEngine:
             self._bt_host = np.full((slots, self.max_blocks), -1, np.int32)
             self._bt_dirty = True
             self._first_token: Dict[str, float] = {}
+            if spec is not None:
+                self.draft_cfg = get_arch(spec.draft_arch or arch)
+                # dense per-lane draft cache: capacity must reach the last
+                # lookahead write, prompt_len + max_new_tokens + k - 1
+                self.draft_bundle = build_model(
+                    self.draft_cfg,
+                    cache_margin=max_new_tokens + spec.k)
+                self.draft_seed = (spec.draft_seed
+                                   if spec.draft_seed is not None else seed)
+                # host-authoritative lane state: the verify EXECUTE cannot
+                # know acceptance, so toks/pos are committed here and
+                # rewritten h2d (tiny) before each speculative iteration
+                self._toks_host = np.zeros((slots, 1), np.int32)
+                self._pos_host = np.zeros((slots,), np.int32)
         else:
             if prompt_buckets:
                 raise ValueError("prompt buckets need paged=True (dense "
@@ -216,6 +287,9 @@ class ContinuousBatchingEngine:
                 M_KV_PAGES, service=service, engine=engine_id)
             self._g_kv_free = self.registry.gauge(
                 M_KV_FREE_PAGES, service=service, engine=engine_id)
+            if spec is not None:
+                self._g_spec = self.registry.gauge(
+                    M_SPEC_ACCEPT_RATE, service=service, engine=engine_id)
 
         self.pending: deque = deque()
         self._free: List[int] = list(range(slots))
@@ -226,6 +300,14 @@ class ContinuousBatchingEngine:
         self.iterations = 0
         self.peak_active = 0                # max concurrent in-flight lanes
         self.preemptions = 0
+        self.auto_compactions = 0
+        # speculative-decode accounting (all zero when spec is off)
+        self.spec_iterations = 0            # verify EXECUTEs issued
+        self.spec_lane_iterations = 0       # active-lane verify passes
+        self.spec_committed = 0             # tokens committed via verify
+        self.spec_offered_drafts = 0        # draft tokens that could commit
+        self.spec_accepted_drafts = 0
+        self._mid_step = False              # pages in flight: no compaction
         self._setup_done = False
         self._program_ids: List[str] = []
 
@@ -328,7 +410,10 @@ class ContinuousBatchingEngine:
         self._register(cl, "init_params", init_params, (0,))
         self._register(cl, "init_paged", init_paged, ())
         slot_abs = jnp.int32(0)
-        ids_abs = jax.ShapeDtypeStruct((B,), jnp.int32)
+        # one lookahead can append several pages per lane, so the scrub
+        # vector is sized for the worst-case per-iteration page growth
+        self._scrub_width = B * (self.spec_k // ps + 2)
+        ids_abs = jax.ShapeDtypeStruct((self._scrub_width,), jnp.int32)
         np_abs = jax.ShapeDtypeStruct((NP,), jnp.int32)
         for P, (prompt_abs, pf_tok_abs, pf_cache_abs) in pf_abs.items():
             self._register(cl, f"prefill_{P}", prefill_one,
@@ -360,6 +445,9 @@ class ContinuousBatchingEngine:
         self._register(cl, "decode_step", decode_step,
                        (params_abs, toks_abs, pos_abs, bt_abs, pool_abs),
                        donate_argnums=(1, 2, 4))
+        if self.spec is not None:
+            self._setup_spec(params_abs, toks_abs, pos_abs, bt_abs, pool_abs,
+                             token_axes)
         if not restore:
             cl.clCreateBuffer("params", params_abs)
             cl.clCreateBuffer("toks", toks_abs)
@@ -375,8 +463,156 @@ class ContinuousBatchingEngine:
             cl.clEnqueueKernel("init_paged", (),
                                ("toks", "pos", "kv_pool"))
             cl.write_buffer("block_table", self._bt_host.copy())
+            if self.spec is not None:
+                cl.clCreateBuffer("draft_params", self._draft_params_abs)
+                cl.clCreateBuffer("draft_caches", self._draft_caches_abs)
+                cl.clCreateBuffer("draft_toks", self._draft_toks_abs)
+                cl.clCreateBuffer("verify_toks", self._verify_toks_abs)
+                for P, (_, dpf_cache_abs) in self._draft_pf_abs.items():
+                    cl.clCreateBuffer(f"pf_draft_cache_{P}", dpf_cache_abs)
+                cl.clEnqueueKernel("init_draft_params", (),
+                                   ("draft_params",),
+                                   const_args=(self.draft_seed,))
+                cl.clEnqueueKernel("init_draft", (), ("draft_caches",))
             cl.clFinish()
             self._bt_dirty = False
+
+    # -- speculative decode: draft + verify programs ---------------------
+    def _setup_spec(self, params_abs, toks_abs, pos_abs, bt_abs, pool_abs,
+                    token_axes) -> None:
+        spec, bundle, dbundle = self.spec, self.bundle, self.draft_bundle
+        B, ps, k = self.slots, self.page_size, self.spec_k
+        NP, max_blocks = self.pool_pages, self.max_blocks
+        argfn = jnp.argmax if spec.draft_mode == "greedy" else jnp.argmin
+
+        def init_draft_params(seed):
+            return dbundle.init(jax.random.PRNGKey(seed))
+
+        def draft_prefill_one(dparams, tokens):
+            _, cache = dbundle.prefill_fn(dparams, {"tokens": tokens})
+            return cache
+
+        dparams_abs = jax.eval_shape(lambda: init_draft_params(0))
+        dpf_abs = {}
+        for P in self.buckets:
+            prompt_abs = jax.ShapeDtypeStruct((1, P), jnp.int32)
+            dpf_abs[P] = (prompt_abs, jax.eval_shape(
+                draft_prefill_one, dparams_abs, prompt_abs))
+        # draft lane capacity is prompt + constant margin, so the token
+        # axis is found by size *delta* (exact=False), not size equality
+        if len(self.buckets) > 1:
+            alt = self.buckets[0]
+            alt_cache = dpf_abs[alt][1]
+        else:
+            alt = self.prompt_len - 1
+            alt_cache = jax.eval_shape(
+                draft_prefill_one, dparams_abs,
+                jax.ShapeDtypeStruct((1, alt), jnp.int32))
+        d_axes = token_axes_from_lengths(
+            alt_cache, dpf_abs[self.prompt_len][1], alt, self.prompt_len,
+            exact=False)
+        lane_abs = dpf_abs[self.prompt_len][1]   # largest bucket = stripe
+        dcaches_abs = jax.tree.map(
+            lambda l: jax.ShapeDtypeStruct((B,) + l.shape, l.dtype),
+            lane_abs)
+        dtoks_abs = jax.ShapeDtypeStruct((B, k), jnp.int32)
+        vtoks_abs = jax.ShapeDtypeStruct((B, k + 1), jnp.int32)
+        self._draft_params_abs = dparams_abs
+        self._draft_caches_abs = dcaches_abs
+        self._draft_toks_abs = dtoks_abs
+        self._verify_toks_abs = vtoks_abs
+        self._draft_pf_abs = dpf_abs
+
+        def init_draft():
+            return init_caches_from_specs(dcaches_abs)
+
+        def draft_lookahead(dparams, toks, pos, dcaches):
+            # k+1 steps for k offered drafts: the extra step feeds the last
+            # draft token back so its KV lands in the draft cache — under
+            # full acceptance the commit advances k+1 positions, and
+            # without it the draft state would grow one hole per iteration
+            # (degrading acceptance, never correctness)
+            def lane(tok, p, cache):
+                cur, outs = tok, []
+                for i in range(k + 1):
+                    logits, cache = dbundle.decode_fn(
+                        dparams, cur, p + jnp.int32(i), cache)
+                    cur = argfn(logits, -1).astype(jnp.int32)
+                    if i < k:
+                        outs.append(cur)
+                return jnp.concatenate(outs), cache
+
+            return jax.vmap(lane)(toks, pos, dcaches)
+
+        # pages one k+1-token write window can span
+        n_span = k // ps + 2
+
+        def verify_step(params, toks, d_toks, pos, bt, pool):
+            def lane(tok, drafts, p, bt_row):
+                cache = gather_lane_cache(pool, bt_row, token_axes,
+                                          page_size=ps)
+                cur, outs = tok, []
+                for i in range(k + 1):
+                    logits, cache = bundle.decode_fn(
+                        params, cur, p + jnp.int32(i), cache)
+                    outs.append(jnp.argmax(logits, -1).astype(jnp.int32))
+                    if i < k:
+                        cur = drafts[i][None]
+                active = bt_row[0] >= 0
+                lp0 = (p % (max_blocks * ps)) // ps
+                pages, phys = [], []
+                for j in range(n_span):
+                    lp = jnp.minimum(lp0 + j, jnp.int32(max_blocks - 1))
+                    pages.append(extract_written_page(
+                        cache, lp, token_axes, page_size=ps))
+                    ok = active & (lp0 + j < max_blocks) & (bt_row[lp] >= 0)
+                    phys.append(jnp.where(ok, bt_row[lp], jnp.int32(NP)))
+                return jnp.concatenate(outs), tuple(pages), jnp.stack(phys)
+
+            outs, pages, phys = jax.vmap(lane)(toks, d_toks, pos, bt)
+            # per-lane pages are disjoint (inactive/unmapped slots dropped)
+            for j in range(n_span):
+                pool = scatter_pages(pool, phys[:, j], pages[j])
+            return outs, pool
+
+        cl = self.cl
+        self._register(cl, "init_draft_params", init_draft_params, (0,))
+        self._register(cl, "init_draft", init_draft, ())
+        for P, (prompt_abs, dpf_cache_abs) in dpf_abs.items():
+            self._register(cl, f"draft_prefill_{P}", draft_prefill_one,
+                           (dparams_abs, prompt_abs))
+
+            def admit_draft(dcaches, pf_cache, slot):
+                slot = jnp.asarray(slot, jnp.int32)
+
+                def upd(path, lane_all, new, axis):
+                    tf = jnp.moveaxis(new, axis, 0)
+                    pad = lane_all.shape[axis + 1] - tf.shape[0]
+                    if pad:
+                        fill = (jnp.full((pad,) + tf.shape[1:],
+                                         _INVALID_POS, jnp.int32)
+                                if _is_pos_leaf(path)
+                                else jnp.zeros((pad,) + tf.shape[1:],
+                                               tf.dtype))
+                        tf = jnp.concatenate([tf, fill])
+                    row = jnp.moveaxis(tf, 0, axis)
+                    return jax.lax.dynamic_update_slice(
+                        lane_all, row[None],
+                        (slot,) + (jnp.int32(0),) * row.ndim)
+
+                return jax.tree_util.tree_map_with_path(
+                    upd, dcaches, pf_cache, d_axes)
+
+            self._register(cl, f"admit_draft_{P}", admit_draft,
+                           (dcaches_abs, dpf_cache_abs, jnp.int32(0)),
+                           donate_argnums=(0,))
+        self._register(cl, "draft_lookahead", draft_lookahead,
+                       (dparams_abs, toks_abs, pos_abs, dcaches_abs),
+                       donate_argnums=(3,))
+        self._register(cl, "verify_step", verify_step,
+                       (params_abs, toks_abs, dtoks_abs, pos_abs, bt_abs,
+                        pool_abs),
+                       donate_argnums=(5,))
 
     # -- reserved (worst-case stripe) layout -----------------------------
     def _setup_reserved(self, restore: bool) -> None:
@@ -526,6 +762,16 @@ class ContinuousBatchingEngine:
                 self._bt_host[slot, :] = -1
                 self._bt_host[slot, :len(page_ids)] = page_ids
                 self._bt_dirty = True
+                if self.spec is not None:
+                    cl.clEnqueueKernel(
+                        f"draft_prefill_{bucket}",
+                        ("draft_params", f"pf_prompt_{bucket}"),
+                        (f"pf_draft_cache_{bucket}",))
+                    cl.clEnqueueKernel(
+                        f"admit_draft_{bucket}",
+                        ("draft_caches", f"pf_draft_cache_{bucket}"),
+                        ("draft_caches",),
+                        const_args=(np.int32(slot),), donate=True)
             else:
                 cl.clEnqueueKernel(
                     "admit_slot",
@@ -534,6 +780,9 @@ class ContinuousBatchingEngine:
                     ("toks", "pos", "caches"),
                     const_args=(np.int32(slot),), donate=True)
             first_tok = int(np.asarray(cl.read_buffer("pf_tok"))[0])
+            if self.spec is not None:
+                self._toks_host[slot, 0] = first_tok
+                self._pos_host[slot] = bucket
             now = self._clock()
             first_t = now
             if self.paged:
@@ -608,32 +857,40 @@ class ContinuousBatchingEngine:
                                    slot=st.slot, engine=self.engine_id)
 
     def _append_pages(self) -> None:
-        """Token-granularity growth: map the page each lane's next write
-        lands in, preempting the youngest lane(s) when the pool runs dry."""
+        """Token-granularity growth: map the page(s) each lane's next write
+        window lands in — one page for plain decode, up to the ``k+1``-token
+        lookahead span for speculative decode (capped at the tokens the lane
+        can still commit) — preempting the youngest lane(s) when the pool
+        runs dry.  A lane preempted here mid-lookahead is requeued whole and
+        recomputes deterministically."""
         scrub_ids: List[int] = []
         for slot in sorted(self._active):
             st = self._active.get(slot)
             if st is None:
                 continue                # preempted by an earlier append
-            lp = st.pos // self.page_size
-            if self._bt_host[slot, lp] >= 0:
-                continue
-            got = self.pool.alloc(1, urgent=True)
-            while got is None:
-                victim = self._pick_victim()
-                self._preempt(victim)
-                if victim is st:
-                    break
+            span_tok = (1 if self.spec is None
+                        else min(self.spec_k + 1, st.limit - len(st.tokens)))
+            lp_last = (st.pos + span_tok - 1) // self.page_size
+            dead = False
+            for lp in range(len(st.blocks), lp_last + 1):
                 got = self.pool.alloc(1, urgent=True)
-            if got is None:
-                continue                # st preempted itself
-            assert lp == len(st.blocks), (lp, st.blocks)
-            st.blocks.append(got[0])
-            self._bt_host[slot, lp] = got[0]
-            self._bt_dirty = True
-            scrub_ids.append(got[0])
+                while got is None:
+                    victim = self._pick_victim()
+                    self._preempt(victim)
+                    if victim is st:
+                        dead = True     # st preempted itself: all freed
+                        break
+                    got = self.pool.alloc(1, urgent=True)
+                if dead:
+                    break
+                assert lp == len(st.blocks), (lp, st.blocks)
+                st.blocks.append(got[0])
+                self._bt_host[slot, lp] = got[0]
+                self._bt_dirty = True
+                scrub_ids.append(got[0])
         if scrub_ids:
-            ids = np.full((self.slots,), self.pool_pages, np.int32)
+            assert len(scrub_ids) <= self._scrub_width
+            ids = np.full((self._scrub_width,), self.pool_pages, np.int32)
             ids[:len(scrub_ids)] = scrub_ids
             self.cl.clEnqueueKernel(
                 "scrub", ("kv_pool",), ("kv_pool",), const_args=(ids,),
@@ -645,6 +902,11 @@ class ContinuousBatchingEngine:
         between iterations only."""
         if not self.paged:
             return {"moved": 0}
+        if self._mid_step:
+            raise RuntimeError(
+                "compact() while pages are in flight: an iteration's "
+                "EXECUTEs reference physical page ids — compaction is only "
+                "legal between engine iterations")
         mapping = self.pool.compact()
         if mapping:
             src = np.full((self.pool_pages,), self.pool_pages, np.int32)
@@ -661,47 +923,167 @@ class ContinuousBatchingEngine:
             self._bt_dirty = True
         return {"moved": len(mapping), "span": self.pool.used_span()}
 
+    def _maybe_auto_compact(self) -> None:
+        """Threshold-triggered defragmentation, fired at the top of an
+        iteration — the only point where no EXECUTE holds page ids."""
+        if self.auto_compact_frag is None:
+            return
+        used, span = self.pool.used_count(), self.pool.used_span()
+        if used == 0 or span - used < self.auto_compact_min_pages:
+            return
+        if 1.0 - used / span < self.auto_compact_frag:
+            return
+        self.compact()
+        self.auto_compactions += 1
+        self.registry.record_event("engine_auto_compact",
+                                   engine=self.engine_id, used=used,
+                                   span_before=span)
+
+    def _flush_block_table(self) -> None:
+        if self._bt_dirty:
+            self.cl.write_buffer("block_table", self._bt_host.copy())
+            self._bt_dirty = False
+
+    def _commit_tokens(self, st: _SlotState, tokens, now: float) -> int:
+        """Append committed tokens to a lane and advance its position; the
+        first token carries the inter-token gap, the rest arrived in the
+        same burst (TBT 0).  Retirement stays at the call site — the
+        speculative path must roll back the page tail first."""
+        for i, t in enumerate(tokens):
+            st.tokens.append(int(t))
+            tbt = (now - st.last_token_t) if i == 0 else 0.0
+            st.tbts.append(tbt)
+            self._h_tbt.observe(tbt)
+        st.last_token_t = now
+        st.pos += len(tokens)
+        return len(tokens)
+
+    # -- one speculative iteration: draft k, verify k+1, commit/rollback -
+    def _spec_iteration(self) -> int:
+        cl, k, ps = self.cl, self.spec_k, self.page_size
+        self._flush_block_table()
+        # host-authoritative lane state (acceptance is decided here)
+        cl.write_buffer("toks", self._toks_host.copy())
+        cl.write_buffer("pos", self._pos_host.copy())
+        cl.clEnqueueKernel(
+            "draft_lookahead",
+            ("draft_params", "toks", "pos", "draft_caches"),
+            ("draft_toks", "draft_caches"), donate=True)
+        # every page the verify can write is dirty — including pages whose
+        # acceptance is later partial; evict must serialize them whole
+        dirty = set()
+        for st in self._active.values():
+            for lp in range(st.pos // ps,
+                            min((st.pos + k) // ps, self.max_blocks - 1) + 1):
+                pid = int(self._bt_host[st.slot, lp])
+                if pid >= 0:
+                    dirty.add(pid)
+        cl.clEnqueueKernel(
+            "verify_step",
+            ("params", "toks", "draft_toks", "pos", "block_table",
+             "kv_pool"),
+            ("verify_toks", "kv_pool"), donate=True,
+            dirty_pages={"kv_pool": tuple(sorted(dirty))})
+        # token delivery doubles as the iteration's sync point
+        target = np.asarray(cl.read_buffer("verify_toks"))
+        drafts = np.asarray(cl.read_buffer("draft_toks"))
+        now = self._clock()
+        decoded = 0
+        self.spec_iterations += 1
+        for st in list(self._active.values()):
+            remaining = st.limit - len(st.tokens)
+            g, d = target[st.slot], drafts[st.slot]
+            m = 0
+            while m < k and int(d[m]) == int(g[m]):
+                m += 1
+            ncommit = min(m + 1, remaining)
+            offered = min(k, remaining - 1)
+            self.spec_offered_drafts += offered
+            self.spec_accepted_drafts += min(m, offered)
+            self.spec_lane_iterations += 1
+            self.spec_committed += ncommit
+            self._commit_tokens(st, g[:ncommit], now)
+            self._toks_host[st.slot, 0] = st.tokens[-1]
+            self._pos_host[st.slot] = st.pos
+            decoded += ncommit
+            # rollback: free the orphaned lookahead tail — pages wholly
+            # past the last committed entry (the kept tail page may still
+            # hold rejected writes; causal masking hides them until the
+            # lane overwrites them in order)
+            keep = (st.pos + ps - 1) // ps
+            if len(st.blocks) > keep:
+                freed = self.pool.free_tail(st.blocks, keep)
+                del st.blocks[keep:]
+                self._bt_host[st.slot, keep:] = -1
+                self._bt_dirty = True
+                self.registry.record_event(
+                    "engine_spec_rollback", rid=st.req.rid, slot=st.slot,
+                    freed=len(freed), engine=self.engine_id)
+            if len(st.tokens) >= st.limit:
+                self._retire(st, now)
+        self._c_tokens.inc(decoded)
+        if self._publish_gauges and self.spec_offered_drafts:
+            self._g_spec.set(self.spec_accepted_drafts
+                             / self.spec_offered_drafts)
+        return decoded
+
+    def spec_stats(self) -> dict:
+        """Speculation throughput accounting (zeros when spec is off)."""
+        lane_iters = max(self.spec_lane_iterations, 1)
+        offered = max(self.spec_offered_drafts, 1)
+        return {
+            "k": self.spec_k,
+            "iterations": self.spec_iterations,
+            "lane_iterations": self.spec_lane_iterations,
+            "committed_tokens": self.spec_committed,
+            "tokens_per_lane_iteration": self.spec_committed / lane_iters,
+            "accept_rate": self.spec_accepted_drafts / offered,
+        }
+
     # -- one iteration ---------------------------------------------------
     def step(self) -> dict:
         """One engine iteration; returns counts for the caller's pacing."""
         if not self._setup_done:
             raise RuntimeError("engine.setup() has not run")
-        admitted = self._admit()
-        self.peak_active = max(self.peak_active, len(self._active))
-        decoded = 0
-        if self._active and self.paged:
-            self._append_pages()
-        if self._active:
-            if self.paged:
-                if self._bt_dirty:
-                    self.cl.write_buffer("block_table", self._bt_host.copy())
-                    self._bt_dirty = False
-                dirty = sorted({int(self._bt_host[
-                    s.slot, s.pos // self.page_size])
-                    for s in self._active.values()})
-                self.cl.clEnqueueKernel(
-                    "decode_step",
-                    ("params", "toks", "pos", "block_table", "kv_pool"),
-                    ("toks", "pos", "kv_pool"), donate=True,
-                    dirty_pages={"kv_pool": tuple(dirty)})
-            else:
-                self.cl.clEnqueueKernel(
-                    "decode_step", ("params", "toks", "pos", "caches"),
-                    ("toks", "pos", "caches"), donate=True)
-            # token delivery doubles as the iteration's sync point — the
-            # d2h TRANSFER drains the queue and lands on a token boundary
-            toks = np.asarray(self.cl.read_buffer("toks"))
-            now = self._clock()
-            for st in list(self._active.values()):
-                st.tokens.append(int(toks[st.slot, 0]))
-                st.pos += 1
-                st.tbts.append(now - st.last_token_t)
-                self._h_tbt.observe(now - st.last_token_t)
-                st.last_token_t = now
-                decoded += 1
-                if len(st.tokens) >= st.limit:
-                    self._retire(st, now)
-            self._c_tokens.inc(decoded)
+        if self.paged:
+            self._maybe_auto_compact()
+        self._mid_step = True
+        try:
+            admitted = self._admit()
+            self.peak_active = max(self.peak_active, len(self._active))
+            decoded = 0
+            if self._active and self.paged:
+                self._append_pages()
+            if self._active and self.spec is not None:
+                decoded = self._spec_iteration()
+            elif self._active:
+                if self.paged:
+                    self._flush_block_table()
+                    dirty = sorted({int(self._bt_host[
+                        s.slot, s.pos // self.page_size])
+                        for s in self._active.values()})
+                    self.cl.clEnqueueKernel(
+                        "decode_step",
+                        ("params", "toks", "pos", "block_table", "kv_pool"),
+                        ("toks", "pos", "kv_pool"), donate=True,
+                        dirty_pages={"kv_pool": tuple(dirty)})
+                else:
+                    self.cl.clEnqueueKernel(
+                        "decode_step", ("params", "toks", "pos", "caches"),
+                        ("toks", "pos", "caches"), donate=True)
+                # token delivery doubles as the iteration's sync point —
+                # the d2h TRANSFER drains the queue, landing on a token
+                # boundary
+                toks = np.asarray(self.cl.read_buffer("toks"))
+                now = self._clock()
+                for st in list(self._active.values()):
+                    decoded += self._commit_tokens(
+                        st, toks[st.slot], now)
+                    if len(st.tokens) >= st.limit:
+                        self._retire(st, now)
+                self._c_tokens.inc(decoded)
+        finally:
+            self._mid_step = False
         self.iterations += 1
         self._c_iters.inc()
         if self._publish_gauges:
@@ -735,12 +1117,20 @@ class ContinuousBatchingEngine:
             self._bt_host[:] = -1
             self._bt_dirty = True
             self._first_token.clear()
+            if self.spec is not None:
+                self._toks_host[:] = 0
+                self._pos_host[:] = 0
             if self._publish_gauges:
                 # a killed replica must not pin the service-level pressure
                 # signal at its last (hot) value — the aggregator keeps
-                # gauges of dead engines forever
+                # gauges of dead engines forever.  kv_free advertises 0
+                # (not the fresh pool's capacity): a dead engine must never
+                # outrank live replicas in KV-aware routing, and the spec
+                # gauge becomes a NaN tombstone the service-mean fold skips
                 self._g_kv.set(0.0)
-                self._g_kv_free.set(self.pool.free_count())
+                self._g_kv_free.set(0.0)
+                if self.spec is not None:
+                    self._g_spec.set(float("nan"))
         return reqs
 
     def run_until_drained(self, max_iterations: int = 100000) -> None:
@@ -756,9 +1146,11 @@ class ContinuousBatchingEngine:
     def pump(self, router, admit: bool = True) -> bool:
         """One iteration against a ``RequestRouter``; True if work moved.
         ``admit=False`` (a draining replica) pulls nothing new and only
-        finishes what it already holds."""
+        finishes what it already holds.  The pop is engine-tagged so a
+        KV-aware router can steer work toward the replica with the most
+        free pages."""
         if admit:
-            for req in router.pop(len(self._free)):
+            for req in router.pop(len(self._free), engine_id=self.engine_id):
                 self.submit(req)
         moved = bool(self._active or self.pending)
         if moved:

@@ -134,6 +134,17 @@ class BlockPool:
             self._used.discard(p)
             heapq.heappush(self._free, p)
 
+    def free_tail(self, page_ids: Sequence[int], keep: int) -> List[int]:
+        """Free ``page_ids[keep:]`` and return them — the speculative-decode
+        rollback primitive: a rejected lookahead orphans the pages past the
+        last committed token, and only those pages go back to the pool (the
+        kept prefix still holds the lane's committed history)."""
+        if keep < 0:
+            raise ValueError("keep must be >= 0")
+        tail = list(page_ids[keep:])
+        self.free(tail)
+        return tail
+
     # -- defragmentation -------------------------------------------------
     def compact(self) -> Dict[int, int]:
         """Pack used pages into the lowest physical ids.
@@ -176,15 +187,28 @@ class BlockPool:
 # ``(num_pages, page_size, *rest)`` with ``rest`` the per-token residue in
 # original order (layer/batch/head axes included).
 
-def token_axes_from_lengths(cache_a, cache_b, len_a: int, len_b: int):
+def token_axes_from_lengths(cache_a, cache_b, len_a: int, len_b: int, *,
+                            exact: bool = True):
     """Per-leaf token-axis pytree: the unique axis whose size tracks the
     prompt length.  Raises for window-bounded ring caches (no axis moves)
-    or exotic layouts (several axes move) — those need reserved mode."""
+    or exotic layouts (several axes move) — those need reserved mode.
+
+    ``exact=False`` only requires the axis size *delta* to match the prompt
+    length delta (rather than the sizes themselves) — the case for caches
+    built with a constant decode margin, e.g. the speculative-decode draft
+    lane whose capacity is ``prompt_len + margin``.
+    """
     def ax(la, lb):
         diffs = [i for i, (x, y) in enumerate(zip(la.shape, lb.shape))
                  if x != y]
-        if (len(diffs) != 1 or la.shape[diffs[0]] != len_a
-                or lb.shape[diffs[0]] != len_b):
+        bad = len(diffs) != 1
+        if not bad:
+            d = diffs[0]
+            if exact:
+                bad = la.shape[d] != len_a or lb.shape[d] != len_b
+            else:
+                bad = lb.shape[d] - la.shape[d] != len_b - len_a
+        if bad:
             raise ValueError(
                 f"cannot page cache leaf {la.shape} -> {lb.shape}: token "
                 "axis is not uniquely prompt-length-sized (window-bounded "

@@ -4,6 +4,8 @@ loop smoke run (Fig 14 machinery)."""
 
 import math
 
+import pytest
+
 from repro.core.simulator import ServingParams, ServingSimulator
 from repro.scaling import (Autoscaler, LatencySLOPolicy, MetricsRegistry,
                            QueueLengthPolicy, ScalingSignals,
@@ -263,3 +265,51 @@ def test_serving_simulator_kv_pool_model():
     assert elastic["completed"] == len(reqs)
     assert elastic["max_replicas"] > 2                 # pressure scaled out
     assert elastic["kv_preemptions"] <= fixed_rep["kv_preemptions"]
+
+
+# ---------------------------------------------------------------------------
+# speculative decode in the service model
+# ---------------------------------------------------------------------------
+def test_engine_service_model_speculation_speedup():
+    """Speculation divides the per-token time by the expected committed
+    tokens per iteration, E = sum a^i: 1 at a=0 (plain), k+1 at a=1."""
+    from repro.core.simulator import (engine_service_model,
+                                      spec_tokens_per_iteration)
+    from repro.scaling.loadgen import Request
+
+    assert spec_tokens_per_iteration(2, 0.0) == 1.0
+    assert spec_tokens_per_iteration(2, 1.0) == 3.0
+    assert spec_tokens_per_iteration(3, 0.5) == pytest.approx(1.875)
+
+    req = Request(rid="r", arrival_t=0.0, service_s=1.0, n_tokens=9)
+    plain = engine_service_model(0.1, 0.02)
+    spec_off = engine_service_model(0.1, 0.02, spec_k=0,
+                                    spec_accept_rate=0.9)
+    forced = engine_service_model(0.1, 0.02, spec_k=2, spec_accept_rate=1.0)
+    assert plain(req) == spec_off(req) == pytest.approx(0.1 + 8 * 0.02)
+    assert forced(req) == pytest.approx(0.1 + 8 * 0.02 / 3.0)
+    # acceptance clamps to [0, 1]
+    wild = engine_service_model(0.1, 0.02, spec_k=2, spec_accept_rate=7.0)
+    assert wild(req) == forced(req)
+
+
+def test_serving_simulator_publishes_spec_accept_gauge():
+    from repro.core.simulator import engine_service_model
+    from repro.scaling.autoscaler import M_SPEC_ACCEPT_RATE
+
+    reqs = open_loop(burst_rate(2.0, 3.0, 5.0, 5.0), 15.0, seed=9,
+                     mean_service_s=0.2, tokens_range=(4, 9))
+    spec = ServingSimulator(
+        reqs, initial_replicas=2,
+        service_time_fn=engine_service_model(0.05, 0.02, spec_k=2,
+                                             spec_accept_rate=0.7),
+        spec_accept_rate=0.7)
+    rep = spec.run()
+    assert rep["completed"] == len(reqs)
+    snap = spec.metrics.snapshot()
+    assert snap["gauges"][f"{M_SPEC_ACCEPT_RATE}{{service=svc}}"] == 0.7
+    # faster service at equal traffic: speculation strictly helps the tail
+    plain = ServingSimulator(
+        reqs, initial_replicas=2,
+        service_time_fn=engine_service_model(0.05, 0.02)).run()
+    assert rep["p95_latency_s"] <= plain["p95_latency_s"]

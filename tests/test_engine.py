@@ -9,6 +9,7 @@ import numpy as np
 import pytest
 
 from repro.core import FunkyCL, Monitor, SliceAllocator
+from repro.scaling.autoscaler import M_KV_FREE_PAGES
 from repro.scaling.metrics import MetricsRegistry
 from repro.scaling.serving import RequestRouter
 from repro.serve.engine import (M_TBT, M_TTFT, ContinuousBatchingEngine,
@@ -314,4 +315,148 @@ def test_router_pump_and_requeue():
             break
     assert len(router2.completed) == 3
     assert router2.in_flight == 0
+    mon.vfpga_exit()
+
+
+# ---------------------------------------------------------------------------
+# KV-aware routing (per-engine kv_free_pages gauges, synthetic)
+# ---------------------------------------------------------------------------
+def _routing_setup(free_a, free_b, n_req=3):
+    reg = MetricsRegistry()
+    router = RequestRouter("svc", registry=reg)
+    reg.gauge(M_KV_FREE_PAGES, service="svc", engine="eA").set(free_a)
+    reg.gauge(M_KV_FREE_PAGES, service="svc", engine="eB").set(free_b)
+    for r in make_requests([2] * n_req, seed=21):
+        router.submit(r)
+    return reg, router
+
+
+def test_kv_aware_routing_prefers_max_free_pages():
+    """The replica with the most free KV pages is served first; a
+    non-preferred replica is held back for exactly one pop."""
+    _, router = _routing_setup(free_a=10, free_b=2)
+    assert router.pop(2, engine_id="eB") == []          # deferred once
+    assert [r.rid for r in router.pop(2, engine_id="eA")] == ["r0", "r1"]
+    # liveness: the deferred replica is served on its next pop even while
+    # still non-preferred — preference is a head start, not starvation
+    assert [r.rid for r in router.pop(2, engine_id="eB")] == ["r2"]
+
+
+def test_kv_aware_routing_ties_round_robin():
+    """Equal free pages: every replica is preferred, so pops alternate in
+    pump order (round-robin) with no deferrals."""
+    _, router = _routing_setup(free_a=5, free_b=5)
+    assert [r.rid for r in router.pop(1, engine_id="eB")] == ["r0"]
+    assert [r.rid for r in router.pop(1, engine_id="eA")] == ["r1"]
+    assert [r.rid for r in router.pop(1, engine_id="eB")] == ["r2"]
+
+
+def test_killed_replica_never_captures_routing_preference():
+    """evacuate() (the kill path) advertises 0 free pages — a dead
+    replica's immortal gauge must not outrank loaded live replicas."""
+    mon, eng, reg = make_engine(slots=2, max_new=8)
+    for r in make_requests([3, 3], seed=33):
+        eng.submit(r)
+    eng.step()                             # publishes engine0 gauges
+    assert reg.gauge(M_KV_FREE_PAGES, service="svc",
+                     engine="engine0").value > 0
+    eng.evacuate()
+    assert reg.gauge(M_KV_FREE_PAGES, service="svc",
+                     engine="engine0").value == 0.0
+    # a live replica holding pages (low but nonzero free count) is still
+    # preferred over the dead engine: its first pop succeeds
+    reg.gauge(M_KV_FREE_PAGES, service="svc", engine="live").set(1.0)
+    router = RequestRouter("svc", registry=reg)
+    for r in make_requests([2], seed=34):
+        router.submit(r)
+    assert [r.rid for r in router.pop(1, engine_id="live")] == ["r0"]
+    mon.vfpga_exit()
+
+
+def test_kv_aware_routing_untagged_and_unknown_pops_unaffected():
+    """Pops without an engine tag (or from engines with no gauge yet) are
+    never deferred; kv_aware=False disables the preference entirely."""
+    _, router = _routing_setup(free_a=10, free_b=2)
+    assert [r.rid for r in router.pop(1)] == ["r0"]
+    assert [r.rid for r in router.pop(1, engine_id="newcomer")] == ["r1"]
+    reg, router2 = _routing_setup(free_a=10, free_b=2)
+    router2.kv_aware = False
+    assert [r.rid for r in router2.pop(1, engine_id="eB")] == ["r0"]
+
+
+# ---------------------------------------------------------------------------
+# Auto-compaction (threshold-triggered, iteration-boundary only)
+# ---------------------------------------------------------------------------
+def test_auto_compaction_fires_at_threshold():
+    """Fragmentation (1 - used/span) at/above the threshold triggers
+    compact() at the top of the next iteration; below it, never."""
+    mon, eng, _ = make_engine(slots=2, max_new=8, pool_pages=12,
+                              auto_compact_frag=0.5,
+                              auto_compact_min_pages=4)
+    a = eng.pool.alloc(4)
+    eng.pool.alloc(4)
+    eng.pool.free(a)                   # used {4..7}: span 8, frag 0.5
+    eng._maybe_auto_compact()
+    assert eng.auto_compactions == 1
+    assert eng.pool.used_span() == eng.pool.used_count() == 4
+    eng.pool.check_invariants()
+    events = [e for e in eng.registry.flight_record()["events"]
+              if e[1] == "engine_auto_compact"]
+    assert len(events) == 1
+    eng._maybe_auto_compact()          # frag now 0: no refire
+    assert eng.auto_compactions == 1
+    mon.vfpga_exit()
+
+
+def test_auto_compaction_respects_min_gap_and_threshold():
+    mon, eng, _ = make_engine(slots=2, max_new=8, pool_pages=12,
+                              auto_compact_frag=0.5,
+                              auto_compact_min_pages=4)
+    a = eng.pool.alloc(2)
+    eng.pool.alloc(4)
+    eng.pool.free(a)                   # gap 2 < min_pages 4
+    eng._maybe_auto_compact()
+    assert eng.auto_compactions == 0
+    mon.vfpga_exit()
+    mon, eng, _ = make_engine(slots=2, max_new=8, pool_pages=12,
+                              auto_compact_frag=0.9,
+                              auto_compact_min_pages=1)
+    a = eng.pool.alloc(4)
+    eng.pool.alloc(4)
+    eng.pool.free(a)                   # frag 0.5 < threshold 0.9
+    eng._maybe_auto_compact()
+    assert eng.auto_compactions == 0
+    mon.vfpga_exit()
+
+
+def test_auto_compaction_live_churn_is_invisible(dense_ref):
+    """Under retirement churn with an aggressive threshold the engine
+    auto-compacts mid-workload and the token streams are untouched."""
+    mon, eng, _ = make_engine(slots=2, max_new=8, auto_compact_frag=0.2,
+                              auto_compact_min_pages=1)
+    for r in make_requests([8, 7, 8, 6], seed=11):      # churn wave
+        eng.submit(r)
+    eng.run_until_drained()
+    wave_b = make_requests(SPEC, seed=3)
+    for r in wave_b:
+        r.rid = "b-" + r.rid
+        eng.submit(r)
+    eng.run_until_drained()
+    got = {rid[2:]: rec.tokens for rid, rec in eng.completed.items()
+           if rid.startswith("b-")}
+    assert eng.auto_compactions > 0
+    eng.pool.check_invariants()
+    mon.vfpga_exit()
+    assert got == dense_ref
+
+
+def test_compact_refuses_while_pages_in_flight():
+    """compact() is only legal between iterations — with an iteration's
+    EXECUTEs holding physical page ids it must refuse."""
+    mon, eng, _ = make_engine(slots=2, max_new=4)
+    eng._mid_step = True
+    with pytest.raises(RuntimeError, match="in flight"):
+        eng.compact()
+    eng._mid_step = False
+    eng.compact()                      # boundary: fine
     mon.vfpga_exit()

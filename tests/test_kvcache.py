@@ -15,7 +15,7 @@ from repro.serve.kvcache import (BlockPool, BlockPoolError, cache_bytes,
                                  token_axes_from_lengths)
 
 try:
-    from hypothesis import settings
+    from hypothesis import given, settings
     from hypothesis import strategies as st
     from hypothesis.stateful import (RuleBasedStateMachine, invariant,
                                      precondition, rule)
@@ -74,6 +74,22 @@ def test_pages_for_tokens_and_occupancy():
     assert pool.occupancy() == 0.5 and pool.free_count() == 5
 
 
+def test_free_tail_releases_only_the_orphaned_suffix():
+    """The speculative-rollback primitive: only the pages past ``keep`` go
+    back to the pool, and they are returned for event accounting."""
+    pool = BlockPool(10, 4)
+    blocks = pool.alloc(5)
+    freed = pool.free_tail(blocks, 2)
+    assert freed == blocks[2:]
+    assert pool._used == set(blocks[:2])
+    pool.check_invariants()
+    assert pool.free_tail(blocks[:2], 2) == []      # nothing past keep
+    with pytest.raises(ValueError):
+        pool.free_tail(blocks[:2], -1)
+    with pytest.raises(BlockPoolError):             # already freed
+        pool.free_tail(blocks, 2)
+
+
 if HAS_HYPOTHESIS:
     class PoolMachine(RuleBasedStateMachine):
         """Random alloc/free/compact sequences preserve the partition
@@ -118,6 +134,29 @@ if HAS_HYPOTHESIS:
     TestPoolMachine.settings = settings(max_examples=30,
                                         deadline=None)
 
+    @settings(max_examples=60, deadline=None)
+    @given(data=st.data())
+    def test_free_tail_property(data):
+        """Rollback frees exactly the orphaned tail: after interleaved
+        allocations, ``free_tail(blocks, keep)`` leaves precisely the kept
+        prefixes owned and the pool partition invariant intact."""
+        pool = BlockPool(16, 4, reserve_pages=2)
+        owners = []
+        for _ in range(data.draw(st.integers(1, 4))):
+            n = data.draw(st.integers(1, 4))
+            got = pool.alloc(n, urgent=True)
+            if got is not None:
+                owners.append(got)
+        kept = []
+        for blocks in owners:
+            keep = data.draw(st.integers(0, len(blocks)))
+            freed = pool.free_tail(blocks, keep)
+            assert freed == blocks[keep:]
+            kept.extend(blocks[:keep])
+        pool.check_invariants()
+        assert pool._used == set(kept)
+        assert pool.free_count() == 16 - len(kept)
+
 
 # ---------------------------------------------------------------------------
 # Pool pytree construction + traced helpers (no model needed)
@@ -157,6 +196,19 @@ def test_token_axes_rejects_ring_caches():
     ring = {"k": jax.ShapeDtypeStruct((1, 4, 2, 3), jnp.float32)}
     with pytest.raises(ValueError):
         token_axes_from_lengths(ring, ring, 5, 8)
+
+
+def test_token_axes_delta_mode_for_margined_caches():
+    """exact=False matches on axis-size *delta* — the speculative-decode
+    draft lane, whose capacity is prompt_len + a constant margin."""
+    margin = 6
+    a, b = _abs(_lane_cache(5 + margin)), _abs(_lane_cache(8 + margin))
+    with pytest.raises(ValueError):
+        token_axes_from_lengths(a, b, 5, 8)          # sizes are P + margin
+    axes = token_axes_from_lengths(a, b, 5, 8, exact=False)
+    assert axes["k"] == 2 and axes["kv_pos"] == 1
+    with pytest.raises(ValueError):                  # delta must still match
+        token_axes_from_lengths(a, b, 5, 9, exact=False)
 
 
 def test_pool_specs_shapes(axes):

@@ -40,6 +40,22 @@ def test_gauge_set_add():
     assert g.value == 2.5
 
 
+def test_labeled_gauge_values_selects_by_label():
+    """(label_dict, value) pairs let a KV-aware router pick the engine
+    with the most free pages without parsing flattened keys."""
+    from repro.scaling.metrics import MetricsRegistry
+
+    reg = MetricsRegistry()
+    reg.gauge("kv_free_pages", service="svc", engine="e0").set(10.0)
+    reg.gauge("kv_free_pages", service="svc", engine="e1").set(3.0)
+    reg.gauge("kv_free_pages", service="other", engine="e2").set(99.0)
+    reg.gauge("kv_free_pages", service="svc").set(10.0)   # service rollup
+    got = reg.labeled_gauge_values("kv_free_pages", service="svc")
+    per_engine = {lbl["engine"]: v for lbl, v in got if "engine" in lbl}
+    assert per_engine == {"e0": 10.0, "e1": 3.0}
+    assert max(per_engine, key=per_engine.get) == "e0"
+
+
 def test_histogram_quantiles():
     clock = FakeClock()
     h = Histogram(clock, window_s=60.0)

@@ -1,0 +1,183 @@
+"""Speculative decode on the paged engine: bit-exact transcript equivalence
+vs non-speculative greedy decode across acceptance regimes (forced-accept
+self-draft, forced-reject antigreedy draft, mixed different-seed draft),
+rollback freeing exactly the orphaned lookahead tail, evict/resume with a
+lane mid-lookahead, OOM preemption during lookahead, prompt buckets, and
+the acceptance-rate gauge — all through the reusable equivalence harness
+in ``repro.serve.equivalence``."""
+
+import numpy as np
+import pytest
+
+from repro.core import FunkyCL, Monitor, SliceAllocator
+from repro.scaling.autoscaler import M_SPEC_ACCEPT_RATE
+from repro.scaling.metrics import MetricsRegistry
+from repro.serve.engine import (ContinuousBatchingEngine, ServeRequest,
+                                SpecConfig)
+from repro.serve.equivalence import (assert_transcripts_equal,
+                                     check_equivalence, evict_resume_every,
+                                     run_transcript)
+
+ARCH = "yi-9b-smoke"
+PROMPT_LEN = 8
+PAGE = 4
+SPEC = [3, 6, 4, 5]            # ragged per-request generation lengths
+
+
+def factory(spec=None, slots=2, max_new=8, **kw):
+    def make():
+        reg = MetricsRegistry()
+        mon = Monitor("spec-test", SliceAllocator("n0", 1), telemetry=reg)
+        eng = ContinuousBatchingEngine(
+            ARCH, FunkyCL(mon), slots=slots, prompt_len=PROMPT_LEN,
+            max_new_tokens=max_new, registry=reg, page_size=PAGE,
+            spec=spec, **kw)
+        eng.setup()
+        return mon, eng
+    return make
+
+
+def requests(spec_list=SPEC, seed=3, prompt_len=PROMPT_LEN):
+    def make():
+        rng = np.random.Generator(np.random.Philox(seed))
+        return [ServeRequest(rid=f"r{i}",
+                             prompt=rng.integers(0, 100, prompt_len),
+                             max_new_tokens=n)
+                for i, n in enumerate(spec_list)]
+    return make
+
+
+@pytest.fixture(scope="module")
+def plain_ref():
+    """Non-speculative paged greedy transcript for SPEC."""
+    ref, _ = run_transcript(factory(), requests())
+    return ref
+
+
+def test_forced_accept_bit_exact_and_multitoken(plain_ref):
+    """Self-draft (same arch + seed => identical params): every draft token
+    is accepted, so iterations commit up to k+1 tokens — and the stream is
+    still bit-exact vs plain greedy decode."""
+    got, eng = run_transcript(factory(SpecConfig(k=2)), requests())
+    assert_transcripts_equal(got, plain_ref, context="forced-accept")
+    stats = eng.spec_stats()
+    assert stats["accept_rate"] == 1.0
+    assert stats["tokens_per_lane_iteration"] > 1
+    assert stats["committed_tokens"] == sum(SPEC) - len(SPEC)
+
+
+def test_forced_reject_bit_exact(plain_ref):
+    """Antigreedy draft (argmin) mismatches at every position: each
+    iteration commits exactly the target's own token — plain-decode
+    throughput, identical stream, and every lookahead tail rolled back."""
+    got, eng = run_transcript(
+        factory(SpecConfig(k=2, draft_mode="antigreedy")), requests())
+    assert_transcripts_equal(got, plain_ref, context="forced-reject")
+    stats = eng.spec_stats()
+    assert stats["accept_rate"] == 0.0
+    assert stats["tokens_per_lane_iteration"] == 1.0
+
+
+def test_mixed_draft_bit_exact(plain_ref):
+    """A different-seed draft has arbitrary (mostly rejecting) agreement;
+    the committed stream must not depend on the draft at all."""
+    got, eng = run_transcript(
+        factory(SpecConfig(k=2, draft_seed=99)), requests())
+    assert_transcripts_equal(got, plain_ref, context="mixed")
+    assert 0.0 <= eng.spec_stats()["accept_rate"] <= 1.0
+
+
+def test_spec_vs_dense_reserved_baseline():
+    """The harness is baseline-parameterized: spec-paged vs the worst-case
+    reserved (non-paged) engine."""
+    check_equivalence(factory(SpecConfig(k=2)), factory(paged=False),
+                      requests(), context="spec-vs-dense")
+
+
+def test_rollback_frees_exactly_orphaned_tail():
+    """Rejected lookaheads free only the pages wholly past the committed
+    prefix: the pool invariant checker holds after every iteration, pages
+    drain to zero, and rollback events record freed tails."""
+    def hook(eng, mon, i):
+        eng.pool.check_invariants()
+        for st in eng._active.values():
+            # tail-free invariant: a lane holds exactly the pages that
+            # cover its committed history, never a stale lookahead tail
+            assert len(st.blocks) == -(-st.pos // PAGE)
+    got, eng = run_transcript(
+        factory(SpecConfig(k=3, draft_mode="antigreedy")), requests(),
+        step_hook=hook)
+    assert eng.pool.used_count() == 0
+    rollbacks = [e for e in eng.registry.flight_record()["events"]
+                 if e[1] == "engine_spec_rollback"]
+    assert rollbacks and all(e[2]["freed"] > 0 for e in rollbacks)
+
+
+def test_evict_resume_mid_lookahead_bit_exact(plain_ref):
+    """Evict/resume between iterations while kept pages still hold
+    rejected lookahead writes: the dirty-page report covers the partially
+    accepted pages, so the resumed lanes continue bit-exactly."""
+    got, _ = run_transcript(
+        factory(SpecConfig(k=2, draft_mode="antigreedy")), requests(),
+        step_hook=evict_resume_every(1))
+    assert_transcripts_equal(got, plain_ref, context="evict-mid-lookahead")
+    got, eng = run_transcript(factory(SpecConfig(k=3)), requests(),
+                              step_hook=evict_resume_every(2))
+    assert_transcripts_equal(got, plain_ref, context="evict-k3")
+    assert eng.spec_stats()["accept_rate"] == 1.0
+
+
+def test_oom_preemption_during_lookahead_recomputes_bit_exact(plain_ref):
+    """A pool too small for every lane's lookahead span forces OOM
+    preemption mid-lookahead; the victim requeues and recomputes the
+    identical greedy stream."""
+    got, eng = run_transcript(
+        factory(SpecConfig(k=2), pool_pages=6, reserve_pages=1), requests())
+    assert_transcripts_equal(got, plain_ref, context="oom-lookahead")
+    assert eng.preemptions > 0
+    eng.pool.check_invariants()
+
+
+def test_spec_with_prompt_buckets(plain_ref):
+    """Speculation composes with bucketed prefill (per-bucket draft
+    prefill/admit programs)."""
+    got, eng = run_transcript(
+        factory(SpecConfig(k=2), prompt_buckets=(4, PROMPT_LEN)),
+        requests())
+    assert_transcripts_equal(got, plain_ref, context="buckets")
+    assert eng.spec_stats()["accept_rate"] == 1.0
+
+
+def test_accept_rate_gauge_published_and_tombstoned_on_kill():
+    """The per-engine acceptance gauge lands in the registry under the
+    canonical name (the drive loop folds it to a service-level mean); a
+    killed replica tombstones it with NaN so dead engines stop biasing
+    the service mean."""
+    import math
+
+    _, eng = run_transcript(factory(SpecConfig(k=2)), requests())
+    vals = eng.registry.labeled_gauge_values(M_SPEC_ACCEPT_RATE,
+                                             service="svc")
+    per_engine = {lbl["engine"]: v for lbl, v in vals if "engine" in lbl}
+    assert per_engine == {"engine0": 1.0}
+    eng.evacuate()                         # kill path
+    vals = eng.registry.labeled_gauge_values(M_SPEC_ACCEPT_RATE,
+                                             service="svc")
+    assert all(math.isnan(v) for lbl, v in vals if "engine" in lbl)
+
+
+def test_spec_requires_paged_mode():
+    with pytest.raises(ValueError, match="paged"):
+        ContinuousBatchingEngine(
+            ARCH, FunkyCL(Monitor("x", SliceAllocator("n0", 1))),
+            paged=False, spec=SpecConfig(k=2))
+
+
+def test_harness_reports_first_divergence():
+    """The equivalence harness itself: a corrupted transcript fails with a
+    diagnostic naming the request and token position."""
+    ref = {"r0": [1, 2, 3]}
+    with pytest.raises(AssertionError, match="rid=r0 at token 1"):
+        assert_transcripts_equal({"r0": [1, 9, 3]}, ref)
+    with pytest.raises(AssertionError, match="request sets differ"):
+        assert_transcripts_equal({}, ref)
