@@ -25,10 +25,11 @@ from repro.core import FunkyCL, Monitor, SliceAllocator, TaskImage, \
     make_cluster
 from repro.core.simulator import (ServingParams, ServingSimulator,
                                   engine_service_model)
-from repro.scaling import (Autoscaler, LatencySLOPolicy, OrchestratorScaler,
-                           QueueLengthPolicy, TargetUtilizationPolicy,
-                           burst_rate, drive_engine_open_loop, open_loop,
-                           reset_router, teardown_service, wait_for_service)
+from repro.scaling import (Autoscaler, ClosedLoopGen, LatencySLOPolicy,
+                           OrchestratorScaler, QueueLengthPolicy,
+                           TargetUtilizationPolicy, burst_rate,
+                           drive_engine_open_loop, open_loop, reset_router,
+                           teardown_service, wait_for_service)
 from repro.scaling.metrics import MetricsRegistry
 from repro.serve.engine import (M_TBT, M_TTFT, ContinuousBatchingEngine,
                                 ServeRequest)
@@ -124,6 +125,57 @@ def sim_sweep(ttft_s: float, tbt_s: float):
     return results
 
 
+def closed_loop_sweep(ttft_s: float, tbt_s: float):
+    """Closed-loop think-time arm: N clients each wait ``think_time_s``
+    after a completion before issuing again, so offered load *adapts* to
+    the system (overload shows up as client backpressure, not an unbounded
+    queue).  SLO attainment alone is therefore misleading here — a slow
+    fixed deployment quietly throttles its own clients — so the honest
+    closed-loop comparison is throughput *and* latency: the autoscaled run
+    must complete at least as many requests with a lower mean latency."""
+    mean_n = (TOKENS_RANGE[0] + TOKENS_RANGE[1] - 1) / 2.0
+    raw_mean = ttft_s + (mean_n - 1) * tbt_s
+    scale = MEAN_SERVICE_S / raw_mean
+    service_time_fn = engine_service_model(ttft_s * scale, tbt_s * scale,
+                                           default_tokens=int(mean_n))
+    results = {}
+    for n_clients in (8, 24):
+        def run(autoscaler=None):
+            gen = ClosedLoopGen(n_clients=n_clients, think_time_s=0.5,
+                                mean_service_s=MEAN_SERVICE_S,
+                                horizon_s=60.0, seed=17,
+                                tokens_range=TOKENS_RANGE)
+            sim = ServingSimulator(
+                gen.initial(), closed_gen=gen, autoscaler=autoscaler,
+                initial_replicas=2,
+                params=ServingParams(slo_latency_s=SLO_S),
+                service_time_fn=service_time_fn)
+            rep = sim.run()
+            assert rep["completed"] == gen.issued, \
+                (rep["completed"], gen.issued)   # closed loop conserves
+            return rep
+
+        fixed = run()
+        elastic = run(_autoscaler(QueueLengthPolicy(1.0)))
+        results[n_clients] = (fixed, elastic)
+        for name, r in (("fixed-2", fixed), ("queue-len", elastic)):
+            emit(f"fig14/closed/{name}@{n_clients}c",
+                 r["mean_latency_s"] * 1e6,
+                 f"slo={r['slo_attainment']:.3f} "
+                 f"p95={r['p95_latency_s']:.2f}s "
+                 f"served={r['completed']} "
+                 f"mean_rep={r['mean_replicas']:.1f}")
+        if (elastic["completed"] < fixed["completed"]
+                or elastic["mean_latency_s"] >= fixed["mean_latency_s"]):
+            raise SystemExit(
+                f"closed-loop queue-len policy did not beat the fixed "
+                f"baseline at {n_clients} clients (served "
+                f"{elastic['completed']} vs {fixed['completed']}, mean "
+                f"{elastic['mean_latency_s']:.3f}s vs "
+                f"{fixed['mean_latency_s']:.3f}s)")
+    return results
+
+
 # ---------------------------------------------------------------------------
 # Live plane: per-request engine serving, real replicate/remove
 # ---------------------------------------------------------------------------
@@ -184,6 +236,7 @@ def live_run(ttft_s: float, tbt_s: float, duration_s: float = 9.0):
 def main():
     ttft_s, tbt_s = engine_calibration()
     results = sim_sweep(ttft_s, tbt_s)
+    closed_loop_sweep(ttft_s, tbt_s)
     live_snap, scaled_out = live_run(ttft_s, tbt_s)
 
     # schema parity: the signals the autoscaler reads exist, with identical

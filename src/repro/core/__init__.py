@@ -5,6 +5,9 @@ from repro.core.cluster import Cluster, Node, make_cluster
 from repro.core.guest import FunkyCL
 from repro.core.monitor import (DeviceMemoryExceeded, Monitor, MonitorError,
                                 MonitorState, NoSliceAvailable)
+from repro.core.placement import (MigrationConfig, MigrationController,
+                                  MigrationDecision, PlacementPolicy,
+                                  PlacementWeights, ServiceGroup)
 from repro.core.programs import Program, ProgramCache
 from repro.core.requests import (Completion, Direction, FunkyRequest,
                                  RequestKind)
@@ -21,9 +24,12 @@ __all__ = [
     "Action", "Buffer", "BufferState", "BufferTable", "Cluster", "Completion",
     "DeviceMemoryExceeded", "Direction", "EngineServeTask", "FunkyCL",
     "FunkyRequest",
-    "FunkyRuntime", "FunkyScheduler", "GuestState", "GuestTask", "Monitor",
-    "MonitorError", "MonitorState", "Node", "NoSliceAvailable", "Policy",
+    "FunkyRuntime", "FunkyScheduler", "GuestState", "GuestTask",
+    "MigrationConfig", "MigrationController", "MigrationDecision", "Monitor",
+    "MonitorError", "MonitorState", "Node", "NoSliceAvailable",
+    "PlacementPolicy", "PlacementWeights", "Policy",
     "Program", "ProgramCache", "RequestKind", "SchedTask", "ServeTask",
+    "ServiceGroup",
     "SliceAllocator", "TaskImage", "TaskRecord", "TaskSnapshot", "TaskState",
     "TaskStatus", "TrainTask", "VSlice", "make_cluster", "tree_bytes",
 ]

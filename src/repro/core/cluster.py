@@ -58,7 +58,12 @@ def make_cluster(num_nodes: int = 3, slices_per_node: int = 1,
                  mem_cap_bytes: int = 8 << 30,
                  checkpoint_interval: Optional[float] = None,
                  ckpt_root: Optional[str] = None,
-                 metrics: Optional[MetricsRegistry] = None) -> Cluster:
+                 metrics: Optional[MetricsRegistry] = None,
+                 failure_domains: Optional[int] = None,
+                 straggler_interval: Optional[float] = None) -> Cluster:
+    """``failure_domains=k`` spreads the nodes round-robin over ``k``
+    synthetic failure domains (rack/PDU model) for replica anti-affinity;
+    the default gives every node its own domain."""
     images = images or {}
     ckpt_root = ckpt_root or tempfile.mkdtemp(prefix="funky-ckpt-")
     metrics = metrics if metrics is not None else MetricsRegistry()
@@ -73,11 +78,13 @@ def make_cluster(num_nodes: int = 3, slices_per_node: int = 1,
                           telemetry=metrics)
         eng = ContainerEngine(rt, images, peers=engines)
         engines[nid] = eng
-        agent = NodeAgent(nid, eng, metrics=metrics)
+        domain = (f"dom{i % failure_domains}" if failure_domains else None)
+        agent = NodeAgent(nid, eng, metrics=metrics, failure_domain=domain)
         nodes[nid] = Node(nid, alloc, rt, eng, agent)
     orch = Orchestrator({n: nd.agent for n, nd in nodes.items()},
                         policy=policy,
                         checkpoint_interval=checkpoint_interval,
-                        metrics=metrics)
+                        metrics=metrics,
+                        straggler_interval=straggler_interval)
     return Cluster(nodes=nodes, orchestrator=orch, images=images,
                    ckpt_root=ckpt_root)

@@ -23,6 +23,8 @@ from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional
 
 from repro.core.node_agent import NodeAgent, NodeFailed
+from repro.core.placement import (M_NODE_UTILIZATION, MigrationController,
+                                  PlacementPolicy)
 from repro.core.runtime import TaskStatus
 from repro.core.scheduler import (Action, FunkyScheduler, Policy, SchedTask,
                                   TaskState)
@@ -41,24 +43,35 @@ class Deployment:
     start_time: Optional[float] = None
     end_time: Optional[float] = None
     status: str = "pending"
+    group: Optional[str] = None         # service group (replica set) id
 
 
 class Orchestrator:
     def __init__(self, agents: Dict[str, NodeAgent],
                  policy: Policy = Policy.PRE_MG,
                  checkpoint_interval: Optional[float] = None,
-                 metrics: Optional[MetricsRegistry] = None):
+                 metrics: Optional[MetricsRegistry] = None,
+                 placement: Optional[PlacementPolicy] = None,
+                 straggler_interval: Optional[float] = None):
         self.agents = agents
-        self.scheduler = FunkyScheduler(policy)
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        # one placement engine for every decision (scheduling, scale-out,
+        # failure recovery, straggler migration) — scored from this
+        # orchestrator's enriched ClusterView + the shared registry
+        self.placement = (placement if placement is not None
+                          else PlacementPolicy(registry=self.metrics))
+        self.scheduler = FunkyScheduler(policy, placement=self.placement)
+        self.migration = MigrationController(self.metrics)
         self.deployments: Dict[str, Deployment] = {}
         self._sched_tasks: Dict[str, SchedTask] = {}
+        self._image_programs: Dict[str, tuple] = {}   # image_ref -> programs
         self._cid_counter = itertools.count(1)
         self._lock = threading.RLock()
         self.checkpoint_interval = checkpoint_interval
+        self.straggler_interval = straggler_interval
         self._stop = threading.Event()
         self._threads: List[threading.Thread] = []
         self.events: List[tuple] = []
-        self.metrics = metrics if metrics is not None else MetricsRegistry()
         self._started = False
         # (autoscaler, target, signal_fn, interval_s) reconcile loops
         self._autoscalers: List[tuple] = []
@@ -67,15 +80,19 @@ class Orchestrator:
     # API server
     # ------------------------------------------------------------------
     def submit(self, image_ref: str, priority: int = 0,
-               preemptible: bool = True, cid: Optional[str] = None) -> str:
+               preemptible: bool = True, cid: Optional[str] = None,
+               group: Optional[str] = None) -> str:
         with self._lock:
             cid = cid or f"task-{next(self._cid_counter):04d}"
             dep = Deployment(cid=cid, image_ref=image_ref, priority=priority,
-                             preemptible=preemptible)
+                             preemptible=preemptible, group=group)
             self.deployments[cid] = dep
             st = SchedTask(tid=cid, priority=priority,
                            submit_time=dep.submit_time,
-                           preemptible=preemptible)
+                           preemptible=preemptible, group=group)
+            progs = self._image_programs.get(image_ref)
+            if progs:
+                st.meta["programs"] = progs     # warm-cache affinity hint
             self._sched_tasks[cid] = st
             self.scheduler.submit(st)
             self._log("submit", cid=cid, priority=priority)
@@ -93,14 +110,20 @@ class Orchestrator:
         # outside the lock — holding it would freeze scheduling and
         # failure recovery for the whole replicate.
         with self._lock:
-            src = self._sched_tasks[cid].node_id
-            image_ref = self.deployments[cid].image_ref
+            base_st = self._sched_tasks[cid]
+            base_dep = self.deployments[cid]
+            src = base_st.node_id
+            image_ref = base_dep.image_ref
+            gid = self._ensure_group(cid)
             new_cid = f"{cid}-r{next(self._cid_counter)}"
-            dep = Deployment(cid=new_cid, image_ref=image_ref)
+            dep = Deployment(cid=new_cid, image_ref=image_ref, group=gid)
             dep.status = "running"
             self.deployments[new_cid] = dep
             st = SchedTask(tid=new_cid, state=TaskState.RUNNING,
-                           node_id=target_node)
+                           node_id=target_node, group=gid)
+            progs = self._image_programs.get(image_ref)
+            if progs:
+                st.meta["programs"] = progs
             self._sched_tasks[new_cid] = st
             self.scheduler.run_queue.append(st)
         try:
@@ -114,6 +137,33 @@ class Orchestrator:
             raise
         self._log("replicate", cid=cid, new_cid=new_cid, node=target_node)
         return new_cid
+
+    def _ensure_group(self, cid: str) -> str:
+        """Replicas of ``cid`` share a service group (default: the base
+        task's cid), so placement can spread them across failure domains."""
+        dep = self.deployments[cid]
+        gid = dep.group or cid
+        dep.group = gid
+        st = self._sched_tasks[cid]
+        if st.group is None:
+            st.group = gid
+        return gid
+
+    def place_replica(self, cid: str) -> Optional[str]:
+        """Pick the node for a new replica of ``cid`` through the unified
+        placement engine: warm program-cache affinity (the clone reuses the
+        base image's compiled programs) and failure-domain anti-affinity
+        against the group's running members.  Returns None when no node has
+        a free slice."""
+        with self._lock:
+            dep = self.deployments[cid]
+            gid = self._ensure_group(cid)
+            probe = SchedTask(
+                tid=f"{cid}::place", priority=dep.priority, group=gid,
+                meta={"programs": self._image_programs.get(dep.image_ref,
+                                                           ())})
+            return self.placement.select_node(
+                probe, self, {}, running=self.scheduler.run_queue)
 
     def scale_vertical(self, cid: str, vfpga_num: int):
         node = self._sched_tasks[cid].node_id
@@ -131,8 +181,9 @@ class Orchestrator:
                 try:
                     stats = self.agents[node].drain(cid, timeout_s=drain_s)
                     self._log("drain", cid=cid, node=node, **stats)
-                except Exception:  # noqa: BLE001 - node may be gone
-                    pass
+                except Exception as e:  # noqa: BLE001 - node may be gone
+                    self._log("drain_error", cid=cid, node=node,
+                              error=repr(e))
         with self._lock:
             st = self._sched_tasks[cid]
             node = st.node_id
@@ -141,6 +192,7 @@ class Orchestrator:
             self.scheduler.task_done(cid)
             self.scheduler.wait_queue = [
                 t for t in self.scheduler.wait_queue if t.tid != cid]
+            self.migration.forget(cid)
             st.state = TaskState.DONE
             dep = self.deployments[cid]
             dep.status = "removed"
@@ -216,6 +268,20 @@ class Orchestrator:
     def running_tasks(self, node: str) -> List[SchedTask]:
         return [t for t in self.scheduler.run_queue if t.node_id == node]
 
+    # -- enriched view (placement layer) --------------------------------
+    def failure_domain(self, node: str) -> str:
+        agent = self.agents.get(node)
+        return agent.failure_domain if agent is not None else node
+
+    def warm_programs(self, node: str) -> tuple:
+        agent = self.agents.get(node)
+        if agent is None or agent.failed:
+            return ()
+        try:
+            return agent.warm_programs()
+        except NodeFailed:
+            return ()
+
     # ------------------------------------------------------------------
     # Scheduling loop
     # ------------------------------------------------------------------
@@ -224,6 +290,7 @@ class Orchestrator:
         t0 = time.perf_counter()
         with self._lock:
             self._reap()
+            self._learn_programs()
             actions = self.scheduler.schedule_once(self)
             for a in actions:
                 self._execute(a)
@@ -231,6 +298,31 @@ class Orchestrator:
             self.metrics.histogram("sched_tick_seconds").observe(
                 time.perf_counter() - t0)
             return actions
+
+    def _learn_programs(self):
+        """Cache each running image's program ids (once known) so placement
+        can match them against node program caches for warm affinity."""
+        for st in self.scheduler.run_queue:
+            if "programs" in st.meta:
+                continue
+            dep = self.deployments.get(st.tid)
+            agent = self.agents.get(st.node_id)
+            if dep is None or agent is None or agent.failed:
+                continue
+            known = self._image_programs.get(dep.image_ref)
+            if known:
+                st.meta["programs"] = known
+                continue
+            try:
+                progs = agent.task_programs(st.tid)
+            except NodeFailed:
+                continue
+            if progs is None:
+                continue               # guest still booting: retry next tick
+            # cache even an empty result so probing terminates per task
+            st.meta["programs"] = tuple(progs)
+            if progs:
+                self._image_programs[dep.image_ref] = tuple(progs)
 
     def _publish_cluster_metrics(self):
         """Cluster-level gauges (same names the simulator emits)."""
@@ -245,6 +337,9 @@ class Orchestrator:
             slices = agent.num_slices()
             free = self.free_slices(n)
             self.metrics.gauge("free_slices", node=n).set(free)
+            if slices:
+                self.metrics.gauge(M_NODE_UTILIZATION, node=n).set(
+                    (slices - free) / slices)
             total += slices
             used += slices - free
         if total:
@@ -262,6 +357,7 @@ class Orchestrator:
             if status is TaskStatus.DONE:
                 st.state = TaskState.DONE
                 self.scheduler.task_done(cid)
+                self.migration.forget(cid)
                 dep.status = "done"
                 dep.end_time = time.time()
                 self._log("done", cid=cid)
@@ -281,6 +377,7 @@ class Orchestrator:
                     continue
                 st.state = TaskState.DONE
                 self.scheduler.task_done(cid)
+                self.migration.forget(cid)
                 dep.status = "failed"
                 dep.end_time = time.time()
                 self._log("task_failed", cid=cid)
@@ -353,13 +450,29 @@ class Orchestrator:
                     for cid in running:
                         try:
                             self.checkpoint(cid)
-                        except Exception:  # noqa: BLE001
-                            pass
+                        except Exception as e:  # noqa: BLE001
+                            # a task may legitimately finish/evict under us,
+                            # but a permanently broken snapshot path must
+                            # not look like a healthy checkpoint service
+                            self._log("ckpt_error", cid=cid, error=repr(e))
 
             t2 = threading.Thread(target=ckpt_loop, daemon=True,
                                   name="funky-ckpt")
             t2.start()
             self._threads.append(t2)
+
+        if self.straggler_interval:
+            def straggler_loop():
+                while not self._stop.wait(self.straggler_interval):
+                    try:
+                        self.check_stragglers()
+                    except Exception as e:  # noqa: BLE001
+                        self._log("straggler_probe_error", error=repr(e))
+
+            t3 = threading.Thread(target=straggler_loop, daemon=True,
+                                  name="funky-straggler")
+            t3.start()
+            self._threads.append(t3)
 
     def stop(self):
         self._stop.set()
@@ -371,15 +484,15 @@ class Orchestrator:
     # ------------------------------------------------------------------
     def check_stragglers(self, *, min_relative_rate: float = 0.5,
                          min_window_s: float = 1.0) -> List[str]:
-        """Detect tasks progressing abnormally slowly (degraded node) and
-        evict them so the scheduler migrates their context elsewhere.
-
-        Rate = guest steps per second since the last probe; a task whose
-        rate is below ``min_relative_rate`` x the median of its peers (>= 3
-        running tasks required) is a straggler.  Returns the cids acted on.
-        """
-        now = time.time()
-        rates = {}
+        """Metrics-driven migration: node agents publish each task's guest
+        step counter into the shared registry (``task_progress_steps``
+        series + per-node ``node_progress_rate`` gauges), and the
+        ``MigrationController`` flags tasks progressing below
+        ``min_relative_rate`` x the peer median (>= 3 measurable peers
+        required).  Flagged tasks are evicted so the scheduler's placement
+        migrates their context to a healthier node.  Returns the cids
+        acted on."""
+        running: Dict[str, Optional[str]] = {}
         with self._lock:
             for st in list(self.scheduler.run_queue):
                 agent = self.agents.get(st.node_id)
@@ -391,35 +504,36 @@ class Orchestrator:
                     continue
                 if step is None:
                     continue
-                prev = st.meta.get("probe")
-                st.meta["probe"] = (now, step)
-                if prev is None or now - prev[0] < min_window_s:
-                    continue
-                rates[st.tid] = (step - prev[1]) / (now - prev[0])
-        if len(rates) < 3:
-            return []
-        med = sorted(rates.values())[len(rates) // 2]
-        if med <= 0:
-            return []
+                self.migration.observe(st.tid, step)
+                running[st.tid] = st.node_id
+        decisions = self.migration.decide(
+            running, min_relative_rate=min_relative_rate,
+            min_window_s=min_window_s)
         acted = []
-        for tid, rate in rates.items():
-            if rate < min_relative_rate * med:
-                st = self._sched_tasks[tid]
-                # only worth migrating if somewhere else has room
-                if any(self.free_slices(n) > 0 for n in self.nodes()
+        for d in decisions:
+            st = self._sched_tasks[d.cid]
+            # only worth migrating if somewhere else has room
+            if not any(self.free_slices(n) > 0 for n in self.nodes()
                        if n != st.node_id):
-                    try:
-                        self.agents[st.node_id].evict(tid)
-                    except Exception:  # noqa: BLE001
-                        continue
-                    with self._lock:
-                        self.scheduler.task_done(tid)
-                        st.state = TaskState.EVICTED
-                        self.scheduler.submit(st)
-                        st.meta.pop("probe", None)
-                    self._log("straggler_evicted", cid=tid, rate=rate,
-                              median=med)
-                    acted.append(tid)
+                continue
+            try:
+                self.agents[st.node_id].evict(d.cid)
+            except Exception as e:  # noqa: BLE001 - task may just finish
+                self._log("straggler_evict_error", cid=d.cid,
+                          error=repr(e))
+                continue
+            with self._lock:
+                self.scheduler.task_done(d.cid)
+                st.state = TaskState.EVICTED
+                # the freed slice would otherwise resume the straggler
+                # straight back onto the degraded node — flag it so
+                # placement scores the *other* candidates first
+                st.meta["migrate_from"] = st.node_id
+                self.scheduler.submit(st)
+                self.migration.reset(d.cid)
+            self._log("straggler_evicted", cid=d.cid, rate=d.rate,
+                      median=d.median)
+            acted.append(d.cid)
         return acted
 
     # ------------------------------------------------------------------
@@ -433,9 +547,17 @@ class Orchestrator:
                        if t.node_id == node_id]
             for st in victims:
                 self.scheduler.task_done(st.tid)
+                # pre-failure progress history measured the dead node
+                self.migration.reset(st.tid)
                 dep = self.deployments[st.tid]
                 snap = dep and self._latest_snapshot_any(st.tid)
-                target = self._pick_free_node()
+                # restore target chosen by the same placement engine (the
+                # failed node's domain peers are penalized automatically)
+                probe = SchedTask(tid=f"{st.tid}::restore",
+                                  priority=st.priority, group=st.group,
+                                  meta=dict(st.meta))
+                target = self.placement.select_node(
+                    probe, self, {}, running=self.scheduler.run_queue)
                 if snap and target:
                     self.agents[target].restore(st.tid, snap, dep.image_ref)
                     st.state = TaskState.RUNNING
@@ -459,14 +581,6 @@ class Orchestrator:
             if hits:
                 return hits[-1]
         return None
-
-    def _pick_free_node(self) -> Optional[str]:
-        best, best_free = None, 0
-        for n in self.nodes():
-            f = self.free_slices(n)
-            if f > best_free:
-                best, best_free = n, f
-        return best
 
     # ------------------------------------------------------------------
     def wait_all(self, timeout: float = 600.0) -> bool:

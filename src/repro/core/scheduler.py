@@ -43,6 +43,10 @@ class SchedTask:
     state: TaskState = TaskState.WAITING
     node_id: Optional[str] = None       # where it runs / where context lives
     preemptible: bool = True
+    # service-group id: replicas of one service share it, so placement can
+    # spread them across failure domains and victim selection never takes a
+    # group's last running replica while an alternative exists
+    group: Optional[str] = None
     meta: dict = field(default_factory=dict)
 
 
@@ -61,8 +65,13 @@ class ClusterView(Protocol):
 
 
 class FunkyScheduler:
-    def __init__(self, policy: Policy = Policy.PRE_MG):
+    def __init__(self, policy: Policy = Policy.PRE_MG, placement=None):
         self.policy = Policy(policy)
+        if placement is None:
+            # lazy import: placement builds on SchedTask/TaskState above
+            from repro.core.placement import PlacementPolicy
+            placement = PlacementPolicy()
+        self.placement = placement
         self.wait_queue: List[SchedTask] = []
         self.run_queue: List[SchedTask] = []
         self._seq = itertools.count()
@@ -87,32 +96,17 @@ class FunkyScheduler:
 
     def _select_node(self, task: SchedTask, view: ClusterView,
                      reserved: dict) -> Optional[str]:
-        """Most suitable node with a free slice (Alg 1 L4)."""
-        def free(n):
-            return view.free_slices(n) - reserved.get(n, 0)
-
-        # evicted tasks prefer (or are pinned to) their context's node
-        if task.state is TaskState.EVICTED and task.node_id is not None:
-            if free(task.node_id) > 0:
-                return task.node_id
-            if self.policy is not Policy.PRE_MG:
-                return None            # PRE_EV cannot migrate contexts
-        candidates = [n for n in view.nodes() if free(n) > 0]
-        if not candidates:
-            return None
-        return max(candidates, key=lambda n: (free(n), n))
+        """Most suitable node with a free slice (Alg 1 L4) — delegated to
+        the unified ``PlacementPolicy`` (warm-cache affinity, failure-domain
+        anti-affinity, per-node telemetry)."""
+        return self.placement.select_node(
+            task, view, reserved, running=self.run_queue,
+            allow_migrate=self.policy is Policy.PRE_MG)
 
     def _find_victim(self, task: SchedTask, view: ClusterView,
                      evicting: set) -> Optional[SchedTask]:
-        """Lowest-priority preemptible running task strictly below ``task``."""
-        best = None
-        for t in self.run_queue:
-            if t.tid in evicting or not t.preemptible:
-                continue
-            if t.priority < task.priority:
-                if best is None or t.priority < best.priority:
-                    best = t
-        return best
+        """Preemption victim — delegated to the group-aware policy."""
+        return self.placement.find_victim(task, self.run_queue, evicting)
 
     # ------------------------------------------------------------------
     def schedule_once(self, view: ClusterView) -> List[Action]:
@@ -158,6 +152,7 @@ class FunkyScheduler:
             reserved[node] = reserved.get(node, 0) + 1
             task.state = TaskState.RUNNING
             task.node_id = node
+            task.meta.pop("migrate_from", None)   # migration flag consumed
             self.wait_queue.remove(task)
             self.run_queue.append(task)
         return actions

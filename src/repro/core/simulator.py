@@ -1,8 +1,11 @@
 """Discrete-event cluster simulator (paper §5.6, Figs 11–13).
 
 Replays (synthetic) Borg-like traces against a simulated vSlice cluster.
-The *same* ``FunkyScheduler`` policy engine used by the live runtime drives
-placement decisions; Funky-specific overheads (boot, reconfiguration, sync
+The *same* ``FunkyScheduler`` + ``PlacementPolicy`` engine used by the live
+runtime drives placement decisions — ``SimulatedCluster`` exposes the same
+enriched view (synthetic failure domains, a warm program-cache model that
+skips reconfiguration on warm deploys, per-node utilization gauges in the
+virtual-clock registry); Funky-specific overheads (boot, reconfiguration, sync
 wait, evict/resume/migrate/checkpoint byte costs) are inserted per event,
 parameterized by the micro-benchmarks measured on the live runtime —
 exactly the paper's methodology.
@@ -24,6 +27,7 @@ from collections import deque
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
+from repro.core.placement import M_NODE_UTILIZATION
 from repro.core.scheduler import (Action, FunkyScheduler, Policy, SchedTask,
                                   TaskState)
 from repro.core.traces import TraceJob
@@ -68,13 +72,23 @@ class SimJobState:
 
 
 class SimulatedCluster:
-    """ClusterView over simulated nodes."""
+    """Enriched ClusterView over simulated nodes: synthetic failure
+    domains (round-robin across ``failure_domains`` when given, else every
+    node its own domain) and a warm program-cache model (a node that ever
+    compiled a job's programs stays warm — compile caches persist) — so
+    the simulator's ``PlacementPolicy`` sees the same signal shapes as the
+    live orchestrator's view."""
 
-    def __init__(self, num_nodes: int, slices_per_node: int):
+    def __init__(self, num_nodes: int, slices_per_node: int,
+                 failure_domains: Optional[int] = None):
         self.capacity = {f"node{i}": slices_per_node
                          for i in range(num_nodes)}
         self.used: Dict[str, int] = {n: 0 for n in self.capacity}
         self.placement: Dict[str, str] = {}
+        self.domains = {
+            n: (f"dom{i % failure_domains}" if failure_domains else n)
+            for i, n in enumerate(self.capacity)}
+        self.warm: Dict[str, set] = {n: set() for n in self.capacity}
 
     def nodes(self) -> List[str]:
         return list(self.capacity)
@@ -85,9 +99,20 @@ class SimulatedCluster:
     def running_tasks(self, node: str):  # unused by scheduler internals
         return []
 
-    def occupy(self, node: str, tid: str):
+    # -- enriched view (placement layer) --------------------------------
+    def failure_domain(self, node: str) -> str:
+        return self.domains[node]
+
+    def warm_programs(self, node: str) -> set:
+        return self.warm[node]
+
+    def is_warm(self, node: str, programs) -> bool:
+        return bool(programs) and set(programs) <= self.warm[node]
+
+    def occupy(self, node: str, tid: str, programs=()):
         self.used[node] += 1
         self.placement[tid] = node
+        self.warm[node].update(programs)
 
     def release(self, tid: str):
         node = self.placement.pop(tid, None)
@@ -98,11 +123,12 @@ class SimulatedCluster:
 class Simulator:
     def __init__(self, jobs: List[TraceJob], num_nodes: int,
                  slices_per_node: int = 1, policy: Policy = Policy.PRE_MG,
-                 params: Optional[SimParams] = None):
+                 params: Optional[SimParams] = None,
+                 placement=None, failure_domains: Optional[int] = None):
         self.jobs = jobs
         self.params = params or SimParams()
-        self.cluster = SimulatedCluster(num_nodes, slices_per_node)
-        self.sched = FunkyScheduler(policy)
+        self.cluster = SimulatedCluster(num_nodes, slices_per_node,
+                                        failure_domains=failure_domains)
         self.states: Dict[str, SimJobState] = {}
         self.tasks: Dict[str, SchedTask] = {}
         self._heap: list = []
@@ -111,6 +137,12 @@ class Simulator:
         self.events_processed = 0
         # same telemetry schema as the live plane, virtual-clock timestamps
         self.metrics = MetricsRegistry(clock=lambda: self.now)
+        # the *same* placement engine as the live plane, reading the
+        # enriched SimulatedCluster view + this simulator's registry
+        if placement is None:
+            from repro.core.placement import PlacementPolicy
+            placement = PlacementPolicy(registry=self.metrics)
+        self.sched = FunkyScheduler(policy, placement=placement)
 
     # ------------------------------------------------------------------
     def _push(self, t: float, kind: str, payload=None):
@@ -156,7 +188,11 @@ class Simulator:
                          submit_t=self.now)
         self.states[job.jid] = st
         task = SchedTask(tid=job.jid, priority=job.priority,
-                         submit_time=self.now)
+                         submit_time=self.now,
+                         group=getattr(job, "group", None))
+        progs = getattr(job, "programs", ())
+        if progs:
+            task.meta["programs"] = tuple(progs)
         self.tasks[job.jid] = task
         self.sched.submit(task)
         self.metrics.counter("sim_jobs_submitted_total").inc()
@@ -239,9 +275,15 @@ class Simulator:
         for a in actions:
             st = self.states[a.tid]
             if a.kind == "deploy":
-                self.cluster.occupy(a.node, a.tid)
+                progs = getattr(st.job, "programs", ())
+                # warm program cache: the node already compiled this job's
+                # bitstreams, so deploy skips reconfiguration (the paper's
+                # warmed-up-FPGA behavior the placement layer optimizes for)
+                warm = self.cluster.is_warm(a.node, progs)
+                self.cluster.occupy(a.node, a.tid, programs=progs)
                 self._start_running(
-                    st, self.params.boot_s + self.params.reconfig_s)
+                    st, self.params.boot_s
+                    + (0.0 if warm else self.params.reconfig_s))
             elif a.kind == "evict":
                 self._pause(st)
                 st.evictions += 1
@@ -253,7 +295,8 @@ class Simulator:
                 self._start_running(st, self._resume_cost(st))
             elif a.kind == "migrate":
                 st.migrations += 1
-                self.cluster.occupy(a.node, a.tid)
+                self.cluster.occupy(
+                    a.node, a.tid, programs=getattr(st.job, "programs", ()))
                 self._start_running(
                     st, self._migrate_cost(st) + self._resume_cost(st))
             self.metrics.counter("sim_actions_total", kind=a.kind).inc()
@@ -263,6 +306,9 @@ class Simulator:
         if cap:
             self.metrics.gauge("cluster_utilization").set(
                 sum(self.cluster.used.values()) / cap)
+            for n, c in self.cluster.capacity.items():
+                self.metrics.gauge(M_NODE_UTILIZATION, node=n).set(
+                    self.cluster.used[n] / c)
 
     # -- reporting ---------------------------------------------------------------
     def _report(self) -> dict:

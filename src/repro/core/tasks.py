@@ -54,6 +54,7 @@ class TaskImage:
     spec_k: int = 0
     spec_draft_arch: Optional[str] = None   # None = self-draft (target arch)
     spec_draft_seed: Optional[int] = None   # None = engine seed
+    spec_dynamic_k: bool = False    # adapt lookahead from live accept rate
     seed: int = 0
     opt: OptConfig = field(default_factory=lambda: OptConfig(
         warmup_steps=2, decay_steps=100))
@@ -97,13 +98,24 @@ class GuestTask:
         """True once a draining task holds no unfinished work."""
         return True
 
+    def program_ids(self) -> tuple:
+        """Program ("bitstream") ids this guest compiles — the placement
+        layer matches them against node program caches for warm-cache
+        affinity.  Empty means unknown (e.g. before setup)."""
+        return ()
+
 
 class TrainTask(GuestTask):
+    PROGRAMS = ("init_state", "grad_init", "grad_step", "apply")
+
     def __init__(self, image: TaskImage):
         self.image = image
         self.cfg = get_arch(image.arch)
         self.shape = ShapeConfig("task", "train", image.seq_len,
                                  image.global_batch)
+
+    def program_ids(self) -> tuple:
+        return self.PROGRAMS
 
     # -- programs -------------------------------------------------------------
     def _build_programs(self):
@@ -206,9 +218,14 @@ class TrainTask(GuestTask):
 class ServeTask(GuestTask):
     """Batched greedy decoding service; one step() = tokens_per_step tokens."""
 
+    PROGRAMS = ("init_params", "prefill", "decode")
+
     def __init__(self, image: TaskImage):
         self.image = image
         self.cfg = get_arch(image.arch)
+
+    def program_ids(self) -> tuple:
+        return self.PROGRAMS
 
     def _build_programs(self):
         from repro.models import build_model
@@ -309,7 +326,8 @@ class EngineServeTask(GuestTask):
         self._router = get_router(im.name,
                                   registry=cl._monitor.telemetry)
         spec = (SpecConfig(k=im.spec_k, draft_arch=im.spec_draft_arch,
-                           draft_seed=im.spec_draft_seed)
+                           draft_seed=im.spec_draft_seed,
+                           dynamic_k=im.spec_dynamic_k)
                 if im.spec_k > 0 else None)
         self._engine = ContinuousBatchingEngine(
             im.arch, cl, slots=im.global_batch, prompt_len=im.prompt_len,
@@ -338,6 +356,9 @@ class EngineServeTask(GuestTask):
     @property
     def drained(self) -> bool:
         return self._engine is None or self._engine.idle
+
+    def program_ids(self) -> tuple:
+        return self._engine.program_ids() if self._engine is not None else ()
 
     def teardown(self, cl: FunkyCL, gs: GuestState) -> None:
         gs.user["completed"] = len(self._engine.completed)

@@ -33,6 +33,12 @@ class TraceJob:
     priority: int                   # 0 best-effort, 1 batch, 2 prod
     memory_bytes: int               # device-memory working set
     fail_frac: Optional[float]      # fraction of work at which the job fails
+    # placement enrichment (optional): replicas of one service share a
+    # group (spread across failure domains); ``programs`` are the job's
+    # bitstream ids — a node that already compiled them is warm and skips
+    # reconfiguration on deploy
+    group: Optional[str] = None
+    programs: tuple = ()
 
 
 def generate_trace(n_jobs: int = 2000, horizon_s: float = 24 * 3600.0,

@@ -226,9 +226,11 @@ class OrchestratorScaler:
     """ReplicaTarget driving ``Orchestrator.scale_horizontal`` /
     ``scale_in`` for one service (a base task plus clones).
 
-    Scale-out clones the base task's live snapshot onto the node with the
-    most free vSlices (warm caches included, per the paper's replicate
-    command); scale-in removes the youngest replica, never the base —
+    Scale-out clones the base task's live snapshot onto the node the
+    orchestrator's ``PlacementPolicy`` scores best (free vSlices first,
+    then warm program caches, spread across failure domains — the paper's
+    replicate command, placement-aware); scale-in removes the youngest
+    replica, never the base —
     draining it first (``drain_timeout_s``) so in-flight sequences finish
     at their request boundary instead of being requeued and recomputed.
     """
@@ -256,7 +258,10 @@ class OrchestratorScaler:
     def scale_to(self, n: int) -> None:
         with self._lock:
             while self.current_replicas() < n:
-                node = self.orch._pick_free_node()
+                # scale-out placement goes through the scheduler's unified
+                # PlacementPolicy: warm program-cache affinity + failure-
+                # domain anti-affinity against the service's live replicas
+                node = self.orch.place_replica(self.base_cid)
                 if node is None:
                     break               # cluster full: partial convergence
                 new_cid = self.orch.scale_horizontal(self.base_cid, node)

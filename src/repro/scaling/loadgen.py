@@ -103,7 +103,11 @@ class ClosedLoopGen:
 
     The serving loop owns the clock: call ``initial()`` once, then
     ``on_complete(req, now)`` for each finished request to get the client's
-    next one (or None past the horizon).
+    next one (or None past the horizon).  ``tokens_range=(lo, hi)``
+    additionally draws a ragged generation length per request (uniform
+    ints), matching the open-loop generator's engine-served mode — so
+    closed-loop think-time scenarios can drive ``engine_service_model``
+    service times too.
     """
 
     n_clients: int = 4
@@ -111,17 +115,26 @@ class ClosedLoopGen:
     mean_service_s: float = 0.2
     horizon_s: float = 60.0
     seed: int = 0
+    tokens_range: Optional[tuple] = None
     _rng: np.random.Generator = field(init=False, repr=False)
     _issued: int = field(init=False, default=0)
 
     def __post_init__(self):
         self._rng = np.random.Generator(np.random.Philox(self.seed))
 
+    @property
+    def issued(self) -> int:
+        """Requests handed out so far (conservation checks)."""
+        return self._issued
+
     def _make(self, t: float, client: int) -> Request:
         r = Request(rid=f"creq-{self._issued:06d}", arrival_t=t,
                     service_s=float(
                         self._rng.exponential(self.mean_service_s)),
-                    client=client)
+                    client=client,
+                    n_tokens=(None if self.tokens_range is None
+                              else int(self._rng.integers(
+                                  *self.tokens_range))))
         self._issued += 1
         return r
 

@@ -242,6 +242,16 @@ class MetricsRegistry:
                 self._remember(key, name, labels)
             return self._series[key]
 
+    def drop_series(self, name: str, **labels) -> None:
+        """Remove one time series (e.g. a finished task's progress
+        history) so per-entity series don't accumulate forever."""
+        key = metric_key(name, labels)
+        with self._lock:
+            self._series.pop(key, None)
+            if (key not in self._counters and key not in self._gauges
+                    and key not in self._histograms):
+                self._meta.pop(key, None)
+
     def gauge_values(self, name: str, **labels) -> Dict[str, float]:
         """All gauges of one metric family whose labels contain ``labels``
         — e.g. every replica's ``kv_pages_in_use_ratio`` for a service, so

@@ -99,6 +99,7 @@ M_TBT = "request_tbt_seconds"
 M_E2E = "request_latency_seconds"
 M_TOKENS = "engine_tokens_total"
 M_ITERS = "engine_iterations_total"
+M_SPEC_K = "spec_k"                 # live speculative lookahead per engine
 
 
 @dataclass(frozen=True)
@@ -112,11 +113,26 @@ class SpecConfig:
     argmax, guaranteeing rejection at every position — the forced-reject
     floor (1 committed token per iteration, like plain decode).  Committed
     token streams are bit-exact vs plain greedy decode for *any* draft.
+
+    ``dynamic_k=True`` adapts the live lookahead between ``k_min`` and
+    ``k`` from the engine's acceptance signal (the same accepted/offered
+    ratio the ``spec_accept_rate`` gauge publishes): every
+    ``adapt_window`` offered drafts the window rate is read — below
+    ``shrink_below`` the lookahead shrinks one step (rejected verify work
+    stops burning iterations); at/above ``grow_above`` for two consecutive
+    windows it regrows one step.  Draft/verify programs are compiled per
+    ``k`` value up front, so switching depth never recompiles mid-serve,
+    and adaptation only changes throughput — never tokens.
     """
-    k: int = 2                          # lookahead tokens per iteration
+    k: int = 2                          # max lookahead tokens per iteration
     draft_arch: Optional[str] = None    # None -> target arch
     draft_seed: Optional[int] = None    # None -> engine seed
     draft_mode: str = "greedy"          # "greedy" | "antigreedy"
+    dynamic_k: bool = False             # adapt live k from acceptance
+    k_min: int = 1                      # floor for dynamic shrink
+    adapt_window: int = 32              # offered drafts per adaptation step
+    shrink_below: float = 0.4           # window accept rate -> shrink
+    grow_above: float = 0.8             # sustained window rate -> regrow
 
 
 @dataclass
@@ -198,8 +214,22 @@ class ContinuousBatchingEngine:
                 raise ValueError("spec.k must be >= 1")
             if spec.draft_mode not in ("greedy", "antigreedy"):
                 raise ValueError(f"unknown draft_mode {spec.draft_mode!r}")
+            if spec.dynamic_k and not 1 <= spec.k_min <= spec.k:
+                raise ValueError(
+                    f"dynamic k needs 1 <= k_min <= k, got "
+                    f"k_min={spec.k_min} k={spec.k}")
         self.spec = spec
+        # spec_k is the provisioning maximum (capacity, scrub width); the
+        # *live* lookahead spec_k_now moves in spec_ks under dynamic_k
         self.spec_k = spec.k if spec is not None else 0
+        self.spec_k_now = self.spec_k
+        if spec is not None and spec.dynamic_k:
+            self.spec_ks = tuple(range(spec.k_min, spec.k + 1))
+        else:
+            self.spec_ks = (self.spec_k,) if spec is not None else ()
+        self._adapt_offered = 0
+        self._adapt_accepted = 0
+        self._grow_streak = 0
         self.auto_compact_frag = auto_compact_frag
         self.auto_compact_min_pages = auto_compact_min_pages
         if prompt_buckets and prompt_len > max(prompt_buckets):
@@ -290,6 +320,9 @@ class ContinuousBatchingEngine:
             if spec is not None:
                 self._g_spec = self.registry.gauge(
                     M_SPEC_ACCEPT_RATE, service=service, engine=engine_id)
+                self._g_spec_k = self.registry.gauge(
+                    M_SPEC_K, service=service, engine=engine_id)
+                self._g_spec_k.set(self.spec_k_now)
 
         self.pending: deque = deque()
         self._free: List[int] = list(range(slots))
@@ -466,8 +499,11 @@ class ContinuousBatchingEngine:
             if self.spec is not None:
                 cl.clCreateBuffer("draft_params", self._draft_params_abs)
                 cl.clCreateBuffer("draft_caches", self._draft_caches_abs)
-                cl.clCreateBuffer("draft_toks", self._draft_toks_abs)
-                cl.clCreateBuffer("verify_toks", self._verify_toks_abs)
+                for v in self.spec_ks:
+                    cl.clCreateBuffer(f"draft_toks_k{v}",
+                                      self._draft_toks_abs[v])
+                    cl.clCreateBuffer(f"verify_toks_k{v}",
+                                      self._verify_toks_abs[v])
                 for P, (_, dpf_cache_abs) in self._draft_pf_abs.items():
                     cl.clCreateBuffer(f"pf_draft_cache_{P}", dpf_cache_abs)
                 cl.clEnqueueKernel("init_draft_params", (),
@@ -515,65 +551,77 @@ class ContinuousBatchingEngine:
         dcaches_abs = jax.tree.map(
             lambda l: jax.ShapeDtypeStruct((B,) + l.shape, l.dtype),
             lane_abs)
-        dtoks_abs = jax.ShapeDtypeStruct((B, k), jnp.int32)
-        vtoks_abs = jax.ShapeDtypeStruct((B, k + 1), jnp.int32)
         self._draft_params_abs = dparams_abs
         self._draft_caches_abs = dcaches_abs
-        self._draft_toks_abs = dtoks_abs
-        self._verify_toks_abs = vtoks_abs
+        # one draft/verify program pair per allowed lookahead depth: a
+        # dynamic-k engine switches between precompiled depths (bitstream
+        # library), never recompiling mid-serve
+        self._draft_toks_abs = {
+            v: jax.ShapeDtypeStruct((B, v), jnp.int32)
+            for v in self.spec_ks}
+        self._verify_toks_abs = {
+            v: jax.ShapeDtypeStruct((B, v + 1), jnp.int32)
+            for v in self.spec_ks}
         self._draft_pf_abs = dpf_abs
 
         def init_draft():
             return init_caches_from_specs(dcaches_abs)
 
-        def draft_lookahead(dparams, toks, pos, dcaches):
-            # k+1 steps for k offered drafts: the extra step feeds the last
-            # draft token back so its KV lands in the draft cache — under
-            # full acceptance the commit advances k+1 positions, and
-            # without it the draft state would grow one hole per iteration
-            # (degrading acceptance, never correctness)
-            def lane(tok, p, cache):
-                cur, outs = tok, []
-                for i in range(k + 1):
-                    logits, cache = dbundle.decode_fn(
-                        dparams, cur, p + jnp.int32(i), cache)
-                    cur = argfn(logits, -1).astype(jnp.int32)
-                    if i < k:
-                        outs.append(cur)
-                return jnp.concatenate(outs), cache
+        def make_draft_lookahead(v):
+            def draft_lookahead(dparams, toks, pos, dcaches):
+                # v+1 steps for v offered drafts: the extra step feeds the
+                # last draft token back so its KV lands in the draft cache
+                # — under full acceptance the commit advances v+1
+                # positions, and without it the draft state would grow one
+                # hole per iteration (degrading acceptance, never
+                # correctness)
+                def lane(tok, p, cache):
+                    cur, outs = tok, []
+                    for i in range(v + 1):
+                        logits, cache = dbundle.decode_fn(
+                            dparams, cur, p + jnp.int32(i), cache)
+                        cur = argfn(logits, -1).astype(jnp.int32)
+                        if i < v:
+                            outs.append(cur)
+                    return jnp.concatenate(outs), cache
 
-            return jax.vmap(lane)(toks, pos, dcaches)
+                return jax.vmap(lane)(toks, pos, dcaches)
+            return draft_lookahead
 
-        # pages one k+1-token write window can span
-        n_span = k // ps + 2
+        def make_verify_step(v):
+            # pages one v+1-token write window can span
+            n_span = v // ps + 2
 
-        def verify_step(params, toks, d_toks, pos, bt, pool):
-            def lane(tok, drafts, p, bt_row):
-                cache = gather_lane_cache(pool, bt_row, token_axes,
-                                          page_size=ps)
-                cur, outs = tok, []
-                for i in range(k + 1):
-                    logits, cache = bundle.decode_fn(
-                        params, cur, p + jnp.int32(i), cache)
-                    outs.append(jnp.argmax(logits, -1).astype(jnp.int32))
-                    if i < k:
-                        cur = drafts[i][None]
-                active = bt_row[0] >= 0
-                lp0 = (p % (max_blocks * ps)) // ps
-                pages, phys = [], []
+            def verify_step(params, toks, d_toks, pos, bt, pool):
+                def lane(tok, drafts, p, bt_row):
+                    cache = gather_lane_cache(pool, bt_row, token_axes,
+                                              page_size=ps)
+                    cur, outs = tok, []
+                    for i in range(v + 1):
+                        logits, cache = bundle.decode_fn(
+                            params, cur, p + jnp.int32(i), cache)
+                        outs.append(jnp.argmax(logits, -1).astype(jnp.int32))
+                        if i < v:
+                            cur = drafts[i][None]
+                    active = bt_row[0] >= 0
+                    lp0 = (p % (max_blocks * ps)) // ps
+                    pages, phys = [], []
+                    for j in range(n_span):
+                        lp = jnp.minimum(lp0 + j, jnp.int32(max_blocks - 1))
+                        pages.append(extract_written_page(
+                            cache, lp, token_axes, page_size=ps))
+                        ok = active & (lp0 + j < max_blocks) \
+                            & (bt_row[lp] >= 0)
+                        phys.append(jnp.where(ok, bt_row[lp], jnp.int32(NP)))
+                    return jnp.concatenate(outs), tuple(pages), \
+                        jnp.stack(phys)
+
+                outs, pages, phys = jax.vmap(lane)(toks, d_toks, pos, bt)
+                # per-lane pages are disjoint (inactive/unmapped dropped)
                 for j in range(n_span):
-                    lp = jnp.minimum(lp0 + j, jnp.int32(max_blocks - 1))
-                    pages.append(extract_written_page(
-                        cache, lp, token_axes, page_size=ps))
-                    ok = active & (lp0 + j < max_blocks) & (bt_row[lp] >= 0)
-                    phys.append(jnp.where(ok, bt_row[lp], jnp.int32(NP)))
-                return jnp.concatenate(outs), tuple(pages), jnp.stack(phys)
-
-            outs, pages, phys = jax.vmap(lane)(toks, d_toks, pos, bt)
-            # per-lane pages are disjoint (inactive/unmapped slots dropped)
-            for j in range(n_span):
-                pool = scatter_pages(pool, phys[:, j], pages[j])
-            return outs, pool
+                    pool = scatter_pages(pool, phys[:, j], pages[j])
+                return outs, pool
+            return verify_step
 
         cl = self.cl
         self._register(cl, "init_draft_params", init_draft_params, (0,))
@@ -606,13 +654,15 @@ class ContinuousBatchingEngine:
             self._register(cl, f"admit_draft_{P}", admit_draft,
                            (dcaches_abs, dpf_cache_abs, jnp.int32(0)),
                            donate_argnums=(0,))
-        self._register(cl, "draft_lookahead", draft_lookahead,
-                       (dparams_abs, toks_abs, pos_abs, dcaches_abs),
-                       donate_argnums=(3,))
-        self._register(cl, "verify_step", verify_step,
-                       (params_abs, toks_abs, dtoks_abs, pos_abs, bt_abs,
-                        pool_abs),
-                       donate_argnums=(5,))
+        for v in self.spec_ks:
+            self._register(cl, f"draft_lookahead_k{v}",
+                           make_draft_lookahead(v),
+                           (dparams_abs, toks_abs, pos_abs, dcaches_abs),
+                           donate_argnums=(3,))
+            self._register(cl, f"verify_step_k{v}", make_verify_step(v),
+                           (params_abs, toks_abs, self._draft_toks_abs[v],
+                            pos_abs, bt_abs, pool_abs),
+                           donate_argnums=(5,))
 
     # -- reserved (worst-case stripe) layout -----------------------------
     def _setup_reserved(self, restore: bool) -> None:
@@ -869,7 +919,8 @@ class ContinuousBatchingEngine:
             if st is None:
                 continue                # preempted by an earlier append
             span_tok = (1 if self.spec is None
-                        else min(self.spec_k + 1, st.limit - len(st.tokens)))
+                        else min(self.spec_k_now + 1,
+                                 st.limit - len(st.tokens)))
             lp_last = (st.pos + span_tok - 1) // self.page_size
             dead = False
             for lp in range(len(st.blocks), lp_last + 1):
@@ -960,15 +1011,15 @@ class ContinuousBatchingEngine:
 
     # -- one speculative iteration: draft k, verify k+1, commit/rollback -
     def _spec_iteration(self) -> int:
-        cl, k, ps = self.cl, self.spec_k, self.page_size
+        cl, k, ps = self.cl, self.spec_k_now, self.page_size
         self._flush_block_table()
         # host-authoritative lane state (acceptance is decided here)
         cl.write_buffer("toks", self._toks_host.copy())
         cl.write_buffer("pos", self._pos_host.copy())
         cl.clEnqueueKernel(
-            "draft_lookahead",
+            f"draft_lookahead_k{k}",
             ("draft_params", "toks", "pos", "draft_caches"),
-            ("draft_toks", "draft_caches"), donate=True)
+            (f"draft_toks_k{k}", "draft_caches"), donate=True)
         # every page the verify can write is dirty — including pages whose
         # acceptance is later partial; evict must serialize them whole
         dirty = set()
@@ -979,14 +1030,14 @@ class ContinuousBatchingEngine:
                 if pid >= 0:
                     dirty.add(pid)
         cl.clEnqueueKernel(
-            "verify_step",
-            ("params", "toks", "draft_toks", "pos", "block_table",
+            f"verify_step_k{k}",
+            ("params", "toks", f"draft_toks_k{k}", "pos", "block_table",
              "kv_pool"),
-            ("verify_toks", "kv_pool"), donate=True,
+            (f"verify_toks_k{k}", "kv_pool"), donate=True,
             dirty_pages={"kv_pool": tuple(sorted(dirty))})
         # token delivery doubles as the iteration's sync point
-        target = np.asarray(cl.read_buffer("verify_toks"))
-        drafts = np.asarray(cl.read_buffer("draft_toks"))
+        target = np.asarray(cl.read_buffer(f"verify_toks_k{k}"))
+        drafts = np.asarray(cl.read_buffer(f"draft_toks_k{k}"))
         now = self._clock()
         decoded = 0
         self.spec_iterations += 1
@@ -1000,6 +1051,8 @@ class ContinuousBatchingEngine:
             offered = min(k, remaining - 1)
             self.spec_offered_drafts += offered
             self.spec_accepted_drafts += min(m, offered)
+            self._adapt_offered += offered
+            self._adapt_accepted += min(m, offered)
             self.spec_lane_iterations += 1
             self.spec_committed += ncommit
             self._commit_tokens(st, g[:ncommit], now)
@@ -1025,7 +1078,41 @@ class ContinuousBatchingEngine:
         if self._publish_gauges and self.spec_offered_drafts:
             self._g_spec.set(self.spec_accepted_drafts
                              / self.spec_offered_drafts)
+        self._adapt_spec_k()
         return decoded
+
+    def _adapt_spec_k(self) -> None:
+        """Dynamic lookahead: every ``adapt_window`` offered drafts, read
+        the window's acceptance (the delta the ``spec_accept_rate`` gauge
+        moved by) and resize the live ``k`` — shrink one step below
+        ``shrink_below`` so rejected verify work stops burning iterations,
+        regrow one step after two consecutive windows at/above
+        ``grow_above``.  Only throughput changes; committed tokens are
+        bit-exact at every depth."""
+        spec = self.spec
+        if spec is None or not spec.dynamic_k:
+            return
+        if self._adapt_offered < spec.adapt_window:
+            return
+        rate = self._adapt_accepted / self._adapt_offered
+        self._adapt_offered = self._adapt_accepted = 0
+        prev = self.spec_k_now
+        if rate < spec.shrink_below:
+            self._grow_streak = 0
+            self.spec_k_now = max(spec.k_min, self.spec_k_now - 1)
+        elif rate >= spec.grow_above:
+            self._grow_streak += 1
+            if self._grow_streak >= 2:
+                self._grow_streak = 0
+                self.spec_k_now = min(self.spec_k, self.spec_k_now + 1)
+        else:
+            self._grow_streak = 0
+        if self.spec_k_now != prev:
+            if self._publish_gauges:
+                self._g_spec_k.set(self.spec_k_now)
+            self.registry.record_event(
+                "engine_spec_k_adapt", engine=self.engine_id,
+                k_from=prev, k_to=self.spec_k_now, window_rate=rate)
 
     def spec_stats(self) -> dict:
         """Speculation throughput accounting (zeros when spec is off)."""
@@ -1033,6 +1120,7 @@ class ContinuousBatchingEngine:
         offered = max(self.spec_offered_drafts, 1)
         return {
             "k": self.spec_k,
+            "k_now": self.spec_k_now,
             "iterations": self.spec_iterations,
             "lane_iterations": self.spec_lane_iterations,
             "committed_tokens": self.spec_committed,
@@ -1131,6 +1219,7 @@ class ContinuousBatchingEngine:
                 self._g_kv_free.set(0.0)
                 if self.spec is not None:
                     self._g_spec.set(float("nan"))
+                    self._g_spec_k.set(float("nan"))   # same tombstone rule
         return reqs
 
     def run_until_drained(self, max_iterations: int = 100000) -> None:

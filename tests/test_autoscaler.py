@@ -145,7 +145,7 @@ class _FakeOrch:
         self._n = 0
         self.removed = []
 
-    def _pick_free_node(self):
+    def place_replica(self, cid):
         return f"node{self._free}" if self._free > 0 else None
 
     def scale_horizontal(self, cid, node):
@@ -217,6 +217,22 @@ def test_serving_simulator_emits_canonical_schema():
     # the signal reader the orchestrator uses works against the sim registry
     s = signals_from_registry(sim.metrics, "svc")
     assert s.replicas >= 1
+
+
+def test_closed_loop_gen_tokens_and_conservation():
+    """Closed-loop think-time mode: ragged generation lengths ride along
+    (engine-served runs), and the simulator completes exactly the requests
+    the generator issued — the defining closed-loop property."""
+    from repro.scaling import ClosedLoopGen
+
+    gen = ClosedLoopGen(n_clients=6, think_time_s=0.2, mean_service_s=0.1,
+                        horizon_s=20.0, seed=3, tokens_range=(4, 9))
+    init = gen.initial()
+    assert len(init) == 6
+    assert all(4 <= r.n_tokens < 9 for r in init)
+    rep = ServingSimulator(init, closed_gen=gen,
+                           initial_replicas=2).run()
+    assert rep["completed"] == gen.issued > 6
 
 
 # ---------------------------------------------------------------------------

@@ -166,6 +166,47 @@ def test_accept_rate_gauge_published_and_tombstoned_on_kill():
     assert all(math.isnan(v) for lbl, v in vals if "engine" in lbl)
 
 
+def test_dynamic_k_shrinks_on_rejection(plain_ref):
+    """A forced-reject draft drives the windowed acceptance to zero, so a
+    dynamic engine shrinks its lookahead to ``k_min`` (rejected verify work
+    stops burning iterations) — with a committed stream still bit-exact vs
+    plain greedy decode."""
+    got, eng = run_transcript(
+        factory(SpecConfig(k=2, draft_mode="antigreedy", dynamic_k=True,
+                           adapt_window=4)),
+        requests())
+    assert_transcripts_equal(got, plain_ref, context="dynamic-shrink")
+    assert eng.spec_k_now == 1
+    adapts = [e for e in eng.registry.flight_record()["events"]
+              if e[1] == "engine_spec_k_adapt"]
+    assert adapts and adapts[-1][2]["k_to"] == 1
+    # the live-k gauge tracks the adaptation
+    from repro.serve.engine import M_SPEC_K
+    vals = {lbl["engine"]: v for lbl, v in
+            eng.registry.labeled_gauge_values(M_SPEC_K, service="svc")
+            if "engine" in lbl}
+    assert vals == {"engine0": 1.0}
+
+
+def test_dynamic_k_regrows_on_sustained_acceptance():
+    """Starting from a shrunk lookahead, a forced-accept (self-draft)
+    workload regrows k to the configured maximum after two consecutive
+    high-acceptance windows — and the whole adaptive run stays bit-exact
+    vs the plain (non-speculative) engine."""
+    def shrunk_factory():
+        mon, eng = factory(SpecConfig(k=2, dynamic_k=True,
+                                      adapt_window=4))()
+        eng.spec_k_now = 1          # as if a bad phase shrank the lookahead
+        return mon, eng
+
+    # longer generations so enough windows elapse for the regrow streak
+    reqs = requests(spec_list=[8, 8, 7, 8])
+    eng, _ = check_equivalence(shrunk_factory, factory(), reqs,
+                               context="dynamic-regrow")
+    assert eng.spec_k_now == 2
+    assert eng.spec_stats()["k_now"] == 2
+
+
 def test_spec_requires_paged_mode():
     with pytest.raises(ValueError, match="paged"):
         ContinuousBatchingEngine(
