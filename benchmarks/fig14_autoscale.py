@@ -18,11 +18,15 @@ the autoscaler depends on.
 
 from __future__ import annotations
 
+import sys
+import time
+
 import numpy as np
 
 from benchmarks.common import emit
 from repro.core import FunkyCL, Monitor, SliceAllocator, TaskImage, \
     make_cluster
+from repro.obs import Tracer, export_chrome_trace
 from repro.core.simulator import (ServingParams, ServingSimulator,
                                   engine_service_model)
 from repro.scaling import (Autoscaler, ClosedLoopGen, LatencySLOPolicy,
@@ -185,18 +189,27 @@ LIVE_IMAGE = TaskImage(name="svc", kind="engine-serve", arch=ARCH,
                        total_steps=10 ** 9, max_new_tokens=TOKENS_RANGE[1])
 
 
-def live_run(ttft_s: float, tbt_s: float, duration_s: float = 9.0):
+def live_run(ttft_s: float, tbt_s: float, duration_s: float = 9.0,
+             trace_out: str = None):
     """Drive a compressed burst against a live cluster on the per-request
     path: engine replicas pull from the service router and terminate
     requests on-device, and the orchestrator's autoscaler thread scales
     the service through the node agents (checkpoint-clone replicate onto a
     node with free vSlices, kill+delete on scale-in).  SLO attainment is
-    computed from engine-reported end-to-end latencies."""
+    computed from engine-reported end-to-end latencies.
+
+    A tracer rides along: orchestration actions (place / replicate /
+    scale-in drain / failure restore) land in one ``cluster`` trace, so
+    ``--trace-out`` yields a Perfetto-loadable timeline of the control
+    loop next to the per-request spans."""
+    tracer = Tracer(clock=time.perf_counter, capacity=2048,
+                    sample_rate=1.0, keep_slowest=16)
     cluster = make_cluster(num_nodes=4, slices_per_node=1,
-                           images={"svc": LIVE_IMAGE})
+                           images={"svc": LIVE_IMAGE}, tracer=tracer)
     orch = cluster.orchestrator
     router = reset_router("svc")
     router.registry = orch.metrics
+    router.tracer = tracer
 
     cid = orch.submit("svc", priority=5)
     orch.start(tick_interval=0.02)
@@ -230,14 +243,21 @@ def live_run(ttft_s: float, tbt_s: float, duration_s: float = 9.0):
          f"slo={res.attainment:.3f} served={res.served} "
          f"max_rep={res.max_replicas} scaled_out={scaled_out} "
          f"scaled_in={scaled_in}")
+    cluster_tr = tracer.find("cluster")
+    assert cluster_tr is not None and len(cluster_tr.spans()) > 1, \
+        "orchestrator emitted no action spans"
+    if trace_out:
+        export_chrome_trace(tracer, trace_out)
+        emit("fig14/trace", 0.0,
+             f"path={trace_out} cluster_spans={len(cluster_tr.spans())}")
     return orch.metrics.snapshot(), scaled_out
 
 
-def main():
+def main(trace_out: str = None):
     ttft_s, tbt_s = engine_calibration()
     results = sim_sweep(ttft_s, tbt_s)
     closed_loop_sweep(ttft_s, tbt_s)
-    live_snap, scaled_out = live_run(ttft_s, tbt_s)
+    live_snap, scaled_out = live_run(ttft_s, tbt_s, trace_out=trace_out)
 
     # schema parity: the signals the autoscaler reads exist, with identical
     # names, in both planes' snapshots
@@ -261,4 +281,6 @@ def main():
 
 
 if __name__ == "__main__":
-    main()
+    argv = sys.argv[1:]
+    main(trace_out=(argv[argv.index("--trace-out") + 1]
+                    if "--trace-out" in argv else None))

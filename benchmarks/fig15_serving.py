@@ -36,7 +36,14 @@ requests than the reservation baseline at the same pool size (the §3.4
 virtualization payoff the ROADMAP names) while completing the identical
 workload.
 
-    PYTHONPATH=src python -m benchmarks.fig15_serving [--smoke]
+The plain engine arm runs with a ``repro.obs.Tracer`` attached: the run
+also reports the host-vs-device µs/token split (``fig15/host_split``)
+and, with ``--trace-out PATH``, exports a Perfetto-loadable Chrome-trace
+JSON of every request's router -> engine -> monitor span tree
+(``tools/trace_dump.py`` summarizes / validates it).
+
+    PYTHONPATH=src python -m benchmarks.fig15_serving [--smoke] \
+        [--trace-out trace.json]
 """
 
 from __future__ import annotations
@@ -52,7 +59,9 @@ from benchmarks.common import emit
 from repro.configs import get_arch
 from repro.core import FunkyCL, Monitor, SliceAllocator
 from repro.models import build_model
+from repro.obs import Tracer, export_chrome_trace
 from repro.scaling.metrics import MetricsRegistry
+from repro.scaling.serving import RequestRouter
 from repro.serve import generate
 from repro.serve.engine import (M_TBT, M_TTFT, ContinuousBatchingEngine,
                                 ServeRequest, SpecConfig)
@@ -109,15 +118,17 @@ def run_naive(bundle, params, workload, prompt_len):
 
 
 def run_engine(workload, prompt_len, slots, max_new_cap, *, paged=True,
-               pool_pages=None, spec=None, tag="fig15-engine"):
+               pool_pages=None, spec=None, tag="fig15-engine",
+               tracer=None):
     """Continuous-batching server through a real monitor; returns the
     engine (peak_active/preemptions/completed), the registry, and the
-    busy-window seconds."""
+    busy-window seconds.  Requests flow router -> engine.pump so a tracer
+    (if given) sees the full router.queue -> engine -> monitor chain."""
     # perf_counter clock so request arrival_t and engine timestamps share
     # one monotonic timebase
     reg = MetricsRegistry(clock=time.perf_counter)
     alloc = SliceAllocator("bench0", 1)
-    mon = Monitor(tag, alloc, telemetry=reg)
+    mon = Monitor(tag, alloc, telemetry=reg, tracer=tracer)
     eng = ContinuousBatchingEngine(ARCH, FunkyCL(mon), slots=slots,
                                    prompt_len=prompt_len,
                                    max_new_tokens=max_new_cap, registry=reg,
@@ -139,21 +150,23 @@ def run_engine(workload, prompt_len, slots, max_new_cap, *, paged=True,
     eng.spec_offered_drafts = eng.spec_accepted_drafts = 0
     gc.collect()
     gc.disable()        # no collector pauses inside the latency window
+    # the router is the service frontend: arrivals land there and the
+    # engine pulls via pump(), same as the fig14 replica drive loop
+    router = RequestRouter("svc", registry=reg, kv_aware=False,
+                           tracer=tracer)
     try:
         t0 = time.perf_counter()
         pending = list(workload)
-        while pending or not eng.idle:
+        while pending or not eng.idle or router.outstanding():
             now = time.perf_counter() - t0
             while pending and pending[0]["arrival_t"] <= now:
                 w = pending.pop(0)
-                eng.submit(ServeRequest(
+                router.submit(ServeRequest(
                     rid=w["rid"], prompt=w["prompt"],
                     max_new_tokens=w["n_tokens"],
                     arrival_t=t0 + w["arrival_t"]))   # registry clock basis
-            if eng.idle:
+            if not eng.pump(router):
                 time.sleep(0.001)
-                continue
-            eng.step()
         busy_s = (time.perf_counter() - t0) - workload[0]["arrival_t"]
     finally:
         gc.enable()
@@ -168,7 +181,7 @@ def p99(values):
     return float(np.percentile(np.asarray(values), 99))
 
 
-def main(smoke: bool = False):
+def main(smoke: bool = False, trace_out: str = None):
     # max_new_cap is the *server-side* per-request cap the reservation
     # baseline must provision for; actual generations (tokens_range) are
     # ragged and stop well short of it — the gap is what paging reclaims
@@ -195,7 +208,13 @@ def main(smoke: bool = False):
          f"p99_tbt={naive_p99_tbt * 1e3:.1f}ms "
          f"p99_ttft={p99([r['ttft'] for r in naive]) * 1e3:.1f}ms")
 
-    eng, reg, eng_busy = run_engine(workload, prompt_len, slots, max_new_cap)
+    # the plain engine arm runs traced: every request becomes one span
+    # tree (router.queue -> engine.admit -> monitor phases -> decode) and
+    # every iteration an engine.step trace with EXECUTE children
+    tracer = Tracer(clock=time.perf_counter, capacity=4096,
+                    sample_rate=1.0, keep_slowest=16)
+    eng, reg, eng_busy = run_engine(workload, prompt_len, slots,
+                                    max_new_cap, tracer=tracer)
     assert len(eng.completed) == n_req, (len(eng.completed), n_req)
     eng_tps = total_tokens / eng_busy
     tbts = [t for rec in eng.completed.values() for t in rec.tbts]
@@ -215,6 +234,27 @@ def main(smoke: bool = False):
             >= total_tokens - n_req)
     assert (snap["histograms"]["request_latency_seconds{service=svc}"]
             ["count"] == n_req + 1)
+
+    # ---------------------------------------------------------------
+    # Host-overhead split on the paged decode path: where does a token's
+    # wall time go?  device_s is attributed per-EXECUTE by the monitor
+    # (compiled-run + transfer + sync blocking); the remainder is host
+    # orchestration (batch assembly, page tables, python glue).
+    # ---------------------------------------------------------------
+    split = eng.host_device_split()
+    assert split["tokens"] >= total_tokens, (split["tokens"], total_tokens)
+    assert split["device_us_per_token"] > 0.0, split
+    emit("fig15/host_split", split["host_us_per_token"],
+         f"device_us_per_token={split['device_us_per_token']:.1f} "
+         f"host_us_per_token={split['host_us_per_token']:.1f} "
+         f"queue_wait_us={split['queue_wait_us_mean']:.1f} "
+         f"tokens={split['tokens']} execs={split['execs']}")
+
+    if trace_out:
+        export_chrome_trace(tracer, trace_out)
+        n_traces = len(tracer.traces())
+        emit("fig15/trace", 0.0,
+             f"path={trace_out} traces={n_traces}")
 
     speedup = eng_tps / naive_tps
     emit("fig15/speedup", 0.0,
@@ -295,4 +335,7 @@ def main(smoke: bool = False):
 
 
 if __name__ == "__main__":
-    main(smoke="--smoke" in sys.argv)
+    argv = sys.argv[1:]
+    out = (argv[argv.index("--trace-out") + 1]
+           if "--trace-out" in argv else None)
+    main(smoke="--smoke" in argv, trace_out=out)

@@ -60,7 +60,8 @@ def make_cluster(num_nodes: int = 3, slices_per_node: int = 1,
                  ckpt_root: Optional[str] = None,
                  metrics: Optional[MetricsRegistry] = None,
                  failure_domains: Optional[int] = None,
-                 straggler_interval: Optional[float] = None) -> Cluster:
+                 straggler_interval: Optional[float] = None,
+                 tracer=None) -> Cluster:
     """``failure_domains=k`` spreads the nodes round-robin over ``k``
     synthetic failure domains (rack/PDU model) for replica anti-affinity;
     the default gives every node its own domain."""
@@ -85,6 +86,7 @@ def make_cluster(num_nodes: int = 3, slices_per_node: int = 1,
                         policy=policy,
                         checkpoint_interval=checkpoint_interval,
                         metrics=metrics,
-                        straggler_interval=straggler_interval)
+                        straggler_interval=straggler_interval,
+                        tracer=tracer)
     return Cluster(nodes=nodes, orchestrator=orch, images=images,
                    ckpt_root=ckpt_root)

@@ -74,11 +74,12 @@ class FunkyCL:
 
     def clEnqueueMigrateMemObjects(self, buff_id: str,
                                    host_value: Any = None,
-                                   to_device: bool = True) -> Completion:
+                                   to_device: bool = True,
+                                   span: Any = None) -> Completion:
         req = FunkyRequest(
             kind=RequestKind.TRANSFER, buff_id=buff_id,
             direction=Direction.H2D if to_device else Direction.D2H,
-            host_value=host_value)
+            host_value=host_value, span=span)
         return self._track(self._monitor.submit(req))
 
     # ------------------------------------------------------------------
@@ -88,7 +89,8 @@ class FunkyCL:
                         out_buffs: Sequence[str],
                         const_args: tuple = (),
                         donate: bool = False,
-                        dirty_pages: Optional[dict] = None) -> Completion:
+                        dirty_pages: Optional[dict] = None,
+                        span: Any = None) -> Completion:
         """Async kernel launch; kernel args travel with the EXECUTE request
         (clSetKernelArg coalescing, paper §4).  ``donate=True`` donates
         inputs that are also outputs (in-place update, no device copy) —
@@ -100,7 +102,7 @@ class FunkyCL:
             kind=RequestKind.EXECUTE, program_id=program_id,
             in_buffs=tuple(in_buffs), out_buffs=tuple(out_buffs),
             const_args=tuple(const_args), donate=donate,
-            dirty_pages=dirty_pages)
+            dirty_pages=dirty_pages, span=span)
         return self._track(self._monitor.submit(req))
 
     def clFinish(self) -> None:
@@ -119,13 +121,14 @@ class FunkyCL:
     enqueue_kernel = clEnqueueKernel
     finish = clFinish
 
-    def write_buffer(self, buff_id: str, host_value: Any) -> Completion:
+    def write_buffer(self, buff_id: str, host_value: Any,
+                     span: Any = None) -> Completion:
         return self.clEnqueueMigrateMemObjects(buff_id, host_value,
-                                               to_device=True)
+                                               to_device=True, span=span)
 
-    def read_buffer(self, buff_id: str) -> Any:
+    def read_buffer(self, buff_id: str, span: Any = None) -> Any:
         return self.clEnqueueMigrateMemObjects(
-            buff_id, to_device=False).wait()
+            buff_id, to_device=False, span=span).wait()
 
     def _track(self, c: Completion) -> Completion:
         self._pending.append(c)

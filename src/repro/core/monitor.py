@@ -60,8 +60,12 @@ class MonitorState(enum.Enum):
 class Monitor:
     def __init__(self, task_id: str, allocator: SliceAllocator,
                  programs: Optional[ProgramCache] = None,
-                 telemetry: Optional[MetricsRegistry] = None):
+                 telemetry: Optional[MetricsRegistry] = None,
+                 tracer: Any = None):
         self.task_id = task_id
+        # optional repro.obs.Tracer; guests that submit requests carrying a
+        # ``span`` get queue-wait/device/sync child spans hung off it
+        self.tracer = tracer
         self.allocator = allocator
         self.programs = programs if programs is not None else ProgramCache()
         self.buffers = BufferTable()
@@ -89,6 +93,12 @@ class Monitor:
             for k in RequestKind if k is not RequestKind.SHUTDOWN}
         self._tel_sync_wait = self.telemetry.histogram(
             "monitor_sync_wait_seconds")
+        self._tel_queue_wait = self.telemetry.histogram(
+            "monitor_queue_wait_seconds")
+        self._tel_h2d_bytes = self.telemetry.counter(
+            "monitor_transfer_bytes_total", direction="h2d")
+        self._tel_d2h_bytes = self.telemetry.counter(
+            "monitor_transfer_bytes_total", direction="d2h")
         # execute-signature cache (hot path): (program_id, buffer wiring,
         # const shapes) -> (CompiledEntry, donate_argnums, in spec tokens).
         # A hit skips the per-request jax.tree.map over every arg leaf AND
@@ -141,6 +151,8 @@ class Monitor:
     def submit(self, req: FunkyRequest) -> Completion:
         if self.state is not MonitorState.RUNNING:
             raise MonitorError(f"monitor not running (state={self.state})")
+        if req.span is not None:
+            req.enqueue_t = req.span.trace.clock()
         self.request_queue.put(req)
         return req.completion
 
@@ -170,12 +182,31 @@ class Monitor:
                 req.completion.set()
                 return
             t0 = time.perf_counter()
+            # queue wait: from request construction (the guest submits
+            # immediately after) to the worker picking it up
+            qw = max(0.0, t0 - req.completion.submitted_at)
+            req.completion.phases = {"kind": req.kind.value,
+                                     "queue_wait_s": qw}
+            if req.span is not None:
+                tc = req.span.trace.clock()
+                req.span.child("monitor.queue_wait",
+                               t0=req.enqueue_t if req.enqueue_t is not None
+                               else tc).end(tc)
+                req.mon_span = req.span.child(
+                    f"monitor.{req.kind.value.lower()}", t0=tc)
             try:
-                value = self._handle(req)
-                req.completion.set(value)
+                value, error = self._handle(req), None
             except BaseException as e:  # noqa: BLE001 - forwarded to guest
-                req.completion.set(error=e)
+                value, error = None, e
+                if req.mon_span is not None:
+                    req.mon_span.annotate(error=repr(e))
             dt = time.perf_counter() - t0
+            # phases must be complete before set() wakes the guest
+            req.completion.phases["total_s"] = dt
+            if req.mon_span is not None:
+                req.mon_span.end()
+            req.completion.set(value, error=error)
+            self._tel_queue_wait.observe(qw)
             self.metrics[f"n_{req.kind.value}"] += 1
             self.metrics_hist[req.kind.value].append(dt)
             self._tel_count[req.kind.value].inc()
@@ -213,12 +244,31 @@ class Monitor:
         return req.buff_id
 
     def _do_transfer(self, req: FunkyRequest):
+        from repro.core.state import tree_bytes
+
         self._validate_buffs([req.buff_id])
+        # the transfer call blocks on the device: h2d is the copy-in, d2h
+        # blocks until every in-flight program writing the buffer lands
+        # (async JAX dispatch) and then copies out — both count as the
+        # request's device phase
+        t0 = time.perf_counter()
         if req.direction is Direction.H2D:
+            nbytes = tree_bytes(req.host_value)
             dev = jax.device_put(req.host_value)
             self.buffers.on_h2d(req.buff_id, req.host_value, dev)
-            return None
-        return self.buffers.on_d2h(req.buff_id)
+            self._tel_h2d_bytes.inc(nbytes)
+            out = None
+        else:
+            out = self.buffers.on_d2h(req.buff_id)
+            nbytes = tree_bytes(out)
+            self._tel_d2h_bytes.inc(nbytes)
+        device_s = time.perf_counter() - t0
+        req.completion.phases.update(bytes=nbytes, device_s=device_s,
+                                     direction=req.direction.value)
+        if req.mon_span is not None:
+            req.mon_span.annotate(buff=req.buff_id, bytes=nbytes,
+                                  direction=req.direction.value)
+        return out
 
     @staticmethod
     def _const_sig(c) -> tuple:
@@ -230,6 +280,7 @@ class Monitor:
         return (tuple(shape), str(getattr(c, "dtype", "")))
 
     def _do_execute(self, req: FunkyRequest):
+        t_prep0 = time.perf_counter()
         self._validate_buffs(list(req.in_buffs) + list(req.out_buffs))
         if req.program_id not in self.programs:
             raise MonitorError(f"program {req.program_id!r} not registered")
@@ -261,7 +312,24 @@ class Monitor:
                                                  donate_argnums)
         args = tuple(self.buffers.get(i).device_value for i in req.in_buffs)
         args = args + tuple(req.const_args)
+        # device phase: the compiled-program call is the only point this
+        # path touches the accelerator; everything around it is host work
+        t_run0 = time.perf_counter()
+        prep_s = t_run0 - t_prep0
+        sp = req.mon_span
+        if sp is not None:
+            tc = sp.trace.clock()
+            sp.child("execute.sig_lookup", t0=sp.start_t,
+                     hit=hit, program=req.program_id).end(tc)
+            dev_sp = sp.child("execute.device", t0=tc,
+                              program=req.program_id)
         out = entry.compiled(*args)
+        device_s = time.perf_counter() - t_run0
+        if sp is not None:
+            dev_sp.end()
+            sp.annotate(program=req.program_id, sig_hit=hit)
+        req.completion.phases.update(prep_s=prep_s, device_s=device_s,
+                                     sig_hit=hit, program=req.program_id)
         if len(req.out_buffs) == 1:
             outs = (out,)
         else:
@@ -293,10 +361,17 @@ class Monitor:
         # Worker is serial: everything enqueued earlier already dispatched.
         # Block only on buffers written since the last SYNC drained — the
         # rest of the table is already quiescent (Fig 9 sync-wait budget).
+        synced = 0
+        t0 = time.perf_counter()
         for i in self.buffers.take_unsynced():
             b = self.buffers.get(i)
             if b.device_value is not None:
                 jax.block_until_ready(b.device_value)
+                synced += 1
+        req.completion.phases.update(synced_buffers=synced,
+                                     device_s=time.perf_counter() - t0)
+        if req.mon_span is not None:
+            req.mon_span.annotate(synced_buffers=synced)
         return None
 
     # ------------------------------------------------------------------

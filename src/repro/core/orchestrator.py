@@ -52,9 +52,18 @@ class Orchestrator:
                  checkpoint_interval: Optional[float] = None,
                  metrics: Optional[MetricsRegistry] = None,
                  placement: Optional[PlacementPolicy] = None,
-                 straggler_interval: Optional[float] = None):
+                 straggler_interval: Optional[float] = None,
+                 tracer=None):
         self.agents = agents
         self.metrics = metrics if metrics is not None else MetricsRegistry()
+        # orchestration-plane tracing: one long-lived "cluster" trace whose
+        # spans are the control actions (deploy/evict/resume/migrate,
+        # scale-in drains, failure restores, straggler migrations) — an
+        # exported run is a loadable cluster timeline
+        self.tracer = tracer
+        self._cluster_trace = (tracer.start_trace("cluster",
+                                                  trace_id="cluster")
+                               if tracer is not None else None)
         # one placement engine for every decision (scheduling, scale-out,
         # failure recovery, straggler migration) — scored from this
         # orchestrator's enriched ClusterView + the shared registry
@@ -126,15 +135,21 @@ class Orchestrator:
                 st.meta["programs"] = progs
             self._sched_tasks[new_cid] = st
             self.scheduler.run_queue.append(st)
+        sp = self._span("orch.replicate", cid=cid, new_cid=new_cid,
+                        node=target_node)
         try:
             self.agents[target_node].replicate_in(new_cid, cid, src,
                                                   image_ref)
-        except BaseException:
+        except BaseException as e:
             with self._lock:        # roll the reservation back
                 self.scheduler.task_done(new_cid)
                 self._sched_tasks.pop(new_cid, None)
                 self.deployments.pop(new_cid, None)
+            if sp is not None:
+                sp.annotate(outcome="error", error=repr(e)).end()
             raise
+        if sp is not None:
+            sp.end()
         self._log("replicate", cid=cid, new_cid=new_cid, node=target_node)
         return new_cid
 
@@ -155,6 +170,7 @@ class Orchestrator:
         base image's compiled programs) and failure-domain anti-affinity
         against the group's running members.  Returns None when no node has
         a free slice."""
+        sp = self._span("orch.place", cid=cid)
         with self._lock:
             dep = self.deployments[cid]
             gid = self._ensure_group(cid)
@@ -162,8 +178,11 @@ class Orchestrator:
                 tid=f"{cid}::place", priority=dep.priority, group=gid,
                 meta={"programs": self._image_programs.get(dep.image_ref,
                                                            ())})
-            return self.placement.select_node(
+            target = self.placement.select_node(
                 probe, self, {}, running=self.scheduler.run_queue)
+        if sp is not None:
+            sp.annotate(node=target).end()
+        return target
 
     def scale_vertical(self, cid: str, vfpga_num: int):
         node = self._sched_tasks[cid].node_id
@@ -175,15 +194,21 @@ class Orchestrator:
         admissions, let in-flight lanes finish at their request boundary),
         then kill + delete through the agent.  Draining happens outside the
         lock — it blocks for up to ``drain_s``."""
+        sp = self._span("orch.scale_in", cid=cid)
         if drain_s > 0:
             node = self._sched_tasks[cid].node_id
             if node is not None and node in self.agents:
+                dsp = (sp.child("orch.drain", cid=cid, node=node)
+                       if sp is not None else None)
                 try:
                     stats = self.agents[node].drain(cid, timeout_s=drain_s)
                     self._log("drain", cid=cid, node=node, **stats)
                 except Exception as e:  # noqa: BLE001 - node may be gone
                     self._log("drain_error", cid=cid, node=node,
                               error=repr(e))
+                finally:
+                    if dsp is not None:
+                        dsp.end()
         with self._lock:
             st = self._sched_tasks[cid]
             node = st.node_id
@@ -198,6 +223,8 @@ class Orchestrator:
             dep.status = "removed"
             dep.end_time = time.time()
             self._log("scale_in", cid=cid, node=node)
+        if sp is not None:
+            sp.annotate(node=node).end()
 
     # ------------------------------------------------------------------
     # Workload-scaling service: autoscaler reconcile loop (paper §3.5)
@@ -385,6 +412,7 @@ class Orchestrator:
     def _execute(self, a: Action):
         dep = self.deployments.get(a.tid)
         st = self._sched_tasks[a.tid]
+        sp = self._span(f"orch.{a.kind}", cid=a.tid, node=a.node)
         try:
             if a.kind == "deploy":
                 self.agents[a.node].deploy(
@@ -410,10 +438,14 @@ class Orchestrator:
             self.scheduler.task_done(a.tid)
             self.scheduler.submit(st)
             self._log("node_failed_during", action=a.kind, cid=a.tid)
+            if sp is not None:
+                sp.annotate(outcome="node_failed")
         except Exception as e:  # noqa: BLE001 - e.g. NoSliceAvailable race
             from repro.core.monitor import NoSliceAvailable
 
             if not isinstance(e, NoSliceAvailable):
+                if sp is not None:
+                    sp.annotate(outcome="error", error=repr(e)).end()
                 raise
             if a.kind in ("resume", "migrate"):
                 st.state = TaskState.EVICTED      # context survives
@@ -423,6 +455,11 @@ class Orchestrator:
             self.scheduler.task_done(a.tid)
             self.scheduler.submit(st)
             self._log("no_slice_retry", action=a.kind, cid=a.tid)
+            if sp is not None:
+                sp.annotate(outcome="no_slice_retry")
+        finally:
+            if sp is not None:
+                sp.end()
 
     # ------------------------------------------------------------------
     # Background services
@@ -516,11 +553,15 @@ class Orchestrator:
             if not any(self.free_slices(n) > 0 for n in self.nodes()
                        if n != st.node_id):
                 continue
+            ssp = self._span("orch.straggler_migrate", cid=d.cid,
+                             node=st.node_id)
             try:
                 self.agents[st.node_id].evict(d.cid)
             except Exception as e:  # noqa: BLE001 - task may just finish
                 self._log("straggler_evict_error", cid=d.cid,
                           error=repr(e))
+                if ssp is not None:
+                    ssp.annotate(outcome="evict_error").end()
                 continue
             with self._lock:
                 self.scheduler.task_done(d.cid)
@@ -533,6 +574,8 @@ class Orchestrator:
                 self.migration.reset(d.cid)
             self._log("straggler_evicted", cid=d.cid, rate=d.rate,
                       median=d.median)
+            if ssp is not None:
+                ssp.annotate(outcome="evicted", rate=d.rate).end()
             acted.append(d.cid)
         return acted
 
@@ -541,6 +584,7 @@ class Orchestrator:
     # ------------------------------------------------------------------
     def handle_node_failure(self, node_id: str):
         """Restore tasks of a failed node from their latest snapshots."""
+        fsp = self._span("orch.node_failure", node=node_id)
         self.agents[node_id].fail()
         with self._lock:
             victims = [t for t in list(self.scheduler.run_queue)
@@ -558,18 +602,26 @@ class Orchestrator:
                                   meta=dict(st.meta))
                 target = self.placement.select_node(
                     probe, self, {}, running=self.scheduler.run_queue)
+                rsp = (fsp.child("orch.restore", cid=st.tid)
+                       if fsp is not None else None)
                 if snap and target:
                     self.agents[target].restore(st.tid, snap, dep.image_ref)
                     st.state = TaskState.RUNNING
                     st.node_id = target
                     self.scheduler.run_queue.append(st)
                     self._log("restored", cid=st.tid, node=target, snap=snap)
+                    if rsp is not None:
+                        rsp.annotate(node=target, outcome="restored").end()
                 else:
                     # no snapshot: restart from scratch
                     st.state = TaskState.WAITING
                     st.node_id = None
                     self.scheduler.submit(st)
                     self._log("resubmitted", cid=st.tid)
+                    if rsp is not None:
+                        rsp.annotate(outcome="resubmitted").end()
+        if fsp is not None:
+            fsp.end()
 
     def _latest_snapshot_any(self, cid: str) -> Optional[str]:
         import glob
@@ -597,3 +649,9 @@ class Orchestrator:
     def _log(self, event: str, **kw):
         self.events.append((time.time(), event, kw))
         self.metrics.counter("orchestrator_events_total", event=event).inc()
+
+    def _span(self, name: str, **labels):
+        """Open a span on the cluster trace (None when tracing is off)."""
+        if self._cluster_trace is None:
+            return None
+        return self._cluster_trace.span(name, **labels)

@@ -314,6 +314,11 @@ class MigrationController:
         if len(pts) < 2:
             return None
         t1, s1 = pts[-1]
+        # a task that has never taken a guest step is still booting
+        # (deploy/compile), not straggling — it has no measurable rate,
+        # and a zero-rate sample here would mis-flag it for eviction
+        if s1 <= 0:
+            return None
         for t0, s0 in reversed(pts[:-1]):
             if t1 - t0 >= min_window_s:
                 return (s1 - s0) / (t1 - t0)

@@ -40,7 +40,8 @@ class Direction(enum.Enum):
 class Completion:
     """Future for one request."""
 
-    __slots__ = ("_event", "value", "error", "submitted_at", "completed_at")
+    __slots__ = ("_event", "value", "error", "submitted_at", "completed_at",
+                 "phases")
 
     def __init__(self):
         self._event = threading.Event()
@@ -48,6 +49,13 @@ class Completion:
         self.error: Optional[BaseException] = None
         self.submitted_at = time.perf_counter()
         self.completed_at: Optional[float] = None
+        # per-phase wall-time attribution filled in by the monitor worker
+        # before set(): queue_wait_s always; EXECUTE adds prep_s (signature
+        # lookup + compile), device_s and sig_hit; TRANSFER adds bytes and
+        # direction; SYNC adds synced buffer count.  Populated whether or
+        # not tracing is enabled, so the engine can compute its
+        # host/device split without a tracer.
+        self.phases: Optional[dict] = None
 
     def set(self, value: Any = None, error: Optional[BaseException] = None):
         self.value = value
@@ -107,6 +115,12 @@ class FunkyRequest:
 
     # SYNC
     upto_req_id: Optional[int] = None   # None = all outstanding
+
+    # tracing (optional): parent span in the submitter's trace; the
+    # monitor worker hangs queue-wait/execute/transfer child spans off it.
+    span: Any = None
+    enqueue_t: Optional[float] = None   # trace-clock time at submit
+    mon_span: Any = None                # set by the worker loop for handlers
 
     def __repr__(self) -> str:  # compact for logs
         return f"<{self.kind.value} #{self.req_id} buff={self.buff_id} prog={self.program_id}>"

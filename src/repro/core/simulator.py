@@ -429,7 +429,8 @@ class ServingSimulator:
                  closed_gen: Optional[ClosedLoopGen] = None,
                  service_time_fn=None,
                  kv_model: Optional[KVModelParams] = None,
-                 spec_accept_rate: Optional[float] = None):
+                 spec_accept_rate: Optional[float] = None,
+                 trace: bool = False):
         self.params = params or ServingParams()
         self.autoscaler = autoscaler
         self.service = service
@@ -443,6 +444,14 @@ class ServingSimulator:
         self._service_time = service_time_fn or (lambda r: r.service_s)
         self.now = 0.0
         self.metrics = MetricsRegistry(clock=lambda: self.now)
+        # virtual-clock tracing: the same span abstraction the live plane
+        # uses, timestamped in simulated seconds (deterministic)
+        self.tracer = None
+        self._req_trace: Dict[str, tuple] = {}   # rid -> (trace, open span)
+        if trace:
+            from repro.obs import Tracer
+            self.tracer = Tracer(clock=lambda: self.now, capacity=4096,
+                                 sample_rate=1.0)
         self.active = initial_replicas          # provisioned servers
         self.provisioning = 0                   # servers booting
         self._provision_cancel = 0
@@ -519,6 +528,11 @@ class ServingSimulator:
                     break
             req = self.queue.popleft()
             self.busy += 1
+            if req.rid in self._req_trace:
+                tr, sp = self._req_trace[req.rid]
+                if sp is not None:
+                    sp.end()
+                self._req_trace[req.rid] = (tr, tr.span("sim.service"))
             dur = self._service_time(req)
             epoch = self._kv_epoch.get(req.rid, 0)
             if self.kv is not None:
@@ -538,6 +552,10 @@ class ServingSimulator:
     def _on_arrive(self, req: Request):
         self._pending_arrivals -= 1
         self.metrics.counter(M_REQUESTS, service=self.service).inc()
+        if self.tracer is not None:
+            tr = self.tracer.start_trace("request", trace_id=req.rid,
+                                         service=self.service)
+            self._req_trace[req.rid] = (tr, tr.span("router.queue"))
         self.queue.append(req)
         self._dispatch()
 
@@ -561,6 +579,12 @@ class ServingSimulator:
         self.queue.appendleft(req)
         self.kv_preemptions += 1
         self.metrics.counter(M_PREEMPTIONS, service=self.service).inc()
+        if req.rid in self._req_trace:
+            tr, sp = self._req_trace[req.rid]
+            if sp is not None:
+                sp.annotate(preempted=True).end()
+            self._req_trace[req.rid] = (tr, tr.span("router.queue",
+                                                    requeued=True))
         self._dispatch()
 
     def _on_depart(self, payload):
@@ -571,6 +595,11 @@ class ServingSimulator:
             self._kv_used -= self._kv_held.pop(req.rid, 0)
         self.busy -= 1
         latency = self.now - req.arrival_t
+        if req.rid in self._req_trace:
+            tr, sp = self._req_trace.pop(req.rid)
+            if sp is not None:
+                sp.end()
+            tr.finish(latency_s=latency)
         self._latencies.append(latency)
         self.metrics.counter(M_COMPLETIONS, service=self.service).inc()
         self.metrics.histogram(M_LATENCY, service=self.service,

@@ -101,13 +101,20 @@ class Histogram:
             return [v for _, v in self._samples]
 
     def quantile(self, q: float) -> float:
-        """Linear-interpolated quantile over the current window; NaN if
-        empty."""
+        """Linear-interpolated quantile over the current window.
+
+        Sentinel contract: an *empty* window (nothing observed yet, or all
+        samples pruned by ``window_s``) returns ``math.nan`` — never raises
+        and never reports a stale value.  Consumers (autoscaler signals,
+        the Prometheus exporter) must treat NaN as "no data".  ``q`` is
+        clamped to [0, 1] so an out-of-range request cannot index past the
+        sample list."""
         vals = sorted(self.window_values())
         if not vals:
             return math.nan
         if len(vals) == 1:
             return vals[0]
+        q = min(1.0, max(0.0, q))
         pos = q * (len(vals) - 1)
         lo = int(math.floor(pos))
         hi = min(lo + 1, len(vals) - 1)
@@ -115,6 +122,10 @@ class Histogram:
         return vals[lo] * (1 - frac) + vals[hi] * frac
 
     def summary(self) -> dict:
+        """Windowed summary.  On an empty (fully pruned) window every
+        statistic is the NaN sentinel while cumulative ``count``/``sum``
+        survive and ``window_count`` is 0 — same contract as
+        ``quantile``."""
         vals = self.window_values()
         out = {"count": self.count, "sum": self.sum,
                "window_count": len(vals)}
@@ -186,8 +197,13 @@ class MetricsRegistry:
         # exporter re-quote labels without parsing flattened keys
         self._meta: Dict[str, Tuple[str, Tuple[Tuple[str, str], ...]]] = {}
         # flight recorder: bounded ring of notable events (admissions,
-        # retirements, evictions, scaling actions) for post-mortem dumps
+        # retirements, evictions, scaling actions) for post-mortem dumps.
+        # Guarded by its own lock so event bursts never contend with the
+        # metric get-or-create path; the deque maxlen enforces the cap
+        # even under concurrent writers.
         self._events: deque = deque(maxlen=flight_capacity)
+        self._events_lock = threading.Lock()
+        self._event_seq = 0
 
     def _remember(self, key: str, name: str, labels: Dict[str, str]):
         self._meta[key] = (name, tuple(sorted(labels.items())))
@@ -282,22 +298,45 @@ class MetricsRegistry:
 
     # -- flight recorder ----------------------------------------------------
     def record_event(self, kind: str, **fields):
-        """Append a (t, kind, fields) event to the post-mortem ring buffer.
+        """Append a (t, kind, fields, seq) event to the post-mortem ring.
+        ``seq`` is a monotonic sequence number assigned under the event
+        lock, so total order is recoverable even when the injected clock is
+        coarse (virtual time) or two threads race on the same instant.
         Not for per-token hot paths — admissions, retirements, evictions,
         scaling decisions and the like."""
-        with self._lock:
-            self._events.append((self.clock(), kind, fields))
+        with self._events_lock:
+            seq = self._event_seq
+            self._event_seq += 1
+            self._events.append((self.clock(), kind, fields, seq))
 
     def flight_record(self, series_tail: int = 64) -> dict:
         """Post-mortem dump: the event ring plus the tail of every time
         series — everything needed to reconstruct 'what just happened'
         after an SLO blowup, without scraping histories elsewhere."""
-        with self._lock:
+        with self._events_lock:
             events = list(self._events)
+        with self._lock:
             series = {k: s.points()[-series_tail:]
                       for k, s in self._series.items()}
         return {"ts": self.clock(), "events": events,
                 "series_tail": series}
+
+    def flight_record_to_file(self, path: str, series_tail: int = 64,
+                              **context) -> str:
+        """Serialize ``flight_record()`` (plus caller context, e.g. the
+        crashing engine id and exception text) to a JSON file.  Invoked on
+        engine crash paths so the event ring survives the process."""
+        import json
+
+        dump = self.flight_record(series_tail=series_tail)
+        dump["events"] = [
+            {"t": t, "kind": kind, "fields": fields, "seq": seq}
+            for t, kind, fields, seq in dump["events"]]
+        if context:
+            dump["context"] = {k: str(v) for k, v in context.items()}
+        with open(path, "w") as f:
+            json.dump(dump, f, default=str)
+        return path
 
     # -- export ------------------------------------------------------------
     @staticmethod
@@ -338,6 +377,14 @@ class MetricsRegistry:
             name, fam, items = family(key, "counter")
             fam.append(f"{name}{self._prom_quote(items)} {c.value:g}")
         for key, g in gauges:
+            # NaN/inf gauges are tombstones (e.g. ``evacuate()`` poisons
+            # spec_accept_rate so a stale value can't steer the autoscaler)
+            # — meaningful in-process, but a literal ``nan`` sample breaks
+            # strict Prometheus scrapers, so non-finite gauges are dropped
+            # from the export.  (Histogram quantiles keep NaN: summaries
+            # legitimately report "no data in window".)
+            if not math.isfinite(g.value):
+                continue
             name, fam, items = family(key, "gauge")
             fam.append(f"{name}{self._prom_quote(items)} {g.value:g}")
         for key, h in hists:

@@ -76,10 +76,15 @@ class RequestRouter:
     """
 
     def __init__(self, service: str = "svc", registry=None,
-                 kv_aware: bool = True):
+                 kv_aware: bool = True, tracer=None):
         self.service = service
         self.registry = registry
         self.kv_aware = kv_aware
+        # optional repro.obs.Tracer: each submitted request starts a trace
+        # (trace_id = rid) with a router.queue span ending at pop; engines
+        # sharing the tracer hang their admit/decode/monitor spans off the
+        # same trace, so one request is one connected tree
+        self.tracer = tracer
         self.closed = False
         self._lock = threading.Lock()
         self._pending: deque = deque()
@@ -93,6 +98,13 @@ class RequestRouter:
                 raise RuntimeError(f"router {self.service} is closed")
             if req.arrival_t is None and self.registry is not None:
                 req.arrival_t = self.registry.clock()
+            if (self.tracer is not None
+                    and getattr(req, "trace", None) is None):
+                req.trace = self.tracer.start_trace(
+                    "request", trace_id=req.rid, service=self.service)
+            if getattr(req, "trace", None) is not None:
+                req._router_span = req.trace.span("router.queue",
+                                                  service=self.service)
             self._pending.append(req)
         if self.registry is not None:
             self.registry.counter(M_REQUESTS, service=self.service).inc()
@@ -122,7 +134,12 @@ class RequestRouter:
             self._deferred.discard(engine_id)
             out = []
             while self._pending and len(out) < n:
-                out.append(self._pending.popleft())
+                req = self._pending.popleft()
+                rsp = getattr(req, "_router_span", None)
+                if rsp is not None:
+                    rsp.annotate(engine=engine_id).end()
+                    req._router_span = None
+                out.append(req)
             self.in_flight += len(out)
             return out
 
@@ -138,6 +155,16 @@ class RequestRouter:
         with self._lock:
             self.in_flight -= len(reqs)
             if not self.closed:
+                for req in reqs:
+                    if (self.tracer is not None
+                            and getattr(req, "trace", None) is None):
+                        req.trace = self.tracer.start_trace(
+                            "request", trace_id=req.rid,
+                            service=self.service, requeued=True)
+                    if getattr(req, "trace", None) is not None:
+                        req._router_span = req.trace.span(
+                            "router.queue", service=self.service,
+                            requeued=True)
                 self._pending.extendleft(reversed(reqs))
 
     def pending_count(self) -> int:
@@ -158,14 +185,16 @@ _ROUTERS: Dict[str, RequestRouter] = {}
 _ROUTERS_LOCK = threading.Lock()
 
 
-def get_router(service: str, registry=None) -> RequestRouter:
+def get_router(service: str, registry=None, tracer=None) -> RequestRouter:
     with _ROUTERS_LOCK:
         r = _ROUTERS.get(service)
         if r is None:
-            r = RequestRouter(service, registry=registry)
+            r = RequestRouter(service, registry=registry, tracer=tracer)
             _ROUTERS[service] = r
         if registry is not None and r.registry is None:
             r.registry = registry
+        if tracer is not None and r.tracer is None:
+            r.tracer = tracer
         return r
 
 

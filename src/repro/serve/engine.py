@@ -70,9 +70,12 @@ from __future__ import annotations
 
 import heapq
 import math
+import os
+import tempfile
+import time
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence
+from typing import Any, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -100,6 +103,14 @@ M_E2E = "request_latency_seconds"
 M_TOKENS = "engine_tokens_total"
 M_ITERS = "engine_iterations_total"
 M_SPEC_K = "spec_k"                 # live speculative lookahead per engine
+# Host-overhead attribution (per engine): where a token's wall time went.
+# device_us is the monitor-measured accelerator phase (compiled-program
+# calls + transfer/sync blocking); host_us is everything else in the
+# iteration loop (batching, commit/rollback, page bookkeeping); queue_wait
+# is the mean monitor worker-queue wait per request.
+M_HOST_US = "host_us_per_token"
+M_DEVICE_US = "device_us_per_token"
+M_QUEUE_WAIT_US = "queue_wait_us"
 
 
 @dataclass(frozen=True)
@@ -143,6 +154,9 @@ class ServeRequest:
     max_new_tokens: int = 8
     arrival_t: Optional[float] = None   # registry-clock timestamp
     slo_s: Optional[float] = None       # end-to-end SLO (None = untracked)
+    # per-request trace (repro.obs.Trace), started by the router (or the
+    # engine on direct submit) when a tracer is attached; trace_id == rid
+    trace: Any = None
 
 
 @dataclass
@@ -181,6 +195,7 @@ class _SlotState:
     bucket: int = 0                     # prompt bucket this lane prefetched
     pos: int = 0                        # absolute position of the next write
     blocks: List[int] = field(default_factory=list)
+    span: Any = None                    # engine.decode span (tracing)
 
 
 class ContinuousBatchingEngine:
@@ -194,7 +209,8 @@ class ContinuousBatchingEngine:
                  prompt_buckets: Optional[Sequence[int]] = None,
                  spec: Optional[SpecConfig] = None,
                  auto_compact_frag: Optional[float] = 0.5,
-                 auto_compact_min_pages: int = 4):
+                 auto_compact_min_pages: int = 4,
+                 tracer: Any = None):
         from repro.configs import get_arch
         from repro.models import build_model
 
@@ -295,6 +311,19 @@ class ContinuousBatchingEngine:
                          else cl._monitor.telemetry)
         self._clock = self.registry.clock
         self._publish_gauges = publish_gauges
+        # tracing: explicit tracer wins; else share the monitor's, if any
+        self.tracer = (tracer if tracer is not None
+                       else getattr(cl._monitor, "tracer", None))
+        self._it_root = None            # current iteration's root span
+        self._step_completions: List = []
+        # host/device attribution accumulators (populated from the
+        # monitor's per-request phase dicts, tracer or not)
+        self._attr_host_s = 0.0
+        self._attr_device_s = 0.0
+        self._attr_queue_wait_s = 0.0
+        self._attr_tokens = 0
+        self._attr_execs = 0
+        self._attr_reqs = 0
         # handles resolved once — the per-iteration loop never takes the
         # registry lock (same rule as the monitor's dispatch loop)
         self._h_ttft = self.registry.histogram(M_TTFT, service=service)
@@ -317,6 +346,12 @@ class ContinuousBatchingEngine:
                 M_KV_PAGES, service=service, engine=engine_id)
             self._g_kv_free = self.registry.gauge(
                 M_KV_FREE_PAGES, service=service, engine=engine_id)
+            self._g_host_us = self.registry.gauge(
+                M_HOST_US, service=service, engine=engine_id)
+            self._g_device_us = self.registry.gauge(
+                M_DEVICE_US, service=service, engine=engine_id)
+            self._g_queue_wait_us = self.registry.gauge(
+                M_QUEUE_WAIT_US, service=service, engine=engine_id)
             if spec is not None:
                 self._g_spec = self.registry.gauge(
                     M_SPEC_ACCEPT_RATE, service=service, engine=engine_id)
@@ -738,9 +773,35 @@ class ContinuousBatchingEngine:
     # ------------------------------------------------------------------
     # Request intake
     # ------------------------------------------------------------------
+    # -- tracked device-op helpers ---------------------------------------
+    # Every device op in the serving loop goes through these so the step
+    # can fold the monitor's per-request phase dicts (queue wait, device
+    # run, transfer bytes) into the engine's host/device attribution.
+    def _exec(self, *args, span=None, **kw):
+        c = self.cl.clEnqueueKernel(*args, span=span, **kw)
+        self._step_completions.append(c)
+        return c
+
+    def _write(self, buff_id, host_value, span=None):
+        c = self.cl.write_buffer(buff_id, host_value, span=span)
+        self._step_completions.append(c)
+        return c
+
+    def _read(self, buff_id, span=None):
+        c = self.cl.clEnqueueMigrateMemObjects(buff_id, to_device=False,
+                                               span=span)
+        self._step_completions.append(c)
+        return c.wait()
+
     def submit(self, req: ServeRequest) -> None:
         if req.arrival_t is None:
             req.arrival_t = self._clock()
+        if self.tracer is not None and req.trace is None:
+            req.trace = self.tracer.start_trace("request", trace_id=req.rid,
+                                                service=self.service)
+        if req.trace is not None:
+            req._eng_queue_span = req.trace.span("engine.queue",
+                                                 engine=self.engine_id)
         self.pending.append(req)
 
     @property
@@ -781,7 +842,6 @@ class ContinuousBatchingEngine:
     # ------------------------------------------------------------------
     def _admit(self) -> int:
         admitted = 0
-        cl = self.cl
         while self._free and self.pending:
             req = self.pending[0]
             bucket = self._pick_bucket(
@@ -794,13 +854,20 @@ class ContinuousBatchingEngine:
                 page_ids = self.pool.alloc(n_pp)
             self.pending.popleft()
             slot = heapq.heappop(self._free)
-            cl.write_buffer(f"pf_prompt_{bucket}",
-                            self._pad_prompt(req.prompt, bucket))
-            cl.clEnqueueKernel(f"prefill_{bucket}",
-                               ("params", f"pf_prompt_{bucket}"),
-                               ("pf_tok", f"pf_cache_{bucket}"))
+            qsp = getattr(req, "_eng_queue_span", None)
+            if qsp is not None:
+                qsp.end()
+                req._eng_queue_span = None
+            adm = (req.trace.span("engine.admit", engine=self.engine_id,
+                                  slot=slot, bucket=bucket)
+                   if req.trace is not None else None)
+            self._write(f"pf_prompt_{bucket}",
+                        self._pad_prompt(req.prompt, bucket), span=adm)
+            self._exec(f"prefill_{bucket}",
+                       ("params", f"pf_prompt_{bucket}"),
+                       ("pf_tok", f"pf_cache_{bucket}"), span=adm)
             if self.paged:
-                cl.clEnqueueKernel(
+                self._exec(
                     f"admit_{bucket}",
                     ("toks", "pos", "kv_pool", "pf_tok",
                      f"pf_cache_{bucket}"),
@@ -808,28 +875,31 @@ class ContinuousBatchingEngine:
                     const_args=(np.int32(slot),
                                 np.asarray(page_ids, np.int32)),
                     donate=True,
-                    dirty_pages={"kv_pool": tuple(page_ids)})
+                    dirty_pages={"kv_pool": tuple(page_ids)}, span=adm)
                 self._bt_host[slot, :] = -1
                 self._bt_host[slot, :len(page_ids)] = page_ids
                 self._bt_dirty = True
                 if self.spec is not None:
-                    cl.clEnqueueKernel(
+                    self._exec(
                         f"draft_prefill_{bucket}",
                         ("draft_params", f"pf_prompt_{bucket}"),
-                        (f"pf_draft_cache_{bucket}",))
-                    cl.clEnqueueKernel(
+                        (f"pf_draft_cache_{bucket}",), span=adm)
+                    self._exec(
                         f"admit_draft_{bucket}",
                         ("draft_caches", f"pf_draft_cache_{bucket}"),
                         ("draft_caches",),
-                        const_args=(np.int32(slot),), donate=True)
+                        const_args=(np.int32(slot),), donate=True,
+                        span=adm)
             else:
-                cl.clEnqueueKernel(
+                self._exec(
                     "admit_slot",
                     ("toks", "pos", "caches", "pf_tok",
                      f"pf_cache_{bucket}"),
                     ("toks", "pos", "caches"),
-                    const_args=(np.int32(slot),), donate=True)
-            first_tok = int(np.asarray(cl.read_buffer("pf_tok"))[0])
+                    const_args=(np.int32(slot),), donate=True, span=adm)
+            first_tok = int(np.asarray(self._read("pf_tok", span=adm))[0])
+            if adm is not None:
+                adm.end()
             if self.spec is not None:
                 self._toks_host[slot, 0] = first_tok
                 self._pos_host[slot] = bucket
@@ -852,7 +922,11 @@ class ContinuousBatchingEngine:
                             limit=max(1, min(req.max_new_tokens,
                                              self.max_new_tokens)),
                             bucket=bucket, pos=bucket,
-                            blocks=list(page_ids) if page_ids else [])
+                            blocks=list(page_ids) if page_ids else [],
+                            span=(req.trace.span("engine.decode",
+                                                 engine=self.engine_id,
+                                                 slot=slot)
+                                  if req.trace is not None else None))
             self._c_tokens.inc()
             self.registry.record_event("engine_admit", rid=req.rid,
                                        slot=slot, engine=self.engine_id)
@@ -886,6 +960,11 @@ class ContinuousBatchingEngine:
         self.registry.record_event("engine_retire", rid=st.req.rid,
                                    slot=st.slot, tokens=len(st.tokens),
                                    engine=self.engine_id)
+        if st.span is not None:
+            st.span.annotate(tokens=len(st.tokens)).end()
+        if st.req.trace is not None:
+            st.req.trace.finish(tokens=len(st.tokens),
+                                engine=self.engine_id)
 
     # -- paged-mode page lifecycle ---------------------------------------
     def _pick_victim(self) -> _SlotState:
@@ -905,6 +984,14 @@ class ContinuousBatchingEngine:
         self._c_preemptions.inc()
         self.registry.record_event("engine_oom_preempt", rid=st.req.rid,
                                    slot=st.slot, engine=self.engine_id)
+        if st.span is not None:
+            st.span.annotate(preempted=True,
+                             tokens_discarded=len(st.tokens)).end()
+        if st.req.trace is not None:
+            # requeued whole: a fresh queue span covers the wait until the
+            # deterministic re-admission
+            st.req._eng_queue_span = st.req.trace.span(
+                "engine.queue", engine=self.engine_id, requeued=True)
 
     def _append_pages(self) -> None:
         """Token-granularity growth: map the page(s) each lane's next write
@@ -943,9 +1030,10 @@ class ContinuousBatchingEngine:
             assert len(scrub_ids) <= self._scrub_width
             ids = np.full((self._scrub_width,), self.pool_pages, np.int32)
             ids[:len(scrub_ids)] = scrub_ids
-            self.cl.clEnqueueKernel(
+            self._exec(
                 "scrub", ("kv_pool",), ("kv_pool",), const_args=(ids,),
-                donate=True, dirty_pages={"kv_pool": tuple(scrub_ids)})
+                donate=True, dirty_pages={"kv_pool": tuple(scrub_ids)},
+                span=self._it_root)
 
     def compact(self) -> dict:
         """Defragment the pool: pack used pages into the lowest physical
@@ -964,10 +1052,11 @@ class ContinuousBatchingEngine:
             dst = np.full((self.pool_pages,), self.pool_pages, np.int32)
             src[:len(mapping)] = list(mapping.keys())
             dst[:len(mapping)] = list(mapping.values())
-            self.cl.clEnqueueKernel(
+            self._exec(
                 "compact_pool", ("kv_pool",), ("kv_pool",),
                 const_args=(src, dst), donate=True,
-                dirty_pages={"kv_pool": tuple(mapping.values())})
+                dirty_pages={"kv_pool": tuple(mapping.values())},
+                span=self._it_root)
             for st in self._active.values():
                 st.blocks = [mapping.get(p, p) for p in st.blocks]
                 self._bt_host[st.slot, :len(st.blocks)] = st.blocks
@@ -992,7 +1081,8 @@ class ContinuousBatchingEngine:
 
     def _flush_block_table(self) -> None:
         if self._bt_dirty:
-            self.cl.write_buffer("block_table", self._bt_host.copy())
+            self._write("block_table", self._bt_host.copy(),
+                        span=self._it_root)
             self._bt_dirty = False
 
     def _commit_tokens(self, st: _SlotState, tokens, now: float) -> int:
@@ -1011,15 +1101,16 @@ class ContinuousBatchingEngine:
 
     # -- one speculative iteration: draft k, verify k+1, commit/rollback -
     def _spec_iteration(self) -> int:
-        cl, k, ps = self.cl, self.spec_k_now, self.page_size
+        k, ps = self.spec_k_now, self.page_size
         self._flush_block_table()
         # host-authoritative lane state (acceptance is decided here)
-        cl.write_buffer("toks", self._toks_host.copy())
-        cl.write_buffer("pos", self._pos_host.copy())
-        cl.clEnqueueKernel(
+        self._write("toks", self._toks_host.copy(), span=self._it_root)
+        self._write("pos", self._pos_host.copy(), span=self._it_root)
+        self._exec(
             f"draft_lookahead_k{k}",
             ("draft_params", "toks", "pos", "draft_caches"),
-            (f"draft_toks_k{k}", "draft_caches"), donate=True)
+            (f"draft_toks_k{k}", "draft_caches"), donate=True,
+            span=self._it_root)
         # every page the verify can write is dirty — including pages whose
         # acceptance is later partial; evict must serialize them whole
         dirty = set()
@@ -1029,15 +1120,18 @@ class ContinuousBatchingEngine:
                 pid = int(self._bt_host[st.slot, lp])
                 if pid >= 0:
                     dirty.add(pid)
-        cl.clEnqueueKernel(
+        self._exec(
             f"verify_step_k{k}",
             ("params", "toks", f"draft_toks_k{k}", "pos", "block_table",
              "kv_pool"),
             (f"verify_toks_k{k}", "kv_pool"), donate=True,
-            dirty_pages={"kv_pool": tuple(sorted(dirty))})
+            dirty_pages={"kv_pool": tuple(sorted(dirty))},
+            span=self._it_root)
         # token delivery doubles as the iteration's sync point
-        target = np.asarray(cl.read_buffer(f"verify_toks_k{k}"))
-        drafts = np.asarray(cl.read_buffer(f"draft_toks_k{k}"))
+        target = np.asarray(self._read(f"verify_toks_k{k}",
+                                       span=self._it_root))
+        drafts = np.asarray(self._read(f"draft_toks_k{k}",
+                                       span=self._it_root))
         now = self._clock()
         decoded = 0
         self.spec_iterations += 1
@@ -1130,9 +1224,38 @@ class ContinuousBatchingEngine:
 
     # -- one iteration ---------------------------------------------------
     def step(self) -> dict:
-        """One engine iteration; returns counts for the caller's pacing."""
+        """One engine iteration; returns counts for the caller's pacing.
+
+        On an unexpected exception the flight recorder is dumped to a JSON
+        file (``funky_flight_<engine>.json`` in the temp dir) before the
+        error propagates — the event ring is the post-mortem."""
         if not self._setup_done:
             raise RuntimeError("engine.setup() has not run")
+        try:
+            return self._step_inner()
+        except BaseException as e:  # noqa: BLE001 - dump, then re-raise
+            try:
+                path = os.path.join(
+                    tempfile.gettempdir(),
+                    f"funky_flight_{self.engine_id}.json")
+                self.registry.flight_record_to_file(
+                    path, engine=self.engine_id, error=repr(e),
+                    iteration=self.iterations)
+            except Exception:  # noqa: BLE001 - never mask the original
+                pass
+            raise
+
+    def _step_inner(self) -> dict:
+        t_step0 = time.perf_counter()
+        self._step_completions = []
+        it_tr = None
+        if self.tracer is not None and (self._active or self.pending):
+            it_tr = self.tracer.start_trace(
+                "engine.step", trace_id=f"{self.engine_id}:it"
+                f"{self.iterations}", engine=self.engine_id)
+            self._it_root = it_tr.root
+        preempts0 = self.preemptions
+        compacts0 = self.auto_compactions
         if self.paged:
             self._maybe_auto_compact()
         self._mid_step = True
@@ -1150,19 +1273,21 @@ class ContinuousBatchingEngine:
                     dirty = sorted({int(self._bt_host[
                         s.slot, s.pos // self.page_size])
                         for s in self._active.values()})
-                    self.cl.clEnqueueKernel(
+                    self._exec(
                         "decode_step",
                         ("params", "toks", "pos", "block_table", "kv_pool"),
                         ("toks", "pos", "kv_pool"), donate=True,
-                        dirty_pages={"kv_pool": tuple(dirty)})
+                        dirty_pages={"kv_pool": tuple(dirty)},
+                        span=self._it_root)
                 else:
-                    self.cl.clEnqueueKernel(
+                    self._exec(
                         "decode_step", ("params", "toks", "pos", "caches"),
-                        ("toks", "pos", "caches"), donate=True)
+                        ("toks", "pos", "caches"), donate=True,
+                        span=self._it_root)
                 # token delivery doubles as the iteration's sync point —
                 # the d2h TRANSFER drains the queue, landing on a token
                 # boundary
-                toks = np.asarray(self.cl.read_buffer("toks"))
+                toks = np.asarray(self._read("toks", span=self._it_root))
                 now = self._clock()
                 for st in list(self._active.values()):
                     decoded += self._commit_tokens(
@@ -1174,6 +1299,42 @@ class ContinuousBatchingEngine:
             self._mid_step = False
         self.iterations += 1
         self._c_iters.inc()
+        # -- host/device attribution: wall minus the monitor-measured
+        #    device phases is host overhead (batching, commit, paging)
+        wall = time.perf_counter() - t_step0
+        device_s = queue_wait_s = 0.0
+        execs = 0
+        for c in self._step_completions:
+            ph = c.phases or {}
+            device_s += ph.get("device_s", 0.0)
+            queue_wait_s += ph.get("queue_wait_s", 0.0)
+            if ph.get("kind") == "EXECUTE":
+                execs += 1
+        tokens = decoded + admitted       # each admit emits a first token
+        if tokens:
+            self._attr_host_s += max(0.0, wall - device_s)
+            self._attr_device_s += device_s
+            self._attr_queue_wait_s += queue_wait_s
+            self._attr_tokens += tokens
+            self._attr_execs += execs
+            self._attr_reqs += len(self._step_completions)
+            if self._publish_gauges:
+                self._g_host_us.set(
+                    self._attr_host_s / self._attr_tokens * 1e6)
+                self._g_device_us.set(
+                    self._attr_device_s / self._attr_tokens * 1e6)
+                self._g_queue_wait_us.set(
+                    self._attr_queue_wait_s
+                    / max(self._attr_reqs, 1) * 1e6)
+        self._step_completions = []
+        if it_tr is not None:
+            it_tr.finish(admitted=admitted, decoded=decoded,
+                         active=len(self._active),
+                         preemptions=self.preemptions - preempts0,
+                         auto_compactions=(self.auto_compactions
+                                           - compacts0),
+                         device_s=device_s)
+            self._it_root = None
         if self._publish_gauges:
             self._g_queue.set(len(self.pending))
             self._g_util.set(len(self._active) / self.slots)
@@ -1182,6 +1343,21 @@ class ContinuousBatchingEngine:
                 self._g_kv_free.set(self.pool.free_count())
         return {"admitted": admitted, "decoded": decoded,
                 "active": len(self._active), "pending": len(self.pending)}
+
+    def host_device_split(self) -> dict:
+        """Cumulative host-vs-device attribution for the serving loop —
+        the baseline the host-out-of-the-loop decode tentpole is measured
+        against.  All times come from the monitor's per-request phase
+        dicts, so the split is available with tracing off."""
+        toks = max(self._attr_tokens, 1)
+        return {"tokens": self._attr_tokens,
+                "execs": self._attr_execs,
+                "host_us_per_token": self._attr_host_s / toks * 1e6,
+                "device_us_per_token": self._attr_device_s / toks * 1e6,
+                "queue_wait_us_mean": (self._attr_queue_wait_s
+                                       / max(self._attr_reqs, 1) * 1e6),
+                "host_s_total": self._attr_host_s,
+                "device_s_total": self._attr_device_s}
 
     def drain_completions(self) -> List[CompletedRequest]:
         out = list(self._unreported)
@@ -1195,6 +1371,17 @@ class ContinuousBatchingEngine:
         caller's in-flight accounting stays exact."""
         reqs = ([st.req for st in self._active.values()]
                 + list(self.pending))
+        for st in self._active.values():
+            if st.span is not None:
+                st.span.annotate(evacuated=True).end()
+        for req in reqs:
+            qsp = getattr(req, "_eng_queue_span", None)
+            if qsp is not None:
+                qsp.annotate(evacuated=True).end()
+                req._eng_queue_span = None
+            if req.trace is not None:
+                req.trace.finish(evacuated=True, engine=self.engine_id)
+                req.trace = None        # re-traced on resubmission
         self._active.clear()
         self.pending.clear()
         self._free = list(range(self.slots))

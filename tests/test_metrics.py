@@ -238,3 +238,92 @@ def test_snapshot_schema():
     hist = snap["histograms"]["request_latency_seconds{service=svc}"]
     assert {"count", "p50", "p95", "p99", "mean", "max"} <= set(hist)
     assert snap["series"]["replicas_ts{service=svc}"] == [(7.0, 1.0)]
+
+def test_prometheus_drops_nonfinite_gauge_tombstones():
+    """NaN/inf gauges are in-process tombstones (evacuate() poisons
+    spec_accept_rate); a literal ``nan`` sample breaks strict scrapers, so
+    the exporter must drop the series — header and all."""
+    reg = MetricsRegistry()
+    reg.gauge("spec_accept_rate", service="svc").set(math.nan)
+    reg.gauge("kv_occupancy", service="svc").set(math.inf)
+    reg.gauge("queue_depth", service="svc").set(2.0)
+    text = reg.to_prometheus_text()
+    assert 'queue_depth{service="svc"} 2' in text
+    assert "spec_accept_rate" not in text
+    assert "kv_occupancy" not in text
+    # the tombstone stays visible in-process (that's its job)
+    snap = reg.snapshot()
+    assert math.isnan(snap["gauges"]["spec_accept_rate{service=svc}"])
+    # histogram quantiles legitimately report NaN ("no data in window")
+    reg.histogram("request_latency_seconds", service="svc")
+    assert 'quantile="0.99"} NaN' in reg.to_prometheus_text()
+
+
+def test_quantile_clamps_out_of_range_q():
+    clock = FakeClock()
+    h = Histogram(clock, window_s=60.0)
+    h.observe(1.0)
+    h.observe(3.0)
+    assert h.quantile(2.0) == 3.0        # q > 1 clamps to max, no IndexError
+    assert h.quantile(-1.0) == 1.0       # q < 0 clamps to min
+    assert h.quantile(1.0) == 3.0
+
+
+def test_empty_pruned_window_sentinel_is_nan():
+    """The documented contract: a fully-pruned window yields NaN quantiles
+    (not 0, not a crash) while the cumulative count/sum survive."""
+    clock = FakeClock()
+    h = Histogram(clock, window_s=5.0)
+    h.observe(2.0)
+    clock.t = 100.0                      # sample aged out of the window
+    assert h.window_values() == []
+    for q in (0.0, 0.5, 0.99, 1.0):
+        assert math.isnan(h.quantile(q))
+    s = h.summary()
+    assert s["count"] == 1 and s["window_count"] == 0
+    assert math.isnan(s["p50"]) and math.isnan(s["p99"])
+
+
+def test_event_seq_monotonic_and_capped_under_concurrent_writers():
+    import threading
+
+    reg = MetricsRegistry(flight_capacity=64)
+    n_threads, per = 8, 100
+
+    def spam(k):
+        for i in range(per):
+            reg.record_event("spam", thread=k, i=i)
+
+    threads = [threading.Thread(target=spam, args=(k,))
+               for k in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    evs = reg.flight_record()["events"]
+    assert len(evs) == 64                          # ring cap held
+    seqs = [e[3] for e in evs]
+    assert seqs == sorted(seqs)                    # total order recoverable
+    assert len(set(seqs)) == len(seqs)             # no duplicate seq
+    assert seqs[-1] == n_threads * per - 1         # every write numbered
+
+
+def test_flight_record_to_file_round_trip(tmp_path):
+    import json
+
+    clock = FakeClock()
+    reg = MetricsRegistry(clock=clock)
+    reg.record_event("engine_admit", rid="r0", slot=1)
+    clock.t = 2.0
+    reg.record_event("engine_retire", rid="r0")
+    reg.series("replicas_ts", service="svc").record(1.0)
+    path = str(tmp_path / "flight.json")
+    assert reg.flight_record_to_file(path, engine="eng0",
+                                     error="boom") == path
+    doc = json.loads((tmp_path / "flight.json").read_text())
+    assert doc["context"] == {"engine": "eng0", "error": "boom"}
+    kinds = [e["kind"] for e in doc["events"]]
+    assert kinds == ["engine_admit", "engine_retire"]
+    assert [e["seq"] for e in doc["events"]] == [0, 1]
+    assert doc["events"][0]["fields"] == {"rid": "r0", "slot": 1}
+    assert doc["series_tail"]["replicas_ts{service=svc}"] == [[2.0, 1.0]]
