@@ -1,32 +1,140 @@
-"""Fig 12: fault tolerance vs checkpoint interval (trace-driven).
+"""Fig 12: fault tolerance vs checkpoint interval.
 
-Every job fails once at a uniform point (mean ~50 % of its runtime, per the
-paper's setup); periodic snapshots bound the lost work.  Also reports the
-no-failure overhead of each interval (Success case)."""
+Trace-driven arm: every job fails once at a uniform point (mean ~50 % of
+its runtime, per the paper's setup); periodic snapshots bound the lost
+work.  Also reports the no-failure overhead of each interval (Success
+case).
+
+Live-plane arm (``--live`` / always in ``--smoke``): a two-node
+engine-serve deployment absorbs a hard node crash mid-decode — leased
+requests replay through the router, the replica restores from its last
+crash-consistent snapshot on the surviving node, and the arm reports
+goodput faulted vs fault-free plus the recovery latency (crash to first
+post-crash completion).  The faulted run must complete the identical
+request set bit-exactly (zero lost, zero duplicated).
+
+    PYTHONPATH=src python -m benchmarks.fig12_fault_tolerance [--smoke]
+"""
 
 from __future__ import annotations
+
+import sys
+import time
 
 from benchmarks.common import emit
 from repro.core.scheduler import Policy
 from repro.core.simulator import SimParams, Simulator
 from repro.core.traces import generate_trace
 
-FAIL = generate_trace(n_jobs=300, horizon_s=4 * 3600, seed=12,
-                      with_failures=True)
-OK = generate_trace(n_jobs=300, horizon_s=4 * 3600, seed=12,
-                    with_failures=False)
 INTERVALS = (None, 30.0, 120.0, 600.0, 1800.0)
 
 
-def main():
+def sim_arm(smoke: bool = False):
+    n_jobs = 60 if smoke else 300
+    fail = generate_trace(n_jobs=n_jobs, horizon_s=4 * 3600, seed=12,
+                          with_failures=True)
+    ok = generate_trace(n_jobs=n_jobs, horizon_s=4 * 3600, seed=12,
+                        with_failures=False)
     for ck in INTERVALS:
         p = SimParams(checkpoint_interval_s=ck)
-        rf = Simulator(FAIL, num_nodes=32, policy=Policy.NO_PRE, params=p).run()
-        rs = Simulator(OK, num_nodes=32, policy=Policy.NO_PRE, params=p).run()
+        rf = Simulator(fail, num_nodes=32, policy=Policy.NO_PRE,
+                       params=p).run()
+        rs = Simulator(ok, num_nodes=32, policy=Policy.NO_PRE,
+                       params=p).run()
         label = "none" if ck is None else f"{int(ck)}s"
         emit(f"fig12/failures_ckpt_{label}", rf["mean_exec_s"] * 1e6,
              f"success-case exec {rs['mean_exec_s']:.1f}s")
 
 
+def _run_live(n_req, max_new, *, crash, seed=11):
+    """One live engine-serve run; optionally checkpoint + crash the
+    serving node mid-flight.  Returns (busy_s, tokens_by_rid,
+    recovery_s, replayed)."""
+    import numpy as np
+
+    from repro.core import TaskImage, make_cluster
+    from repro.scaling.metrics import MetricsRegistry
+    from repro.scaling.serving import reset_router, wait_for_service
+    from repro.serve.engine import ServeRequest
+
+    rng = np.random.Generator(np.random.Philox(seed))
+    reqs = [ServeRequest(rid=f"r{i}", prompt=rng.integers(0, 100, 8),
+                         max_new_tokens=2 + i % max_new)
+            for i in range(n_req)]
+    reg = MetricsRegistry()
+    img = TaskImage(name="fig12-live", kind="engine-serve",
+                    arch="yi-9b-smoke", prompt_len=8, global_batch=2,
+                    total_steps=10 ** 9, max_new_tokens=max_new,
+                    page_size=4)
+    cluster = make_cluster(num_nodes=2, slices_per_node=1,
+                           images={"fig12-live": img}, metrics=reg)
+    router = reset_router("fig12-live")
+    orch = cluster.orchestrator
+    orch.start(tick_interval=0.01)
+    recovery_s = None
+    try:
+        cid = orch.submit("fig12-live")
+        node = wait_for_service(cluster, orch, cid, timeout_s=300)
+        t0 = time.perf_counter()
+        for r in reqs:
+            router.submit(r)
+        if crash:
+            deadline = time.time() + 120
+            while len(router.completed) < 2 and time.time() < deadline:
+                time.sleep(0.005)
+            orch.checkpoint(cid)
+            done_before = set(router.completed)
+            t_crash = time.perf_counter()
+            orch.handle_node_failure(node)
+            while (not (set(router.completed) - done_before)
+                   and time.time() < deadline):
+                time.sleep(0.005)
+            recovery_s = time.perf_counter() - t_crash
+        deadline = time.time() + 300
+        while router.outstanding() > 0 and time.time() < deadline:
+            time.sleep(0.02)
+        busy_s = time.perf_counter() - t0
+        if router.outstanding() > 0:
+            raise SystemExit(
+                f"fig12 live arm: {router.outstanding()} requests lost "
+                f"(completed {sorted(router.completed)})")
+        if router.duplicates or router.replay_mismatches:
+            raise SystemExit(
+                f"fig12 live arm: duplicates={router.duplicates} "
+                f"replay_mismatches={router.replay_mismatches}")
+        toks = {rid: list(rec.tokens)
+                for rid, rec in router.completed.items()}
+        return busy_s, toks, recovery_s, dict(router.replayed)
+    finally:
+        router.close()
+        cluster.stop()
+
+
+def live_arm(smoke: bool = False):
+    n_req, max_new = (6, 5) if smoke else (12, 8)
+    busy0, toks0, _, _ = _run_live(n_req, max_new, crash=False)
+    busy1, toks1, recovery_s, replayed = _run_live(n_req, max_new,
+                                                   crash=True)
+    if toks1 != toks0:
+        raise SystemExit("fig12 live arm: faulted run not bit-exact vs "
+                         "fault-free baseline")
+    total = sum(len(t) for t in toks0.values())
+    emit("fig12/live_faultfree", busy0 * 1e6 / total,
+         f"goodput={total / busy0:.1f}tok/s requests={n_req}")
+    emit("fig12/live_crash", busy1 * 1e6 / total,
+         f"goodput={total / busy1:.1f}tok/s replayed={len(replayed)} "
+         f"bit_exact=yes")
+    emit("fig12/live_recovery", (recovery_s or 0.0) * 1e6,
+         f"recovery_s={recovery_s:.3f}" if recovery_s is not None
+         else "recovery_s=n/a")
+
+
+def main(smoke: bool = False, live: bool = True):
+    sim_arm(smoke)
+    if live:
+        live_arm(smoke)
+
+
 if __name__ == "__main__":
-    main()
+    main(smoke="--smoke" in sys.argv[1:],
+         live="--no-live" not in sys.argv[1:])

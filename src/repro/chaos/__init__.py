@@ -1,0 +1,12 @@
+"""Deterministic fault injection + retry scaffolding (chaos engineering
+for the live plane).  See ``faults`` for the injection-site catalogue and
+``retry`` for the backoff policies the recovery paths use."""
+
+from repro.chaos.faults import (FaultPlan, FaultSpec, InjectedCrash,
+                                InjectedFault, TransientFault)
+from repro.chaos.retry import (DEFAULT_ACTION_RETRY, DEFAULT_EXECUTE_RETRY,
+                               RetryPolicy, retry_call)
+
+__all__ = ["FaultPlan", "FaultSpec", "InjectedCrash", "InjectedFault",
+           "TransientFault", "RetryPolicy", "retry_call",
+           "DEFAULT_ACTION_RETRY", "DEFAULT_EXECUTE_RETRY"]

@@ -1,7 +1,9 @@
-from repro.ckpt.checkpoint import (AsyncCheckpointer, load_snapshot,
-                                   save_snapshot)
+from repro.ckpt.checkpoint import (AsyncCheckpointer, CheckpointCorruptError,
+                                   load_latest_good, load_snapshot,
+                                   save_snapshot, snapshot_candidates)
 from repro.ckpt.resharding import (reshard_params, reshard_snapshot_buffers,
                                    reshard_tree)
 
-__all__ = ["AsyncCheckpointer", "load_snapshot", "reshard_params",
-           "reshard_snapshot_buffers", "reshard_tree", "save_snapshot"]
+__all__ = ["AsyncCheckpointer", "CheckpointCorruptError", "load_latest_good",
+           "load_snapshot", "reshard_params", "reshard_snapshot_buffers",
+           "reshard_tree", "save_snapshot", "snapshot_candidates"]

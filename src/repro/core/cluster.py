@@ -61,10 +61,12 @@ def make_cluster(num_nodes: int = 3, slices_per_node: int = 1,
                  metrics: Optional[MetricsRegistry] = None,
                  failure_domains: Optional[int] = None,
                  straggler_interval: Optional[float] = None,
-                 tracer=None) -> Cluster:
+                 tracer=None, chaos=None) -> Cluster:
     """``failure_domains=k`` spreads the nodes round-robin over ``k``
     synthetic failure domains (rack/PDU model) for replica anti-affinity;
-    the default gives every node its own domain."""
+    the default gives every node its own domain.  ``chaos`` (a
+    ``repro.chaos.FaultPlan``) is threaded into every runtime, monitor
+    and node agent for deterministic fault injection."""
     images = images or {}
     ckpt_root = ckpt_root or tempfile.mkdtemp(prefix="funky-ckpt-")
     metrics = metrics if metrics is not None else MetricsRegistry()
@@ -76,11 +78,12 @@ def make_cluster(num_nodes: int = 3, slices_per_node: int = 1,
                                mem_cap_bytes=mem_cap_bytes)
         rt = FunkyRuntime(nid, alloc,
                           ckpt_root=os.path.join(ckpt_root, nid),
-                          telemetry=metrics)
+                          telemetry=metrics, chaos=chaos)
         eng = ContainerEngine(rt, images, peers=engines)
         engines[nid] = eng
         domain = (f"dom{i % failure_domains}" if failure_domains else None)
-        agent = NodeAgent(nid, eng, metrics=metrics, failure_domain=domain)
+        agent = NodeAgent(nid, eng, metrics=metrics, failure_domain=domain,
+                          chaos=chaos)
         nodes[nid] = Node(nid, alloc, rt, eng, agent)
     orch = Orchestrator({n: nd.agent for n, nd in nodes.items()},
                         policy=policy,

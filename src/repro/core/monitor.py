@@ -29,6 +29,7 @@ from typing import Any, Optional
 
 import jax
 
+from repro.chaos import DEFAULT_EXECUTE_RETRY, RetryPolicy, TransientFault
 from repro.core.programs import Program, ProgramCache
 from repro.core.requests import (Completion, Direction, FunkyRequest,
                                  RequestKind)
@@ -61,8 +62,14 @@ class Monitor:
     def __init__(self, task_id: str, allocator: SliceAllocator,
                  programs: Optional[ProgramCache] = None,
                  telemetry: Optional[MetricsRegistry] = None,
-                 tracer: Any = None):
+                 tracer: Any = None, chaos: Any = None,
+                 retry: Optional[RetryPolicy] = None):
         self.task_id = task_id
+        # fault injection plan (repro.chaos.FaultPlan) + EXECUTE retry
+        # policy; transient EXECUTE failures are retried with backoff
+        # *before* any output buffer is written, so a retry is idempotent
+        self.chaos = chaos
+        self.retry = retry if retry is not None else DEFAULT_EXECUTE_RETRY
         # optional repro.obs.Tracer; guests that submit requests carrying a
         # ``span`` get queue-wait/device/sync child spans hung off it
         self.tracer = tracer
@@ -99,6 +106,10 @@ class Monitor:
             "monitor_transfer_bytes_total", direction="h2d")
         self._tel_d2h_bytes = self.telemetry.counter(
             "monitor_transfer_bytes_total", direction="d2h")
+        self._tel_exec_retries = self.telemetry.counter(
+            "monitor_execute_retries_total")
+        self._tel_exec_failed = self.telemetry.counter(
+            "monitor_execute_failed_total")
         # execute-signature cache (hot path): (program_id, buffer wiring,
         # const shapes) -> (CompiledEntry, donate_argnums, in spec tokens).
         # A hit skips the per-request jax.tree.map over every arg leaf AND
@@ -195,7 +206,7 @@ class Monitor:
                 req.mon_span = req.span.child(
                     f"monitor.{req.kind.value.lower()}", t0=tc)
             try:
-                value, error = self._handle(req), None
+                value, error = self._handle_with_retry(req), None
             except BaseException as e:  # noqa: BLE001 - forwarded to guest
                 value, error = None, e
                 if req.mon_span is not None:
@@ -212,6 +223,37 @@ class Monitor:
             self._tel_count[req.kind.value].inc()
             self._tel_hist[req.kind.value].observe(dt)
             self._last_completion = req.completion
+
+    def _handle_with_retry(self, req: FunkyRequest) -> Any:
+        """EXECUTEs get bounded retry-with-backoff on ``TransientFault``:
+        injection and the device call both happen *before* any
+        ``on_execute_write``, so a failed attempt left no partial state.
+        Other request kinds fail straight through to the guest."""
+        if req.kind is not RequestKind.EXECUTE:
+            return self._handle(req)
+        from repro.chaos import retry_call
+
+        def on_retry(attempt, backoff_s, exc):
+            self._tel_exec_retries.inc()
+            self.telemetry.record_event(
+                "execute_retry", task=self.task_id,
+                program=req.program_id, attempt=attempt,
+                backoff_s=backoff_s, error=repr(exc))
+            if req.mon_span is not None:
+                req.mon_span.child("monitor.retry", attempt=attempt,
+                                   backoff_s=backoff_s,
+                                   error=repr(exc)).end()
+
+        try:
+            return retry_call(lambda: self._handle(req), self.retry,
+                              on_retry=on_retry)
+        except TransientFault as e:
+            self._tel_exec_failed.inc()
+            self.telemetry.record_event(
+                "execute_failed", task=self.task_id,
+                program=req.program_id,
+                attempts=self.retry.max_attempts, error=repr(e))
+            raise
 
     # -- request handlers ------------------------------------------------
     def _handle(self, req: FunkyRequest) -> Any:
@@ -281,6 +323,9 @@ class Monitor:
 
     def _do_execute(self, req: FunkyRequest):
         t_prep0 = time.perf_counter()
+        if self.chaos is not None:
+            self.chaos.raise_if("monitor.execute",
+                                key=f"{self.task_id}:{req.program_id}")
         self._validate_buffs(list(req.in_buffs) + list(req.out_buffs))
         if req.program_id not in self.programs:
             raise MonitorError(f"program {req.program_id!r} not registered")

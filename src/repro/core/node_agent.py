@@ -8,6 +8,7 @@ from __future__ import annotations
 import time
 from typing import Dict, Optional
 
+from repro.chaos import InjectedFault
 from repro.core.cri import (A_PREEMPTIBLE, A_PRIORITY, A_REPLICA_OF,
                             A_SNAPSHOT, A_SOURCE_NODE, A_VFPGA_NUM,
                             ContainerConfig, ContainerEngine)
@@ -22,9 +23,11 @@ class NodeFailed(RuntimeError):
 class NodeAgent:
     def __init__(self, node_id: str, engine: ContainerEngine,
                  metrics: Optional[MetricsRegistry] = None,
-                 failure_domain: Optional[str] = None):
+                 failure_domain: Optional[str] = None,
+                 chaos=None):
         self.node_id = node_id
         self.engine = engine
+        self.chaos = chaos
         self.failed = False
         self._hb = time.time()
         self.metrics = metrics if metrics is not None else MetricsRegistry()
@@ -53,10 +56,29 @@ class NodeAgent:
         if self.failed:
             raise NodeFailed(self.node_id)
 
+    def _chaos(self, op: str, cid: str = ""):
+        """Fault-plan hook for site ``agent.<op>``: kind ``crash`` marks
+        the whole node failed (and surfaces as ``NodeFailed``), ``error``
+        raises a retryable ``InjectedFault``, ``delay`` sleeps."""
+        if self.chaos is None:
+            return
+        spec = self.chaos.check(f"agent.{op}", key=f"{self.node_id}:{cid}")
+        if spec is None:
+            return
+        if spec.kind == "delay":
+            time.sleep(spec.delay_s)
+            return
+        if spec.kind == "crash":
+            self.fail()
+            raise NodeFailed(self.node_id)
+        raise InjectedFault(
+            f"injected fault at agent.{op} ({self.node_id}:{cid})")
+
     # -- orchestration ops -> CRI (Table 3) -------------------------------------
     def deploy(self, cid: str, image_ref: str, priority: int = 0,
                preemptible: bool = True):
         self._check()
+        self._chaos('deploy', cid)
         self.engine.CreateContainer(ContainerConfig(
             cid=cid, image_ref=image_ref, annotations={
                 A_PREEMPTIBLE: "true" if preemptible else "false",
@@ -67,16 +89,19 @@ class NodeAgent:
 
     def evict(self, cid: str):
         self._check()
+        self._chaos('evict', cid)
         self.engine.StopContainer(cid)
         self._count_op("evict")
 
     def resume(self, cid: str):
         self._check()
+        self._chaos('resume', cid)
         self.engine.StartContainer(cid)
         self._count_op("resume")
 
     def migrate_in(self, cid: str, image_ref: str, source_node: str):
         self._check()
+        self._chaos('migrate_in', cid)
         self.engine.CreateContainer(ContainerConfig(
             cid=cid, image_ref=image_ref,
             annotations={A_SOURCE_NODE: source_node}))
@@ -85,12 +110,14 @@ class NodeAgent:
 
     def checkpoint(self, cid: str) -> str:
         self._check()
+        self._chaos('checkpoint', cid)
         path = self.engine.CheckpointContainer(cid)
         self._count_op("checkpoint")
         return path
 
     def restore(self, cid: str, snapshot_path: str, image_ref: str = ""):
         self._check()
+        self._chaos('restore', cid)
         self.engine.CreateContainer(ContainerConfig(
             cid=cid, image_ref=image_ref,
             annotations={A_SNAPSHOT: snapshot_path}))
@@ -100,6 +127,7 @@ class NodeAgent:
     def replicate_in(self, new_cid: str, source_cid: str, source_node: str,
                      image_ref: str = ""):
         self._check()
+        self._chaos('replicate_in', new_cid)
         self.engine.CreateContainer(ContainerConfig(
             cid=new_cid, image_ref=image_ref, annotations={
                 A_REPLICA_OF: source_cid, A_SOURCE_NODE: source_node}))
@@ -108,6 +136,7 @@ class NodeAgent:
 
     def update(self, cid: str, vfpga_num: int):
         self._check()
+        self._chaos('update', cid)
         self.engine.UpdateContainerResources(
             cid, {A_VFPGA_NUM: str(vfpga_num)})
         self._count_op("update")
@@ -118,6 +147,7 @@ class NodeAgent:
         kill.  Falls through after ``timeout_s`` — the subsequent remove
         then requeues whatever is still unfinished."""
         self._check()
+        self._chaos('drain', cid)
         stats = self.engine.DrainContainer(cid, timeout_s=timeout_s)
         self._count_op("drain")
         return stats
@@ -125,6 +155,7 @@ class NodeAgent:
     def remove(self, cid: str):
         """Scale-in: kill the replica and delete its record."""
         self._check()
+        self._chaos('remove', cid)
         self.engine.RemoveContainer(cid)
         self._count_op("remove")
 

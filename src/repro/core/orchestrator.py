@@ -22,6 +22,8 @@ import time
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional
 
+from repro.chaos import (DEFAULT_ACTION_RETRY, RetryPolicy, TransientFault,
+                         retry_call)
 from repro.core.node_agent import NodeAgent, NodeFailed
 from repro.core.placement import (M_NODE_UTILIZATION, MigrationController,
                                   PlacementPolicy)
@@ -53,8 +55,12 @@ class Orchestrator:
                  metrics: Optional[MetricsRegistry] = None,
                  placement: Optional[PlacementPolicy] = None,
                  straggler_interval: Optional[float] = None,
-                 tracer=None):
+                 tracer=None, retry: Optional[RetryPolicy] = None):
         self.agents = agents
+        # bounded retry-with-backoff for orchestrator actions (deploy /
+        # evict / resume / migrate / restore): a transient agent fault
+        # costs a backoff, exhaustion produces a structured failure event
+        self.retry = retry if retry is not None else DEFAULT_ACTION_RETRY
         self.metrics = metrics if metrics is not None else MetricsRegistry()
         # orchestration-plane tracing: one long-lived "cluster" trace whose
         # spans are the control actions (deploy/evict/resume/migrate,
@@ -413,7 +419,8 @@ class Orchestrator:
         dep = self.deployments.get(a.tid)
         st = self._sched_tasks[a.tid]
         sp = self._span(f"orch.{a.kind}", cid=a.tid, node=a.node)
-        try:
+
+        def dispatch():
             if a.kind == "deploy":
                 self.agents[a.node].deploy(
                     a.tid, dep.image_ref, priority=dep.priority,
@@ -430,7 +437,26 @@ class Orchestrator:
                 self.agents[a.node].migrate_in(
                     a.tid, dep.image_ref, a.src_node)
                 dep.status = "running"
+
+        try:
+            retry_call(dispatch, self.retry,
+                       on_retry=lambda n, b, e: self._on_action_retry(
+                           a, sp, n, b, e))
             self._log(a.kind, cid=a.tid, node=a.node)
+        except TransientFault as e:
+            # attempts exhausted: structured failure + requeue — the
+            # scheduling loop must survive an unlucky streak
+            if a.kind in ("resume", "migrate"):
+                st.state = TaskState.EVICTED      # context survives
+            else:
+                st.state = TaskState.WAITING
+                st.node_id = None
+            self.scheduler.task_done(a.tid)
+            self.scheduler.submit(st)
+            self._log("action_failed", action=a.kind, cid=a.tid,
+                      error=repr(e))
+            if sp is not None:
+                sp.annotate(outcome="action_failed", error=repr(e))
         except NodeFailed:
             # node died under us: requeue the task
             st.state = TaskState.WAITING
@@ -460,6 +486,16 @@ class Orchestrator:
         finally:
             if sp is not None:
                 sp.end()
+
+    def _on_action_retry(self, a: Action, sp, attempt: int,
+                         backoff_s: float, exc: BaseException):
+        self.metrics.counter("orchestrator_action_retries_total",
+                             action=a.kind).inc()
+        self._log("action_retry", action=a.kind, cid=a.tid,
+                  attempt=attempt, backoff_s=backoff_s, error=repr(exc))
+        if sp is not None:
+            sp.child("orch.retry", attempt=attempt, backoff_s=backoff_s,
+                     error=repr(exc)).end()
 
     # ------------------------------------------------------------------
     # Background services
@@ -583,9 +619,22 @@ class Orchestrator:
     # Fault tolerance
     # ------------------------------------------------------------------
     def handle_node_failure(self, node_id: str):
-        """Restore tasks of a failed node from their latest snapshots."""
+        """Restore tasks of a failed node from their latest snapshots.
+
+        Per victim: (1) the dead node's task is hard-crashed — driver
+        stopped with *no* graceful hooks, so its un-checkpointed work is
+        genuinely lost; (2) a serve replica's leased in-flight requests
+        are replayed back into the router queue (no request lost, none
+        double-completed); (3) restore walks the snapshot candidates
+        newest-first with bounded retries, falling back past corrupt
+        checkpoints (``restore_fallback`` events) before resubmitting
+        from scratch as the last resort."""
+        from repro.core.runtime import TaskStatus as TS
+
         fsp = self._span("orch.node_failure", node=node_id)
-        self.agents[node_id].fail()
+        agent = self.agents[node_id]
+        agent.fail()
+        rt = agent.engine.runtime
         with self._lock:
             victims = [t for t in list(self.scheduler.run_queue)
                        if t.node_id == node_id]
@@ -594,7 +643,15 @@ class Orchestrator:
                 # pre-failure progress history measured the dead node
                 self.migration.reset(st.tid)
                 dep = self.deployments[st.tid]
-                snap = dep and self._latest_snapshot_any(st.tid)
+                rec = rt.tasks.get(st.tid)
+                if rec is not None and rec.status in (TS.CREATED,
+                                                      TS.RUNNING,
+                                                      TS.EVICTED):
+                    rt.crash(st.tid)
+                if (rec is not None
+                        and getattr(rec.image, "kind", "") ==
+                        "engine-serve"):
+                    self._replay_serve_requests(rec.image.name, st.tid)
                 # restore target chosen by the same placement engine (the
                 # failed node's domain peers are penalized automatically)
                 probe = SchedTask(tid=f"{st.tid}::restore",
@@ -604,16 +661,21 @@ class Orchestrator:
                     probe, self, {}, running=self.scheduler.run_queue)
                 rsp = (fsp.child("orch.restore", cid=st.tid)
                        if fsp is not None else None)
-                if snap and target:
-                    self.agents[target].restore(st.tid, snap, dep.image_ref)
+                snap = None
+                if target is not None:
+                    snap = self._restore_from_candidates(st, dep, target,
+                                                         rsp)
+                if snap is not None:
                     st.state = TaskState.RUNNING
                     st.node_id = target
                     self.scheduler.run_queue.append(st)
-                    self._log("restored", cid=st.tid, node=target, snap=snap)
+                    self._log("restored", cid=st.tid, node=target,
+                              snap=snap)
                     if rsp is not None:
-                        rsp.annotate(node=target, outcome="restored").end()
+                        rsp.annotate(node=target, outcome="restored",
+                                     snap=snap).end()
                 else:
-                    # no snapshot: restart from scratch
+                    # no (usable) snapshot: restart from scratch
                     st.state = TaskState.WAITING
                     st.node_id = None
                     self.scheduler.submit(st)
@@ -623,16 +685,72 @@ class Orchestrator:
         if fsp is not None:
             fsp.end()
 
-    def _latest_snapshot_any(self, cid: str) -> Optional[str]:
-        import glob
-        import os
+    def _replay_serve_requests(self, service: str, engine_id: str):
+        """Re-enqueue a crashed serve replica's leased in-flight requests
+        (router-level replay) so another replica picks them up."""
+        from repro.scaling.serving import get_router
 
-        for agent in self.agents.values():
-            root = agent.engine.runtime.ckpt_root
-            hits = sorted(glob.glob(os.path.join(root, f"{cid}-step*")))
-            if hits:
-                return hits[-1]
+        try:
+            n = get_router(service,
+                           registry=self.metrics).fail_engine(engine_id)
+        except Exception as e:  # noqa: BLE001 - recovery must not die here
+            self._log("router_replay_error", cid=engine_id, error=repr(e))
+            return
+        if n:
+            self._log("router_replay", cid=engine_id, service=service,
+                      replayed=n)
+
+    def _restore_from_candidates(self, st: SchedTask, dep: Deployment,
+                                 target: str, rsp) -> Optional[str]:
+        """Try snapshot candidates newest-first; each restore attempt gets
+        bounded retries for transient faults and falls back to the next
+        older snapshot on corruption.  Returns the path restored from."""
+        from repro.ckpt.checkpoint import CheckpointCorruptError
+
+        for snap in self._snapshot_candidates(st.tid):
+            try:
+                retry_call(
+                    lambda: self.agents[target].restore(st.tid, snap,
+                                                        dep.image_ref),
+                    self.retry,
+                    on_retry=lambda n, b, e: self._on_restore_retry(
+                        st.tid, snap, rsp, n, b, e))
+                return snap
+            except (CheckpointCorruptError, TransientFault) as e:
+                self.metrics.record_event(
+                    "restore_fallback", task=st.tid, snap=snap,
+                    error=repr(e))
+                self._log("restore_fallback", cid=st.tid, snap=snap,
+                          error=repr(e))
+                if rsp is not None:
+                    rsp.child("orch.restore_fallback", snap=snap,
+                              error=repr(e)).end()
+            except NodeFailed:
+                return None           # restore target died too
         return None
+
+    def _on_restore_retry(self, cid: str, snap: str, rsp, attempt: int,
+                          backoff_s: float, exc: BaseException):
+        self.metrics.counter("orchestrator_action_retries_total",
+                             action="restore").inc()
+        self._log("action_retry", action="restore", cid=cid,
+                  attempt=attempt, backoff_s=backoff_s, error=repr(exc))
+        if rsp is not None:
+            rsp.child("orch.retry", attempt=attempt, backoff_s=backoff_s,
+                      error=repr(exc)).end()
+
+    def _snapshot_candidates(self, cid: str) -> List[str]:
+        """All published snapshots for ``cid`` across every node's
+        checkpoint root, newest step first (numeric step order)."""
+        from repro.ckpt.checkpoint import snapshot_candidates
+
+        roots = [agent.engine.runtime.ckpt_root
+                 for agent in self.agents.values()]
+        return snapshot_candidates(roots, cid)
+
+    def _latest_snapshot_any(self, cid: str) -> Optional[str]:
+        hits = self._snapshot_candidates(cid)
+        return hits[0] if hits else None
 
     # ------------------------------------------------------------------
     def wait_all(self, timeout: float = 600.0) -> bool:

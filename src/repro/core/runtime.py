@@ -66,10 +66,14 @@ class TaskRecord:
 
 class FunkyRuntime:
     def __init__(self, node_id: str, allocator: SliceAllocator,
-                 ckpt_root: str = "/tmp/funky-ckpt", telemetry=None):
+                 ckpt_root: str = "/tmp/funky-ckpt", telemetry=None,
+                 chaos=None):
         self.node_id = node_id
         self.allocator = allocator
         self.ckpt_root = ckpt_root
+        # fault-injection plan (repro.chaos.FaultPlan); threaded into every
+        # Monitor this runtime builds and into the checkpoint writer
+        self.chaos = chaos
         self.tasks: Dict[str, TaskRecord] = {}
         self._lock = threading.Lock()
         self.alive = True
@@ -93,7 +97,7 @@ class FunkyRuntime:
         rec = TaskRecord(
             cid=cid, image=image, task=image.instantiate(),
             monitor=Monitor(cid, self.allocator, programs=self.programs,
-                            telemetry=self.telemetry),
+                            telemetry=self.telemetry, chaos=self.chaos),
             guest_state=GuestState(seed=image.seed),
             priority=int(annotations.get("priority", 0)),
             preemptible=annotations.get("preemptible", "true") == "true",
@@ -198,6 +202,22 @@ class FunkyRuntime:
         rec.status = TaskStatus.REMOVED
         rec.log("kill")
 
+    def crash(self, cid: str):
+        """Simulated hard crash of one task: the driver is stopped and the
+        slice freed, but — unlike ``kill`` — the graceful ``on_kill`` hook
+        never runs, so nothing is evacuated or requeued from inside the
+        task.  Whatever recovery happens must come from outside (router
+        lease replay + snapshot restore)."""
+        rec = self.tasks[cid]
+        rec.stop_flag = True
+        rec.run_gate.set()
+        if rec.driver is not None:
+            rec.driver.join(timeout=30)
+        if rec.monitor.state in (MonitorState.RUNNING,):
+            rec.monitor.vfpga_exit()
+        rec.status = TaskStatus.FAILED
+        rec.log("crash")
+
     def delete(self, cid: str):
         with self._lock:
             self.tasks.pop(cid, None)
@@ -283,9 +303,12 @@ class FunkyRuntime:
                                           keep_running=keep_running)
             snap.program_ids = tuple(rec.monitor.programs.program_ids())
             path = os.path.join(self.ckpt_root, f"{cid}-step{snap.step}")
-            save_snapshot(path, snap, image=rec.image)
+            stats = save_snapshot(path, snap, image=rec.image,
+                                  prev_path=rec.latest_snapshot,
+                                  chaos=self.chaos)
             rec.latest_snapshot = path
-            rec.log("checkpoint", path=path, bytes=snap.nbytes())
+            rec.log("checkpoint", path=path, bytes=snap.nbytes(),
+                    reused_buffers=stats["reused_buffers"])
             return path
         finally:
             if keep_running:
@@ -294,21 +317,35 @@ class FunkyRuntime:
                 rec.status = TaskStatus.EVICTED
 
     def restore(self, cid: str, snapshot_path: str) -> TaskRecord:
-        """Re-create a task from a disk snapshot and resume it here."""
-        from repro.ckpt.checkpoint import load_snapshot
+        """Re-create a task from a disk snapshot and resume it here.
 
-        snap, image = load_snapshot(snapshot_path)
+        Verifies digests; a corrupt snapshot falls back along its
+        incremental ``prev_path`` chain to the last-good ancestor (each
+        skip recorded as a ``restore_fallback`` event).  Raises
+        ``CheckpointCorruptError`` only when no ancestor verifies."""
+        from repro.ckpt.checkpoint import load_latest_good
+
+        if self.chaos is not None:
+            self.chaos.raise_if("ckpt.restore",
+                                key=f"{self.node_id}:{cid}")
+        snap, image, used_path, skipped = load_latest_good(snapshot_path)
+        for bad_path, reason in skipped:
+            self.telemetry.record_event(
+                "restore_fallback", task=cid, node=self.node_id,
+                skipped=bad_path, reason=reason, used=used_path)
+        snapshot_path = used_path
         rec = TaskRecord(
             cid=cid, image=image, task=image.instantiate(),
             monitor=Monitor(cid, self.allocator, programs=self.programs,
-                            telemetry=self.telemetry),
+                            telemetry=self.telemetry, chaos=self.chaos),
             guest_state=snap.guest_state.clone(),
         )
         rec.monitor.load_snapshot(snap)
         with self._lock:
             self.tasks[cid] = rec
         rec.status = TaskStatus.EVICTED
-        rec.log("restore", path=snapshot_path)
+        rec.latest_snapshot = snapshot_path
+        rec.log("restore", path=snapshot_path, fallbacks=len(skipped))
         self.resume(cid)
         return rec
 
@@ -327,7 +364,8 @@ class FunkyRuntime:
             cid=new_cid, image=rec.image, task=rec.image.instantiate(),
             monitor=Monitor(new_cid, target.allocator,
                             programs=target.programs,
-                            telemetry=target.telemetry),
+                            telemetry=target.telemetry,
+                            chaos=target.chaos),
             guest_state=snap.guest_state.clone(),
             priority=rec.priority, preemptible=rec.preemptible,
         )

@@ -35,6 +35,7 @@ def chrome_trace_events(traces: Iterable[Any]) -> Dict[str, Any]:
                        "tid": 0,
                        "args": {"name": f"{tr.name} {tr.trace_id}"}})
         tids: Dict[str, int] = {}
+        links = getattr(tr, "links", None) or []
         for sp in tr.spans():
             prefix = sp.name.split(".", 1)[0]
             tid = tids.get(prefix)
@@ -50,6 +51,10 @@ def chrome_trace_events(traces: Iterable[Any]) -> Dict[str, Any]:
             args["trace_id"] = tr.trace_id
             if sp.end_t is None:
                 args["unfinished"] = True
+            if links and sp.parent_id == 0:
+                # cross-trace links ride on the root event: a recovery
+                # trace names the trace it continues
+                args["links"] = json.dumps(links)
             events.append({
                 "name": sp.name,
                 "cat": prefix,

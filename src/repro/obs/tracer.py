@@ -101,7 +101,19 @@ class Trace:
         self._spans: deque = deque(maxlen=max_spans)
         self.dropped_spans = 0
         self.finished = False
+        # cross-trace links: a recovery trace points back at the trace it
+        # continues (pre-crash / pre-evacuation), so tooling can stitch a
+        # request's whole lifetime into one timeline
+        self.links: List[Dict[str, Any]] = []
         self.root = Span(self, 1, 0, name, dict(labels), self.clock())
+
+    def link(self, other: "Trace", relation: str = "follows") -> "Trace":
+        """Record that this trace ``relation``s ``other`` (e.g. a replayed
+        request's new trace ``recovers`` its crashed predecessor)."""
+        self.links.append({"trace_id": other.trace_id,
+                           "name": other.name,
+                           "relation": relation})
+        return self
 
     def span(self, name: str, parent: Optional[Span] = None,
              t0: Optional[float] = None, **labels: Any) -> Span:
@@ -143,6 +155,7 @@ class Trace:
             "finished": self.finished,
             "dropped_spans": self.dropped_spans,
             "duration": self.duration,
+            "links": list(self.links),
             "spans": [{
                 "span_id": s.span_id,
                 "parent_id": s.parent_id,

@@ -76,7 +76,7 @@ class RequestRouter:
     """
 
     def __init__(self, service: str = "svc", registry=None,
-                 kv_aware: bool = True, tracer=None):
+                 kv_aware: bool = True, tracer=None, chaos=None):
         self.service = service
         self.registry = registry
         self.kv_aware = kv_aware
@@ -85,12 +85,26 @@ class RequestRouter:
         # sharing the tracer hang their admit/decode/monitor spans off the
         # same trace, so one request is one connected tree
         self.tracer = tracer
+        self.chaos = chaos              # repro.chaos.FaultPlan (router.pop)
         self.closed = False
         self._lock = threading.Lock()
         self._pending: deque = deque()
         self._deferred: set = set()     # engines already held back once
-        self.in_flight = 0
+        # every popped request holds a lease (rid -> (req, engine_id))
+        # until the owning engine completes or requeues it; a replica
+        # crash replays exactly its leased requests (fail_engine)
+        self._leases: Dict[str, tuple] = {}
         self.completed: Dict[str, object] = {}   # rid -> CompletedRequest
+        # replay bookkeeping: rid -> tokens committed before the crash
+        # (the replayed run must reproduce them as a prefix), plus
+        # conservation counters the chaos soak asserts on
+        self.replayed: Dict[str, list] = {}
+        self.duplicates = 0
+        self.replay_mismatches = 0
+
+    @property
+    def in_flight(self) -> int:
+        return len(self._leases)
 
     def submit(self, req) -> None:
         with self._lock:
@@ -125,6 +139,8 @@ class RequestRouter:
     def pop(self, n: int, engine_id: Optional[str] = None) -> list:
         if n <= 0:
             return []
+        if self.chaos is not None:
+            self.chaos.maybe_delay("router.pop", key=engine_id or "")
         with self._lock:
             if (self.kv_aware and engine_id is not None and self._pending
                     and not self._kv_preferred(engine_id)):
@@ -139,33 +155,86 @@ class RequestRouter:
                 if rsp is not None:
                     rsp.annotate(engine=engine_id).end()
                     req._router_span = None
+                self._leases[req.rid] = (req, engine_id)
                 out.append(req)
-            self.in_flight += len(out)
             return out
 
     def complete(self, record) -> None:
         with self._lock:
+            self._leases.pop(record.rid, None)
+            if record.rid in self.completed:
+                # exactly-once guard: a replayed request that the dead
+                # replica already terminated must not count twice
+                self.duplicates += 1
+                if self.registry is not None:
+                    self.registry.counter("router_duplicate_completions",
+                                          service=self.service).inc()
+                return
+            pre = self.replayed.get(record.rid)
+            if pre is not None and list(record.tokens[:len(pre)]) != pre:
+                # replay determinism check: tokens committed before the
+                # crash must be a prefix of the replayed completion
+                self.replay_mismatches += 1
+                if self.registry is not None:
+                    self.registry.record_event(
+                        "replay_mismatch", rid=record.rid,
+                        committed=pre, got=list(record.tokens))
             self.completed[record.rid] = record
-            self.in_flight -= 1
 
     def requeue(self, reqs: list) -> None:
         """Return popped-but-unfinished requests (killed replica) to the
         head of the queue; original arrival times stick, so the disruption
         shows up in their end-to-end latency."""
         with self._lock:
-            self.in_flight -= len(reqs)
-            if not self.closed:
-                for req in reqs:
-                    if (self.tracer is not None
-                            and getattr(req, "trace", None) is None):
-                        req.trace = self.tracer.start_trace(
-                            "request", trace_id=req.rid,
-                            service=self.service, requeued=True)
-                    if getattr(req, "trace", None) is not None:
-                        req._router_span = req.trace.span(
-                            "router.queue", service=self.service,
-                            requeued=True)
-                self._pending.extendleft(reversed(reqs))
+            self._requeue_locked(reqs, reason="requeued")
+
+    def _requeue_locked(self, reqs: list, reason: str) -> None:
+        for req in reqs:
+            self._leases.pop(req.rid, None)
+        if self.closed:
+            return
+        for req in reqs:
+            if self.tracer is not None and getattr(req, "trace",
+                                                   None) is None:
+                req.trace = self.tracer.start_trace(
+                    "request", trace_id=req.rid,
+                    service=self.service, **{reason: True})
+                # span-link the recovery trace back to the pre-crash /
+                # pre-evacuation one: trace_dump then shows one timeline
+                prev = getattr(req, "_prev_trace", None)
+                if prev is not None:
+                    req.trace.link(prev, relation="recovers")
+                    req._prev_trace = None
+            if getattr(req, "trace", None) is not None:
+                req._router_span = req.trace.span(
+                    "router.queue", service=self.service,
+                    **{reason: True})
+        self._pending.extendleft(reversed(reqs))
+
+    def fail_engine(self, engine_id: str) -> int:
+        """Replica crash recovery: replay every request the dead engine
+        still holds a lease on.  Each re-enters the queue (head) with its
+        committed-token state recorded, so ``complete`` can verify the
+        replayed run reproduces the pre-crash tokens as a prefix and the
+        exactly-once guard rejects double completion.  Returns the number
+        of requests replayed."""
+        with self._lock:
+            reqs = [req for req, eng in self._leases.values()
+                    if eng == engine_id]
+            for req in reqs:
+                self.replayed[req.rid] = list(
+                    getattr(req, "committed", None) or [])
+                tr = getattr(req, "trace", None)
+                if tr is not None:
+                    req._prev_trace = tr
+                    tr.finish(crashed=True, engine=engine_id)
+                    req.trace = None
+            self._requeue_locked(reqs, reason="replayed")
+            if self.registry is not None and reqs:
+                self.registry.record_event(
+                    "router_replay", service=self.service,
+                    engine=engine_id, replayed=len(reqs))
+            return len(reqs)
 
     def pending_count(self) -> int:
         return len(self._pending)

@@ -157,6 +157,10 @@ class ServeRequest:
     # per-request trace (repro.obs.Trace), started by the router (or the
     # engine on direct submit) when a tracer is attached; trace_id == rid
     trace: Any = None
+    # committed-token state: aliased to the decode slot's tokens list at
+    # admit time, so the router sees exactly what the engine generated if
+    # the replica crashes and the request is replayed (no copy per token)
+    committed: Optional[List[int]] = None
 
 
 @dataclass
@@ -927,6 +931,7 @@ class ContinuousBatchingEngine:
                                                  engine=self.engine_id,
                                                  slot=slot)
                                   if req.trace is not None else None))
+            req.committed = st.tokens   # alias: crash-replay bookkeeping
             self._c_tokens.inc()
             self.registry.record_event("engine_admit", rid=req.rid,
                                        slot=slot, engine=self.engine_id)
@@ -1305,6 +1310,11 @@ class ContinuousBatchingEngine:
         device_s = queue_wait_s = 0.0
         execs = 0
         for c in self._step_completions:
+            # async EXECUTEs are only ever awaited via the token read's
+            # FIFO sync — surface their failures here instead of silently
+            # committing stale tokens
+            if c.done and c.error is not None:
+                raise c.error
             ph = c.phases or {}
             device_s += ph.get("device_s", 0.0)
             queue_wait_s += ph.get("queue_wait_s", 0.0)
@@ -1380,6 +1390,9 @@ class ContinuousBatchingEngine:
                 qsp.annotate(evacuated=True).end()
                 req._eng_queue_span = None
             if req.trace is not None:
+                # keep a handle for the router to span-link the
+                # post-requeue trace back to this one (recovery timeline)
+                req._prev_trace = req.trace
                 req.trace.finish(evacuated=True, engine=self.engine_id)
                 req.trace = None        # re-traced on resubmission
         self._active.clear()

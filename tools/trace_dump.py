@@ -59,6 +59,17 @@ def check(doc: dict) -> int:
     return 0
 
 
+def links_of(ev: dict) -> list:
+    """Cross-trace links carried on a root event (JSON-encoded in args)."""
+    raw = ev.get("args", {}).get("links")
+    if not raw:
+        return []
+    try:
+        return json.loads(raw)
+    except (TypeError, ValueError):
+        return []
+
+
 def print_tree(events: list) -> None:
     by_id = {ev["args"]["span_id"]: ev for ev in events}
     kids = defaultdict(list)
@@ -70,8 +81,14 @@ def print_tree(events: list) -> None:
     def walk(ev, depth):
         ms = ev.get("dur", 0) / 1000.0
         labels = {k: v for k, v in ev["args"].items()
-                  if k not in ("span_id", "parent_id", "trace_id")}
+                  if k not in ("span_id", "parent_id", "trace_id", "links")}
         print(f"  {'  ' * depth}{ev['name']:<28} {ms:10.3f} ms  {labels}")
+        # cross-trace links (recovery timeline): show which earlier trace
+        # this one continues, right under its root
+        for link in links_of(ev):
+            print(f"  {'  ' * (depth + 1)}"
+                  f"~~ {link.get('relation', 'follows')} trace "
+                  f"{link.get('trace_id')} ({link.get('name', '?')})")
         for child in kids.get(ev["args"]["span_id"], []):
             walk(child, depth + 1)
 
@@ -110,8 +127,14 @@ def main(argv=None) -> int:
     for tid, evs in sorted(groups.items(), key=lambda kv: str(kv[0])):
         root = min(evs, key=lambda e: e["ts"])
         dur_ms = root.get("dur", 0) / 1000.0
+        roots = [ev for ev in evs if ev["args"].get("parent_id") == 0]
+        link_note = ""
+        for r in roots:
+            for link in links_of(r):
+                link_note += (f"  ~~ {link.get('relation', 'follows')} "
+                              f"{link.get('trace_id')}")
         print(f"  {str(tid):<24} {root['name']:<16} "
-              f"{len(evs):4d} spans  {dur_ms:10.3f} ms")
+              f"{len(evs):4d} spans  {dur_ms:10.3f} ms{link_note}")
     return 0
 
 
