@@ -57,6 +57,7 @@ import numpy as np
 
 from benchmarks.common import emit
 from repro.configs import get_arch
+from repro.scaling.autoscaler import M_PREFIX_HIT_RATE
 from repro.core import FunkyCL, Monitor, SliceAllocator
 from repro.models import build_model
 from repro.obs import Tracer, export_chrome_trace
@@ -118,8 +119,8 @@ def run_naive(bundle, params, workload, prompt_len):
 
 
 def run_engine(workload, prompt_len, slots, max_new_cap, *, paged=True,
-               pool_pages=None, spec=None, tag="fig15-engine",
-               tracer=None):
+               pool_pages=None, spec=None, prefix_cache=False,
+               tag="fig15-engine", tracer=None):
     """Continuous-batching server through a real monitor; returns the
     engine (peak_active/preemptions/completed), the registry, and the
     busy-window seconds.  Requests flow router -> engine.pump so a tracer
@@ -133,7 +134,8 @@ def run_engine(workload, prompt_len, slots, max_new_cap, *, paged=True,
                                    prompt_len=prompt_len,
                                    max_new_tokens=max_new_cap, registry=reg,
                                    paged=paged, page_size=PAGE_SIZE,
-                                   pool_pages=pool_pages, spec=spec)
+                                   pool_pages=pool_pages, spec=spec,
+                                   prefix_cache=prefix_cache)
     eng.setup()        # compiles outside the timed window, like the baseline
     # one throwaway request warms the full admit/append/decode path (the
     # naive baseline gets the same steady-state treatment above)
@@ -148,6 +150,11 @@ def run_engine(workload, prompt_len, slots, max_new_cap, *, paged=True,
     eng.spec_iterations = eng.spec_lane_iterations = 0
     eng.spec_committed = 0
     eng.spec_offered_drafts = eng.spec_accepted_drafts = 0
+    # ... and the prefix-cache accounting (the warmup's miss would skew
+    # the emitted hit rate); its tree pages stay and are evicted LRU
+    # under admission pressure like any other cold entry
+    eng.prefix_hits = eng.prefix_partial_hits = eng.prefix_misses = 0
+    eng.prefix_prompt_tokens = eng.prefix_cached_tokens = 0
     gc.collect()
     gc.disable()        # no collector pauses inside the latency window
     # the router is the service frontend: arrivals land there and the
@@ -181,7 +188,28 @@ def p99(values):
     return float(np.percentile(np.asarray(values), 99))
 
 
-def main(smoke: bool = False, trace_out: str = None):
+def make_prefix_workload(n_requests: int, prompt_len: int,
+                         tokens_range: tuple, arrival_gap_s: float,
+                         groups: int = 3, seed: int = 11):
+    """Common-system-prompt mix: ``groups`` distinct prompts, each repeated
+    round-robin — every repeat is a full prefix hit for a sharing engine."""
+    rng = np.random.Generator(np.random.Philox(seed))
+    prompts = [rng.integers(0, 256, prompt_len).astype(np.int32)
+               for _ in range(groups)]
+    t = 0.0
+    out = []
+    for i in range(n_requests):
+        t += float(rng.exponential(arrival_gap_s))
+        out.append({
+            "rid": f"pfx-{i:03d}", "arrival_t": t,
+            "prompt": prompts[i % groups], "group": i % groups,
+            "n_tokens": int(rng.integers(*tokens_range)),
+        })
+    return out
+
+
+def main(smoke: bool = False, trace_out: str = None,
+         host_budget_us: float = None):
     # max_new_cap is the *server-side* per-request cap the reservation
     # baseline must provision for; actual generations (tokens_range) are
     # ragged and stop well short of it — the gap is what paging reclaims
@@ -249,6 +277,14 @@ def main(smoke: bool = False, trace_out: str = None):
          f"host_us_per_token={split['host_us_per_token']:.1f} "
          f"queue_wait_us={split['queue_wait_us_mean']:.1f} "
          f"tokens={split['tokens']} execs={split['execs']}")
+    if host_budget_us is not None \
+            and split["host_us_per_token"] > host_budget_us:
+        # trace-driven perf regression gate: host-side orchestration
+        # (batch assembly, page/prefix-tree bookkeeping, python glue)
+        # must not creep up under the device work
+        raise SystemExit(
+            f"host_us_per_token {split['host_us_per_token']:.1f} exceeds "
+            f"the --host-budget-us gate {host_budget_us:.1f}")
 
     if trace_out:
         export_chrome_trace(tracer, trace_out)
@@ -333,9 +369,79 @@ def main(smoke: bool = False, trace_out: str = None):
             f"throughput at equal pool bytes: {total_tokens / paged_busy:.1f}"
             f" vs {total_tokens / res_busy:.1f} tokens/s")
 
+    # ---------------------------------------------------------------
+    # Shared-prefix arm: a common-system-prompt workload at an identical
+    # pool byte budget, prefix cache off vs on.  With the cache, repeat
+    # prompts map the cached pages (zero admission pages, zero prefill
+    # compute), so TTFT collapses to the host-side tree walk and the same
+    # pool admits strictly more concurrent requests.
+    # ---------------------------------------------------------------
+    pfx_pool = 3 * prompt_len // PAGE_SIZE * 2     # tight: ~6 cold prompts
+    pfx = make_prefix_workload(n_req, prompt_len, tokens_range,
+                               arrival_gap, groups=2)
+    pfx_tokens = sum(w["n_tokens"] for w in pfx)
+    cold_eng, _, cold_busy = run_engine(
+        pfx, prompt_len, n_req, max_new_cap, paged=True,
+        pool_pages=pfx_pool, tag="fig15-nosharing")
+    assert len(cold_eng.completed) == n_req
+    warm_eng, warm_reg, warm_busy = run_engine(
+        pfx, prompt_len, n_req, max_new_cap, paged=True,
+        pool_pages=pfx_pool, prefix_cache=True, tag="fig15-sharing")
+    assert len(warm_eng.completed) == n_req
+    assert warm_eng.pool_bytes == cold_eng.pool_bytes
+    # bit-exactness within the sharing arm: every repeat of a prompt is a
+    # prefix hit and must stream the same greedy tokens as its group's
+    # cold-admitted leader (ragged lengths: shorter is a prefix)
+    by_group = {}
+    for w in pfx:
+        by_group.setdefault(w["group"], []).append(
+            list(warm_eng.completed[w["rid"]].tokens))
+    for g, streams in by_group.items():
+        ref = max(streams, key=len)
+        for s in streams:
+            if s != ref[:len(s)]:
+                raise SystemExit(
+                    f"prefix-hit stream diverged from cold leader in "
+                    f"group {g}: {s} vs {ref}")
+    cold_ttft = float(np.mean(
+        [rec.ttft_s for rec in cold_eng.completed.values()]))
+    warm_ttft = float(np.mean(
+        [rec.ttft_s for rec in warm_eng.completed.values()]))
+    pstats = warm_eng.prefix_stats()
+    gauge_hit = max((v for lbl, v in warm_reg.labeled_gauge_values(
+        M_PREFIX_HIT_RATE) if "engine" in lbl), default=0.0)
+    emit("fig15/prefix_nosharing", cold_busy * 1e6 / pfx_tokens,
+         f"mean_ttft={cold_ttft * 1e3:.1f}ms "
+         f"peak_active={cold_eng.peak_active} "
+         f"pool_bytes={cold_eng.pool_bytes} "
+         f"oom_preemptions={cold_eng.preemptions}")
+    emit("fig15/prefix_sharing", warm_busy * 1e6 / pfx_tokens,
+         f"mean_ttft={warm_ttft * 1e3:.1f}ms "
+         f"peak_active={warm_eng.peak_active} "
+         f"hit_rate={gauge_hit:.2f} hits={pstats['hits']} "
+         f"cow_copies={pstats['cow_copies']} "
+         f"evicted_pages={pstats['evicted_pages']} "
+         f"oom_preemptions={warm_eng.preemptions}")
+    emit("fig15/prefix_speedup", 0.0,
+         f"ttft={cold_ttft / max(warm_ttft, 1e-9):.2f}x "
+         f"concurrency={warm_eng.peak_active}/{cold_eng.peak_active}")
+    if not gauge_hit > 0:
+        raise SystemExit("sharing engine published no prefix_hit_rate")
+    if warm_ttft >= cold_ttft:
+        raise SystemExit(
+            f"prefix sharing did not collapse TTFT: {warm_ttft * 1e3:.1f} "
+            f"vs {cold_ttft * 1e3:.1f} ms mean")
+    if warm_eng.peak_active <= cold_eng.peak_active:
+        raise SystemExit(
+            "prefix sharing did not raise admitted concurrency at equal "
+            f"pool bytes: {warm_eng.peak_active} vs "
+            f"{cold_eng.peak_active}")
+
 
 if __name__ == "__main__":
     argv = sys.argv[1:]
     out = (argv[argv.index("--trace-out") + 1]
            if "--trace-out" in argv else None)
-    main(smoke="--smoke" in argv, trace_out=out)
+    budget = (float(argv[argv.index("--host-budget-us") + 1])
+              if "--host-budget-us" in argv else None)
+    main(smoke="--smoke" in argv, trace_out=out, host_budget_us=budget)

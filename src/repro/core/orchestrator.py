@@ -79,6 +79,11 @@ class Orchestrator:
         self.migration = MigrationController(self.metrics)
         self.deployments: Dict[str, Deployment] = {}
         self._sched_tasks: Dict[str, SchedTask] = {}
+        # straggler migrations in flight: cid -> the pre-migration trace,
+        # span-linked (relation="migrates") from the post-migration trace
+        # when the task lands again, mirroring the router's "recovers"
+        # links — trace_dump stitches evict and re-land into one story
+        self._pending_migrate_links: Dict[str, object] = {}
         self._image_programs: Dict[str, tuple] = {}   # image_ref -> programs
         self._cid_counter = itertools.count(1)
         self._lock = threading.RLock()
@@ -443,6 +448,17 @@ class Orchestrator:
                        on_retry=lambda n, b, e: self._on_action_retry(
                            a, sp, n, b, e))
             self._log(a.kind, cid=a.tid, node=a.node)
+            if a.kind in ("migrate", "resume"):
+                # the straggler landed again: close the migration loop
+                # with a span link from its post-trace back to the
+                # pre-eviction trace (relation="migrates")
+                pre = self._pending_migrate_links.pop(a.tid, None)
+                if pre is not None and self.tracer is not None:
+                    post = self.tracer.event_span(
+                        "orch.migrate_in", cid=a.tid, node=a.node,
+                        src_node=getattr(a, "src_node", None))
+                    post.link(pre, relation="migrates")
+                    post.finish()
         except TransientFault as e:
             # attempts exhausted: structured failure + requeue — the
             # scheduling loop must survive an unlucky streak
@@ -612,6 +628,12 @@ class Orchestrator:
                       median=d.median)
             if ssp is not None:
                 ssp.annotate(outcome="evicted", rate=d.rate).end()
+            if self.tracer is not None:
+                pre = self.tracer.event_span(
+                    "orch.migrate_out", cid=d.cid, node=st.node_id,
+                    rate=d.rate, median=d.median)
+                pre.finish()
+                self._pending_migrate_links[d.cid] = pre
             acted.append(d.cid)
         return acted
 

@@ -32,11 +32,12 @@ from repro.core.scheduler import (Action, FunkyScheduler, Policy, SchedTask,
                                   TaskState)
 from repro.core.traces import TraceJob
 from repro.scaling.autoscaler import (M_COMPLETIONS, M_KV_PAGES, M_LATENCY,
-                                      M_PREEMPTIONS, M_QUEUE_DEPTH,
-                                      M_REPLICAS, M_REPLICAS_SERIES,
-                                      M_REQUESTS, M_SLO_VIOLATIONS,
-                                      M_SPEC_ACCEPT_RATE, M_UTILIZATION,
-                                      Autoscaler, signals_from_registry)
+                                      M_PREEMPTIONS, M_PREFIX_HIT_RATE,
+                                      M_QUEUE_DEPTH, M_REPLICAS,
+                                      M_REPLICAS_SERIES, M_REQUESTS,
+                                      M_SLO_VIOLATIONS, M_SPEC_ACCEPT_RATE,
+                                      M_UTILIZATION, Autoscaler,
+                                      signals_from_registry)
 from repro.scaling.loadgen import ClosedLoopGen, Request
 from repro.scaling.metrics import MetricsRegistry
 
@@ -384,7 +385,8 @@ def spec_tokens_per_iteration(spec_k: int, accept_rate: float) -> float:
 
 def engine_service_model(ttft_s: float, tbt_s: float,
                          default_tokens: int = 8, *, spec_k: int = 0,
-                         spec_accept_rate: float = 0.0):
+                         spec_accept_rate: float = 0.0,
+                         prefix_hit_rate: float = 0.0):
     """Service-time function from engine-reported latencies.
 
     ``ttft_s``/``tbt_s`` come from the live engine's ``request_ttft_seconds``
@@ -399,13 +401,20 @@ def engine_service_model(ttft_s: float, tbt_s: float,
     ``spec_tokens_per_iteration`` tokens on average, so the per-token time
     shrinks by that factor.  (Calibrating ``tbt_s`` from a live speculative
     engine already folds the speedup in — leave them 0 then.)
+
+    ``prefix_hit_rate`` models a prefix cache: that fraction of prompt
+    tokens is served from cached KV pages instead of prefill compute, so
+    the time-to-first-token shrinks proportionally (TTFT is prefill-bound
+    for the short-generation serving mixes fig 14/15 replay).  Calibrate
+    it from the live drive loop's folded ``prefix_hit_rate`` gauge.
     """
     speedup = (spec_tokens_per_iteration(spec_k, spec_accept_rate)
                if spec_k > 0 else 1.0)
+    hit = min(max(prefix_hit_rate, 0.0), 1.0)
 
     def service_time(req: Request) -> float:
         n = req.n_tokens if getattr(req, "n_tokens", None) else default_tokens
-        return ttft_s + max(0, n - 1) * tbt_s / speedup
+        return ttft_s * (1.0 - hit) + max(0, n - 1) * tbt_s / speedup
     return service_time
 
 
@@ -430,6 +439,7 @@ class ServingSimulator:
                  service_time_fn=None,
                  kv_model: Optional[KVModelParams] = None,
                  spec_accept_rate: Optional[float] = None,
+                 prefix_hit_rate: Optional[float] = None,
                  trace: bool = False):
         self.params = params or ServingParams()
         self.autoscaler = autoscaler
@@ -439,6 +449,9 @@ class ServingSimulator:
         # as the canonical gauge so policies see the same signal shape the
         # live drive loop folds from per-engine gauges)
         self.spec_accept_rate = spec_accept_rate
+        # prefix-cache hit rate assumed by the service model (published as
+        # the canonical gauge, mirroring the live loop's service-mean fold)
+        self.prefix_hit_rate = prefix_hit_rate
         # default: the trace's pre-drawn exponential demand; engine-served
         # figures pass engine_service_model(...) instead
         self._service_time = service_time_fn or (lambda r: r.service_s)
@@ -515,6 +528,10 @@ class ServingSimulator:
             self.metrics.gauge(M_SPEC_ACCEPT_RATE,
                                service=self.service).set(
                 self.spec_accept_rate)
+        if self.prefix_hit_rate is not None:
+            self.metrics.gauge(M_PREFIX_HIT_RATE,
+                               service=self.service).set(
+                self.prefix_hit_rate)
         self._record_replicas()
 
     # -- event handlers ----------------------------------------------------

@@ -45,6 +45,10 @@ M_PREEMPTIONS = "engine_oom_preemptions_total"
 # from the live engine, folded to a service mean by the drive loop, and an
 # input to the simulator's speculative service model
 M_SPEC_ACCEPT_RATE = "spec_accept_rate"
+# prefix cache: prompt tokens served from cached KV pages / total prompt
+# tokens (0..1); per-engine from the live engine, folded to a service mean
+# by the drive loop, and an input to the simulator's TTFT model
+M_PREFIX_HIT_RATE = "prefix_hit_rate"
 
 
 @dataclass

@@ -31,7 +31,8 @@ from typing import Callable, Dict, List, Optional
 import numpy as np
 
 from repro.scaling.autoscaler import (M_COMPLETIONS, M_KV_FREE_PAGES,
-                                      M_KV_PAGES, M_LATENCY, M_QUEUE_DEPTH,
+                                      M_KV_PAGES, M_LATENCY,
+                                      M_PREFIX_HIT_RATE, M_QUEUE_DEPTH,
                                       M_REQUESTS, M_SLO_VIOLATIONS,
                                       M_SPEC_ACCEPT_RATE, M_UTILIZATION)
 from repro.scaling.loadgen import Request
@@ -73,6 +74,17 @@ class RequestRouter:
     once and served on its next pop, so preference never starves a
     replica; on ties every replica is preferred and the replicas' pump
     loops take turns (round-robin).
+
+    **Prefix-hit-aware routing**: engines with a prefix cache register a
+    probe (``register_prefix_probe``) that reports how many tokens of a
+    prompt their radix tree already holds.  A pop then prefers the
+    replica with the warmest matching prefix for the request at the head
+    of the queue — cached pages are mapped instead of recomputed, so
+    warm routing converts repeat prefixes into TTFT and pool-page wins.
+    Warmth is capped by free-page headroom: a warm replica whose pool has
+    fallen below half the best replica's free pages loses its preference
+    (hit-skew must not concentrate all traffic on one starving engine),
+    and the router falls back to the free-page load balance above.
     """
 
     def __init__(self, service: str = "svc", registry=None,
@@ -90,6 +102,8 @@ class RequestRouter:
         self._lock = threading.Lock()
         self._pending: deque = deque()
         self._deferred: set = set()     # engines already held back once
+        # engine_id -> prompt -> matched-token count (prefix-cache warmth)
+        self._prefix_probes: Dict[str, Callable] = {}
         # every popped request holds a lease (rid -> (req, engine_id))
         # until the owning engine completes or requeues it; a replica
         # crash replays exactly its leased requests (fail_engine)
@@ -123,18 +137,55 @@ class RequestRouter:
         if self.registry is not None:
             self.registry.counter(M_REQUESTS, service=self.service).inc()
 
+    def register_prefix_probe(self, engine_id: str, probe: Callable) -> None:
+        """Install a replica's prefix-cache warmth probe:
+        ``probe(prompt) -> matched token count``.  Engines with a prefix
+        cache call this from ``pump``; idempotent."""
+        with self._lock:
+            self._prefix_probes[engine_id] = probe
+
+    def _free_pages(self) -> Dict[str, float]:
+        if self.registry is None:
+            return {}
+        return {lbl["engine"]: v for lbl, v in
+                self.registry.labeled_gauge_values(
+                    M_KV_FREE_PAGES, service=self.service)
+                if "engine" in lbl}
+
     def _kv_preferred(self, engine_id: str) -> bool:
         """True unless another engine publishes strictly more free pages
         (unknown engines and registry-less routers are always preferred)."""
-        if self.registry is None:
-            return True
-        per_engine = {lbl["engine"]: v for lbl, v in
-                      self.registry.labeled_gauge_values(
-                          M_KV_FREE_PAGES, service=self.service)
-                      if "engine" in lbl}
+        per_engine = self._free_pages()
         if not per_engine or engine_id not in per_engine:
             return True
         return per_engine[engine_id] >= max(per_engine.values())
+
+    def _preferred(self, engine_id: str) -> bool:
+        """Routing preference for the request at the head of the queue:
+        warmest matching prefix first (capped by free-page headroom so
+        hit-skew cannot starve the cold replicas), free KV pages as the
+        load-balance fallback."""
+        if self._prefix_probes:
+            head = self._pending[0]
+            warmth = {}
+            for eid, probe in self._prefix_probes.items():
+                try:
+                    warmth[eid] = int(probe(head.prompt))
+                except Exception:  # noqa: BLE001 - replica mid-evacuation
+                    warmth[eid] = 0
+            best = max(warmth.values(), default=0)
+            if best > 0:
+                warm = {e for e, w in warmth.items() if w == best}
+                free = self._free_pages()
+                if free:
+                    # headroom cap: a warm replica running low on pages
+                    # loses its preference — admitting there would trade
+                    # the prefill saving for OOM preemptions
+                    bar = max(free.values()) / 2.0
+                    warm = {e for e in warm if free.get(e, bar) >= bar}
+                if warm:
+                    return engine_id in warm
+        return self._kv_preferred(engine_id)
 
     def pop(self, n: int, engine_id: Optional[str] = None) -> list:
         if n <= 0:
@@ -143,7 +194,7 @@ class RequestRouter:
             self.chaos.maybe_delay("router.pop", key=engine_id or "")
         with self._lock:
             if (self.kv_aware and engine_id is not None and self._pending
-                    and not self._kv_preferred(engine_id)):
+                    and not self._preferred(engine_id)):
                 if engine_id not in self._deferred:
                     self._deferred.add(engine_id)
                     return []
@@ -219,6 +270,7 @@ class RequestRouter:
         exactly-once guard rejects double completion.  Returns the number
         of requests replayed."""
         with self._lock:
+            self._prefix_probes.pop(engine_id, None)
             reqs = [req for req, eng in self._leases.values()
                     if eng == engine_id]
             for req in reqs:
@@ -344,6 +396,15 @@ def drive_engine_open_loop(orch, scaler, requests: List[Request], *,
         if sv:
             reg.gauge(M_SPEC_ACCEPT_RATE, service=service).set(
                 sum(sv) / len(sv))
+        # prefix-cache hit rate: same NaN-skipping service mean — an
+        # efficiency signal the simulator's TTFT model consumes
+        px_key = metric_key(M_PREFIX_HIT_RATE, {"service": service})
+        pv = [v for k2, v in
+              reg.gauge_values(M_PREFIX_HIT_RATE, service=service).items()
+              if k2 != px_key and not np.isnan(v)]
+        if pv:
+            reg.gauge(M_PREFIX_HIT_RATE, service=service).set(
+                sum(pv) / len(pv))
         if on_tick is not None and now - last_report >= 1.0:
             last_report = now
             on_tick(now, n_rep, router.pending_count(),

@@ -86,8 +86,9 @@ from repro.core.programs import Program
 from repro.models.attention import _INVALID_POS
 from repro.scaling.autoscaler import (M_COMPLETIONS, M_KV_FREE_PAGES,
                                       M_KV_PAGES, M_PREEMPTIONS,
-                                      M_QUEUE_DEPTH, M_SLO_VIOLATIONS,
-                                      M_SPEC_ACCEPT_RATE, M_UTILIZATION)
+                                      M_PREFIX_HIT_RATE, M_QUEUE_DEPTH,
+                                      M_SLO_VIOLATIONS, M_SPEC_ACCEPT_RATE,
+                                      M_UTILIZATION)
 from repro.scaling.metrics import MetricsRegistry
 from repro.serve.kvcache import (BlockPool, _is_pos_leaf, cache_bytes,
                                  compact_pool, extract_written_page,
@@ -95,6 +96,7 @@ from repro.serve.kvcache import (BlockPool, _is_pos_leaf, cache_bytes,
                                  pool_specs_from_lane_cache, scatter_pages,
                                  scatter_prefill, scrub_pages,
                                  token_axes_from_lengths)
+from repro.serve.prefix_cache import PrefixCache
 
 # Canonical per-request serving metrics (one schema across planes).
 M_TTFT = "request_ttft_seconds"
@@ -212,6 +214,8 @@ class ContinuousBatchingEngine:
                  reserve_pages: int = 1,
                  prompt_buckets: Optional[Sequence[int]] = None,
                  spec: Optional[SpecConfig] = None,
+                 prefix_cache: bool = False,
+                 prefix_cache_max_nodes: int = 4096,
                  auto_compact_frag: Optional[float] = 0.5,
                  auto_compact_min_pages: int = 4,
                  tracer: Any = None):
@@ -281,6 +285,21 @@ class ContinuousBatchingEngine:
                     f"{self.pool_pages}-page pool (admission would starve)")
             self.pool = BlockPool(self.pool_pages, page_size,
                                   reserve_pages=reserve_pages)
+            if prefix_cache:
+                # page-granular sharing needs every prompt bucket to land
+                # on a page boundary: nodes key whole pages, and the
+                # chunked prefill writes exactly one page per EXECUTE
+                bad = [b for b in self.buckets if b % page_size]
+                if bad:
+                    raise ValueError(
+                        f"prefix_cache needs page-aligned prompt buckets; "
+                        f"{bad} not divisible by page_size {page_size}")
+                self.prefix = PrefixCache(
+                    self.pool, page_size,
+                    max_nodes=prefix_cache_max_nodes)
+            else:
+                self.prefix = None
+            self._prefix_max_nodes = prefix_cache_max_nodes
             # paged prefill writes exactly the prompt (margin 0); decode
             # headroom comes from pages appended at token granularity
             self.bundle = build_model(self.cfg, cache_margin=0)
@@ -305,6 +324,10 @@ class ContinuousBatchingEngine:
             if prompt_buckets:
                 raise ValueError("prompt buckets need paged=True (dense "
                                  "lanes are compiled to one prompt_len)")
+            if prefix_cache:
+                raise ValueError("prefix_cache needs paged=True (sharing "
+                                 "maps pool pages through block tables)")
+            self.prefix = None
             self.buckets = (prompt_len,)
             self.prompt_len = prompt_len
             # cache capacity = prompt_len + max_new_tokens: prefill reserves
@@ -362,6 +385,9 @@ class ContinuousBatchingEngine:
                 self._g_spec_k = self.registry.gauge(
                     M_SPEC_K, service=service, engine=engine_id)
                 self._g_spec_k.set(self.spec_k_now)
+            if self.prefix is not None:
+                self._g_prefix = self.registry.gauge(
+                    M_PREFIX_HIT_RATE, service=service, engine=engine_id)
 
         self.pending: deque = deque()
         self._free: List[int] = list(range(slots))
@@ -373,6 +399,13 @@ class ContinuousBatchingEngine:
         self.peak_active = 0                # max concurrent in-flight lanes
         self.preemptions = 0
         self.auto_compactions = 0
+        # prefix-cache accounting (all zero when the cache is off)
+        self.prefix_hits = 0                # full-prompt hits (no prefill)
+        self.prefix_partial_hits = 0        # suffix-only prefills
+        self.prefix_misses = 0
+        self.prefix_prompt_tokens = 0       # padded prompt tokens admitted
+        self.prefix_cached_tokens = 0       # of those, served from cache
+        self.cow_copies = 0                 # shared pages privatized
         # speculative-decode accounting (all zero when spec is off)
         self.spec_iterations = 0            # verify EXECUTEs issued
         self.spec_lane_iterations = 0       # active-lane verify passes
@@ -483,33 +516,89 @@ class ContinuousBatchingEngine:
         self._register(cl, "init_paged", init_paged, ())
         slot_abs = jnp.int32(0)
         # one lookahead can append several pages per lane, so the scrub
-        # vector is sized for the worst-case per-iteration page growth
+        # vector is sized for the worst-case per-iteration page growth —
+        # and, with the prefix cache, for a whole prompt's fresh suffix
+        # pages scrubbed in one EXECUTE before the chunked prefill
         self._scrub_width = B * (self.spec_k // ps + 2)
+        if self.prefix is not None:
+            self._scrub_width = max(self._scrub_width, self.prompt_len // ps)
         ids_abs = jax.ShapeDtypeStruct((self._scrub_width,), jnp.int32)
         np_abs = jax.ShapeDtypeStruct((NP,), jnp.int32)
-        for P, (prompt_abs, pf_tok_abs, pf_cache_abs) in pf_abs.items():
-            self._register(cl, f"prefill_{P}", prefill_one,
-                           (params_abs, prompt_abs))
-            n_pp = self.pool.pages_for_tokens(P)
+        if self.prefix is None:
+            for P, (prompt_abs, pf_tok_abs, pf_cache_abs) in pf_abs.items():
+                self._register(cl, f"prefill_{P}", prefill_one,
+                               (params_abs, prompt_abs))
+                n_pp = self.pool.pages_for_tokens(P)
 
-            def admit(toks, pos, pool, pf_tok, pf_cache, slot, page_ids,
-                      P=P):
+                def admit(toks, pos, pool, pf_tok, pf_cache, slot, page_ids,
+                          P=P):
+                    slot = jnp.asarray(slot, jnp.int32)
+                    toks = jax.lax.dynamic_update_slice(
+                        toks, pf_tok[:, None], (slot, jnp.int32(0)))
+                    pos = jax.lax.dynamic_update_slice(
+                        pos, jnp.full((1,), P, jnp.int32), (slot,))
+                    pool = scatter_prefill(pool, page_ids, pf_cache,
+                                           token_axes, page_size=ps,
+                                           prompt_len=P)
+                    return toks, pos, pool
+
+                pp_abs = jax.ShapeDtypeStruct((n_pp,), jnp.int32)
+                self._register(
+                    cl, f"admit_{P}", admit,
+                    (toks_abs, pos_abs, pool_abs, pf_tok_abs, pf_cache_abs,
+                     slot_abs, pp_abs),
+                    donate_argnums=(0, 1, 2))
+        else:
+            # Prefix-cache mode replaces the fused per-bucket prefill with
+            # ONE page-granular chunk program shared by every bucket: each
+            # EXECUTE feeds page ``lp``'s tokens sequentially through the
+            # decode step over the lane's gathered cache and scatters
+            # exactly that page back.  Cold admissions run every chunk; a
+            # prefix hit skips the covered ones — and because hit and cold
+            # paths run the *same* compiled program over the same inputs,
+            # prefix-hit decode is bit-exact vs. a cold run by
+            # construction (sequential decode is NOT bitwise identical to
+            # fused prefill, so mixing the two paths would break the
+            # equivalence gate).
+            pf_tok_abs = pf_abs[self.prompt_len][1]
+            chunk_abs = jax.ShapeDtypeStruct((ps,), jnp.int32)
+            row_abs = jax.ShapeDtypeStruct((max_blocks,), jnp.int32)
+
+            def prefill_chunk(params, pool, chunk_toks, lp, bt_row):
+                lp = jnp.asarray(lp, jnp.int32)
+                cache = gather_lane_cache(pool, bt_row, token_axes,
+                                          page_size=ps)
+                pos0 = lp * jnp.int32(ps)
+                logits = None
+                for i in range(ps):
+                    logits, cache = bundle.decode_fn(
+                        params, chunk_toks[i][None],
+                        pos0 + jnp.int32(i), cache)
+                tok = jnp.argmax(logits, -1).astype(jnp.int32)
+                page = extract_written_page(cache, lp, token_axes,
+                                            page_size=ps)
+                phys = bt_row[lp][None]
+                pool = scatter_pages(pool, phys,
+                                     jax.tree.map(lambda x: x[None], page))
+                return tok, pool
+
+            self._register(cl, "prefill_chunk", prefill_chunk,
+                           (params_abs, pool_abs, chunk_abs, slot_abs,
+                            row_abs),
+                           donate_argnums=(1,))
+
+            def admit_tok(toks, pos, pf_tok, slot, p_end):
                 slot = jnp.asarray(slot, jnp.int32)
                 toks = jax.lax.dynamic_update_slice(
                     toks, pf_tok[:, None], (slot, jnp.int32(0)))
                 pos = jax.lax.dynamic_update_slice(
-                    pos, jnp.full((1,), P, jnp.int32), (slot,))
-                pool = scatter_prefill(pool, page_ids, pf_cache,
-                                       token_axes, page_size=ps,
-                                       prompt_len=P)
-                return toks, pos, pool
+                    pos, jnp.asarray(p_end, jnp.int32)[None], (slot,))
+                return toks, pos
 
-            pp_abs = jax.ShapeDtypeStruct((n_pp,), jnp.int32)
-            self._register(
-                cl, f"admit_{P}", admit,
-                (toks_abs, pos_abs, pool_abs, pf_tok_abs, pf_cache_abs,
-                 slot_abs, pp_abs),
-                donate_argnums=(0, 1, 2))
+            self._register(cl, "admit_tok", admit_tok,
+                           (toks_abs, pos_abs, pf_tok_abs, slot_abs,
+                            slot_abs),
+                           donate_argnums=(0, 1))
         self._register(cl, "scrub", scrub, (pool_abs, ids_abs),
                        donate_argnums=(0,))
         self._register(cl, "compact_pool", compact,
@@ -528,8 +617,15 @@ class ContinuousBatchingEngine:
             cl.clCreateBuffer("kv_pool", pool_abs, paged=True)
             cl.clCreateBuffer("pf_tok", pf_abs[self.prompt_len][1])
             for P, (prompt_abs, _, pf_cache_abs) in pf_abs.items():
-                cl.clCreateBuffer(f"pf_prompt_{P}", prompt_abs)
-                cl.clCreateBuffer(f"pf_cache_{P}", pf_cache_abs)
+                # chunked (prefix-cache) admission takes its tokens as
+                # const args and scatters pages directly, so the staging
+                # prompt/cache buffers only exist for the fused path —
+                # except the prompt buffer, which the draft prefill of a
+                # speculative engine still reads
+                if self.prefix is None or self.spec is not None:
+                    cl.clCreateBuffer(f"pf_prompt_{P}", prompt_abs)
+                if self.prefix is None:
+                    cl.clCreateBuffer(f"pf_cache_{P}", pf_cache_abs)
             cl.clEnqueueKernel("init_params", (), ("params",),
                                const_args=(self.seed,))
             cl.clEnqueueKernel("init_paged", (),
@@ -851,7 +947,45 @@ class ContinuousBatchingEngine:
             bucket = self._pick_bucket(
                 np.asarray(req.prompt).reshape(-1).shape[0])
             page_ids = None
-            if self.paged:
+            padded = None
+            match = None
+            if self.paged and self.prefix is not None:
+                padded = self._pad_prompt(req.prompt, bucket)
+                n_pp = self.pool.pages_for_tokens(bucket)
+                match = self.prefix.match(bucket, padded.reshape(-1))
+                if len(match.pages) == n_pp and match.next_token is None:
+                    # every page matched but the continuation after the
+                    # prompt is unknown (pages donated at retire without a
+                    # following token) — recompute the last chunk so its
+                    # argmax yields the first token
+                    match.pages.pop()
+                    match.tokens -= self.page_size
+                need = n_pp - len(match.pages)
+                if not self.pool.can_admit(need):
+                    # admission pressure: reclaim cold cache (LRU
+                    # subtrees) before refusing — the match just bumped
+                    # its own pages' recency, so they are evicted last
+                    short = (need + self.pool.reserve_pages
+                             - self.pool.free_count())
+                    if short > 0:
+                        self.prefix.evict_pages(short)
+                    if not self.pool.can_admit(need):
+                        break
+                    # eviction ran: re-match against the surviving tree
+                    match = self.prefix.match(bucket, padded.reshape(-1))
+                    if (len(match.pages) == n_pp
+                            and match.next_token is None):
+                        match.pages.pop()
+                        match.tokens -= self.page_size
+                    need = n_pp - len(match.pages)
+                    if not self.pool.can_admit(need):
+                        break
+                new_ids = self.pool.alloc(need) if need else []
+                if new_ids is None:
+                    break
+                self.pool.share(match.pages)    # this lane's references
+                page_ids = list(match.pages) + [int(p) for p in new_ids]
+            elif self.paged:
                 n_pp = self.pool.pages_for_tokens(bucket)
                 if not self.pool.can_admit(n_pp):
                     break               # memory-based admission gate
@@ -865,43 +999,48 @@ class ContinuousBatchingEngine:
             adm = (req.trace.span("engine.admit", engine=self.engine_id,
                                   slot=slot, bucket=bucket)
                    if req.trace is not None else None)
-            self._write(f"pf_prompt_{bucket}",
-                        self._pad_prompt(req.prompt, bucket), span=adm)
-            self._exec(f"prefill_{bucket}",
-                       ("params", f"pf_prompt_{bucket}"),
-                       ("pf_tok", f"pf_cache_{bucket}"), span=adm)
-            if self.paged:
-                self._exec(
-                    f"admit_{bucket}",
-                    ("toks", "pos", "kv_pool", "pf_tok",
-                     f"pf_cache_{bucket}"),
-                    ("toks", "pos", "kv_pool"),
-                    const_args=(np.int32(slot),
-                                np.asarray(page_ids, np.int32)),
-                    donate=True,
-                    dirty_pages={"kv_pool": tuple(page_ids)}, span=adm)
-                self._bt_host[slot, :] = -1
-                self._bt_host[slot, :len(page_ids)] = page_ids
-                self._bt_dirty = True
-                if self.spec is not None:
-                    self._exec(
-                        f"draft_prefill_{bucket}",
-                        ("draft_params", f"pf_prompt_{bucket}"),
-                        (f"pf_draft_cache_{bucket}",), span=adm)
-                    self._exec(
-                        f"admit_draft_{bucket}",
-                        ("draft_caches", f"pf_draft_cache_{bucket}"),
-                        ("draft_caches",),
-                        const_args=(np.int32(slot),), donate=True,
-                        span=adm)
+            if self.paged and self.prefix is not None:
+                first_tok = self._admit_prefix(req, bucket, padded, match,
+                                               page_ids, slot, adm)
             else:
-                self._exec(
-                    "admit_slot",
-                    ("toks", "pos", "caches", "pf_tok",
-                     f"pf_cache_{bucket}"),
-                    ("toks", "pos", "caches"),
-                    const_args=(np.int32(slot),), donate=True, span=adm)
-            first_tok = int(np.asarray(self._read("pf_tok", span=adm))[0])
+                self._write(f"pf_prompt_{bucket}",
+                            self._pad_prompt(req.prompt, bucket), span=adm)
+                self._exec(f"prefill_{bucket}",
+                           ("params", f"pf_prompt_{bucket}"),
+                           ("pf_tok", f"pf_cache_{bucket}"), span=adm)
+                if self.paged:
+                    self._exec(
+                        f"admit_{bucket}",
+                        ("toks", "pos", "kv_pool", "pf_tok",
+                         f"pf_cache_{bucket}"),
+                        ("toks", "pos", "kv_pool"),
+                        const_args=(np.int32(slot),
+                                    np.asarray(page_ids, np.int32)),
+                        donate=True,
+                        dirty_pages={"kv_pool": tuple(page_ids)}, span=adm)
+                    self._bt_host[slot, :] = -1
+                    self._bt_host[slot, :len(page_ids)] = page_ids
+                    self._bt_dirty = True
+                    if self.spec is not None:
+                        self._exec(
+                            f"draft_prefill_{bucket}",
+                            ("draft_params", f"pf_prompt_{bucket}"),
+                            (f"pf_draft_cache_{bucket}",), span=adm)
+                        self._exec(
+                            f"admit_draft_{bucket}",
+                            ("draft_caches", f"pf_draft_cache_{bucket}"),
+                            ("draft_caches",),
+                            const_args=(np.int32(slot),), donate=True,
+                            span=adm)
+                else:
+                    self._exec(
+                        "admit_slot",
+                        ("toks", "pos", "caches", "pf_tok",
+                         f"pf_cache_{bucket}"),
+                        ("toks", "pos", "caches"),
+                        const_args=(np.int32(slot),), donate=True, span=adm)
+                first_tok = int(np.asarray(self._read("pf_tok",
+                                                      span=adm))[0])
             if adm is not None:
                 adm.end()
             if self.spec is not None:
@@ -942,6 +1081,78 @@ class ContinuousBatchingEngine:
                 self._active[slot] = st
         return admitted
 
+    def _admit_prefix(self, req, bucket, padded, match, page_ids, slot,
+                      adm) -> int:
+        """Admission over the prefix cache: map the matched pages, chunk-
+        prefill only the uncovered suffix.  A full-prompt match skips
+        device compute entirely — the tree's stored greedy continuation IS
+        the first token, delivered host-side while the (tiny) lane-state
+        update rides the queue.  Finally the prompt's pages are donated to
+        the tree so same-prefix requests (including this request's own OOM
+        recompute) hit."""
+        ps = self.page_size
+        n_pp = len(page_ids)
+        flat = padded.reshape(-1)
+        n_hit = len(match.pages)
+        full_hit = n_hit == n_pp and match.next_token is not None
+        self._bt_host[slot, :] = -1
+        self._bt_host[slot, :n_pp] = page_ids
+        self._bt_dirty = True
+        self.prefix_prompt_tokens += bucket
+        self.prefix_cached_tokens += bucket if full_hit else n_hit * ps
+        if full_hit:
+            self.prefix_hits += 1
+            first_tok = int(match.next_token)
+            self._write("pf_tok", np.asarray([first_tok], np.int32),
+                        span=adm)
+            if adm is not None:
+                adm.annotate(prefix_hit="full", cached_pages=n_hit)
+        else:
+            self.prefix_partial_hits += 1 if n_hit else 0
+            self.prefix_misses += 0 if n_hit else 1
+            new_ids = page_ids[n_hit:]
+            # §3.4 freed-memory zeroing: the chunk gather must see INVALID
+            # positions in the fresh suffix pages, never a previous
+            # owner's tokens
+            ids = np.full((self._scrub_width,), self.pool_pages, np.int32)
+            ids[:len(new_ids)] = new_ids
+            self._exec("scrub", ("kv_pool",), ("kv_pool",),
+                       const_args=(ids,), donate=True,
+                       dirty_pages={"kv_pool": tuple(new_ids)}, span=adm)
+            row = self._bt_host[slot].copy()
+            for c in range(n_hit, n_pp):
+                self._exec(
+                    "prefill_chunk", ("params", "kv_pool"),
+                    ("pf_tok", "kv_pool"),
+                    const_args=(flat[c * ps:(c + 1) * ps].astype(np.int32),
+                                np.int32(c), row),
+                    donate=True,
+                    dirty_pages={"kv_pool": (int(page_ids[c]),)},
+                    span=adm)
+            first_tok = None
+            if adm is not None:
+                adm.annotate(prefix_hit="partial" if n_hit else "miss",
+                             cached_pages=n_hit, chunks=n_pp - n_hit)
+        self._exec("admit_tok", ("toks", "pos", "pf_tok"),
+                   ("toks", "pos"),
+                   const_args=(np.int32(slot), np.int32(bucket)),
+                   donate=True, span=adm)
+        if self.spec is not None:
+            # the draft lane has no paging: its dense prefill always runs
+            # in full (throughput only — draft state never changes tokens)
+            self._write(f"pf_prompt_{bucket}", padded, span=adm)
+            self._exec(f"draft_prefill_{bucket}",
+                       ("draft_params", f"pf_prompt_{bucket}"),
+                       (f"pf_draft_cache_{bucket}",), span=adm)
+            self._exec(f"admit_draft_{bucket}",
+                       ("draft_caches", f"pf_draft_cache_{bucket}"),
+                       ("draft_caches",),
+                       const_args=(np.int32(slot),), donate=True, span=adm)
+        if first_tok is None:
+            first_tok = int(np.asarray(self._read("pf_tok", span=adm))[0])
+        self.prefix.insert(bucket, flat, page_ids, first_tok)
+        return first_tok
+
     def _retire(self, st: _SlotState, now: float) -> None:
         rec = CompletedRequest(
             rid=st.req.rid, tokens=st.tokens, arrival_t=st.req.arrival_t,
@@ -952,7 +1163,27 @@ class ContinuousBatchingEngine:
         self._active.pop(st.slot, None)
         heapq.heappush(self._free, st.slot)
         if self.paged:
-            # pages return to the pool the moment the request retires; the
+            if self.prefix is not None and st.blocks:
+                # donate every fully *committed* page (prompt + generated)
+                # to the tree before dropping the lane's references: a
+                # later request sharing this sequence as its prompt prefix
+                # maps the pages instead of recomputing them.  The page
+                # holding positions >= pos is excluded — it may hold
+                # rejected speculative writes past the commit horizon.
+                ps = self.page_size
+                flat = self._pad_prompt(st.req.prompt,
+                                        st.bucket).reshape(-1)
+                full = np.concatenate(
+                    [flat, np.asarray(st.tokens, np.int32)])
+                n_complete = min(st.pos // ps, len(st.blocks))
+                if n_complete:
+                    nxt = (int(full[n_complete * ps])
+                           if n_complete * ps < len(full) else None)
+                    self.prefix.insert(st.bucket,
+                                       full[:n_complete * ps],
+                                       st.blocks[:n_complete], nxt)
+            # the lane's references return to the pool the moment the
+            # request retires (pages the prefix cache pinned survive); the
             # cleared row deactivates the lane for the next decode gather
             self.pool.free(st.blocks)
             self._bt_host[st.slot, :] = -1
@@ -998,6 +1229,53 @@ class ContinuousBatchingEngine:
             st.req._eng_queue_span = st.req.trace.span(
                 "engine.queue", engine=self.engine_id, requeued=True)
 
+    def _alloc_urgent(self) -> Optional[List[int]]:
+        """One-page urgent allocation; when the pool is dry, cold prefix
+        cache is reclaimed before the caller escalates to preemption —
+        dropping cached pages never costs a running request its work."""
+        got = self.pool.alloc(1, urgent=True)
+        if got is None and self.prefix is not None \
+                and self.prefix.evict_pages(1):
+            got = self.pool.alloc(1, urgent=True)
+        return got
+
+    def _cow_pages(self, st: _SlotState, lp_first: int,
+                   lp_last: int) -> bool:
+        """Privatize shared pages in the lane's write window [lp_first,
+        lp_last]: allocate a fresh page, copy the shared page's bytes
+        on-device (the copy is reported newly dirty so evict/checkpoint
+        stays crash-consistent), swap the block-table entry, and drop this
+        lane's shared reference.  Returns False if the lane preempted
+        itself acquiring the copy."""
+        for lp in range(lp_first, min(lp_last + 1, len(st.blocks))):
+            old = st.blocks[lp]
+            if self.pool.refcount(old) <= 1:
+                continue
+            got = self._alloc_urgent()
+            while got is None:
+                victim = self._pick_victim()
+                self._preempt(victim)
+                if victim is st:
+                    return False
+                got = self._alloc_urgent()
+            new = got[0]
+            src = np.full((self.pool_pages,), self.pool_pages, np.int32)
+            dst = np.full((self.pool_pages,), self.pool_pages, np.int32)
+            src[0], dst[0] = old, new
+            self._exec("compact_pool", ("kv_pool",), ("kv_pool",),
+                       const_args=(src, dst), donate=True,
+                       dirty_pages={"kv_pool": (new,)},
+                       span=self._it_root)
+            self.pool.free([old])       # drop this lane's shared reference
+            st.blocks[lp] = new
+            self._bt_host[st.slot, lp] = new
+            self._bt_dirty = True
+            self.cow_copies += 1
+            self.registry.record_event("engine_cow", rid=st.req.rid,
+                                       slot=st.slot, page_from=old,
+                                       page_to=new, engine=self.engine_id)
+        return True
+
     def _append_pages(self) -> None:
         """Token-granularity growth: map the page(s) each lane's next write
         window lands in — one page for plain decode, up to the ``k+1``-token
@@ -1013,17 +1291,24 @@ class ContinuousBatchingEngine:
             span_tok = (1 if self.spec is None
                         else min(self.spec_k_now + 1,
                                  st.limit - len(st.tokens)))
+            lp_first = st.pos // self.page_size
             lp_last = (st.pos + span_tok - 1) // self.page_size
+            # copy-on-write guard: a mapped page inside the imminent write
+            # window that is still shared (prefix cache / another lane)
+            # gets a private copy before any write can land in it
+            if self.prefix is not None and not self._cow_pages(
+                    st, lp_first, lp_last):
+                continue                # st preempted itself during COW
             dead = False
             for lp in range(len(st.blocks), lp_last + 1):
-                got = self.pool.alloc(1, urgent=True)
+                got = self._alloc_urgent()
                 while got is None:
                     victim = self._pick_victim()
                     self._preempt(victim)
                     if victim is st:
                         dead = True     # st preempted itself: all freed
                         break
-                    got = self.pool.alloc(1, urgent=True)
+                    got = self._alloc_urgent()
                 if dead:
                     break
                 assert lp == len(st.blocks), (lp, st.blocks)
@@ -1065,6 +1350,10 @@ class ContinuousBatchingEngine:
             for st in self._active.values():
                 st.blocks = [mapping.get(p, p) for p in st.blocks]
                 self._bt_host[st.slot, :len(st.blocks)] = st.blocks
+            if self.prefix is not None:
+                # share-aware compaction: every owner of a moved page is
+                # remapped from the same mapping — lanes above, tree here
+                self.prefix.remap(mapping)
             self._bt_dirty = True
         return {"moved": len(mapping), "span": self.pool.used_span()}
 
@@ -1227,6 +1516,31 @@ class ContinuousBatchingEngine:
             "accept_rate": self.spec_accepted_drafts / offered,
         }
 
+    def prefix_stats(self) -> dict:
+        """Prefix-cache effectiveness (zeros when the cache is off)."""
+        out = {"hits": self.prefix_hits,
+               "partial_hits": self.prefix_partial_hits,
+               "misses": self.prefix_misses,
+               "prompt_tokens": self.prefix_prompt_tokens,
+               "cached_tokens": self.prefix_cached_tokens,
+               "hit_rate": (self.prefix_cached_tokens
+                            / max(self.prefix_prompt_tokens, 1)),
+               "cow_copies": self.cow_copies}
+        if self.prefix is not None:
+            out.update(self.prefix.stats())
+        return out
+
+    def prefix_match_len(self, prompt) -> int:
+        """Router probe: how many of this prompt's (padded) tokens the
+        engine's tree would serve from cache.  Read-only and lock-guarded,
+        so any router thread may call it against any replica."""
+        if self.prefix is None:
+            return 0
+        bucket = self._pick_bucket(
+            np.asarray(prompt).reshape(-1).shape[0])
+        padded = self._pad_prompt(prompt, bucket).reshape(-1)
+        return self.prefix.match_len(bucket, padded)
+
     # -- one iteration ---------------------------------------------------
     def step(self) -> dict:
         """One engine iteration; returns counts for the caller's pacing.
@@ -1350,7 +1664,17 @@ class ContinuousBatchingEngine:
             self._g_util.set(len(self._active) / self.slots)
             if self.paged:
                 self._g_kv.set(self.pool.occupancy())
-                self._g_kv_free.set(self.pool.free_count())
+                if self.prefix is not None:
+                    # tree-only pages are one eviction away from free:
+                    # advertising them keeps KV-aware routing from
+                    # penalizing a warm cache as memory pressure
+                    self._g_kv_free.set(self.pool.free_count()
+                                        + self.prefix.reclaimable_pages())
+                    if self.prefix_prompt_tokens:
+                        self._g_prefix.set(self.prefix_cached_tokens
+                                           / self.prefix_prompt_tokens)
+                else:
+                    self._g_kv_free.set(self.pool.free_count())
         return {"admitted": admitted, "decoded": decoded,
                 "active": len(self._active), "pending": len(self.pending)}
 
@@ -1402,6 +1726,12 @@ class ContinuousBatchingEngine:
         if self.paged:
             self.pool = BlockPool(self.pool_pages, self.page_size,
                                   reserve_pages=self.pool.reserve_pages)
+            if self.prefix is not None:
+                # the old pool (and every tree reference into it) dies
+                # with the evacuation; the index restarts cold
+                self.prefix = PrefixCache(
+                    self.pool, self.page_size,
+                    max_nodes=self._prefix_max_nodes)
             self._bt_host[:] = -1
             self._bt_dirty = True
             self._first_token.clear()
@@ -1420,6 +1750,8 @@ class ContinuousBatchingEngine:
                 if self.spec is not None:
                     self._g_spec.set(float("nan"))
                     self._g_spec_k.set(float("nan"))   # same tombstone rule
+                if self.prefix is not None:
+                    self._g_prefix.set(float("nan"))   # same tombstone rule
         return reqs
 
     def run_until_drained(self, max_iterations: int = 100000) -> None:
@@ -1438,6 +1770,11 @@ class ContinuousBatchingEngine:
         finishes what it already holds.  The pop is engine-tagged so a
         KV-aware router can steer work toward the replica with the most
         free pages."""
+        if self.prefix is not None and admit:
+            # advertise this replica's prefix-cache warmth so the router
+            # can steer repeat prefixes here (idempotent re-registration)
+            router.register_prefix_probe(self.engine_id,
+                                         self.prefix_match_len)
         if admit:
             for req in router.pop(len(self._free), engine_id=self.engine_id):
                 self.submit(req)

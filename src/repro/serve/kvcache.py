@@ -94,6 +94,12 @@ class BlockPool:
         self._free: List[int] = list(range(num_pages))
         heapq.heapify(self._free)
         self._used: set = set()
+        # reference counts: a page may be owned by several lanes plus the
+        # prefix cache at once.  ``free`` drops one reference; the page
+        # only returns to the free heap when the last reference drops, so
+        # a shared page can never be scrubbed or reallocated under a
+        # surviving owner.
+        self._rc: Dict[int, int] = {}
 
     # -- accounting ------------------------------------------------------
     def free_count(self) -> int:
@@ -101,6 +107,13 @@ class BlockPool:
 
     def used_count(self) -> int:
         return len(self._used)
+
+    def refcount(self, page_id: int) -> int:
+        return self._rc.get(page_id, 0)
+
+    def shared_count(self) -> int:
+        """Pages currently referenced by more than one owner."""
+        return sum(1 for c in self._rc.values() if c > 1)
 
     def occupancy(self) -> float:
         return len(self._used) / self.num_pages
@@ -125,25 +138,46 @@ class BlockPool:
             return None
         out = [heapq.heappop(self._free) for _ in range(n_pages)]
         self._used.update(out)
+        for p in out:
+            self._rc[p] = 1
         return out
 
-    def free(self, page_ids: Sequence[int]) -> None:
+    def share(self, page_ids: Sequence[int]) -> None:
+        """Add one reference to each (already used) page — a new owner
+        mapping cached pages into its block table, or the prefix cache
+        pinning a lane's pages."""
+        for p in page_ids:
+            if p not in self._used:
+                raise BlockPoolError(f"share of free page {p}")
+            self._rc[p] += 1
+
+    def free(self, page_ids: Sequence[int]) -> List[int]:
+        """Drop one reference per page; returns the pages whose *last*
+        reference dropped (those actually returned to the free heap).
+        Shared pages survive under their remaining owners."""
+        out: List[int] = []
         for p in page_ids:
             if p not in self._used:
                 raise BlockPoolError(f"double free of page {p}")
-            self._used.discard(p)
-            heapq.heappush(self._free, p)
+            self._rc[p] -= 1
+            if self._rc[p] == 0:
+                del self._rc[p]
+                self._used.discard(p)
+                heapq.heappush(self._free, p)
+                out.append(p)
+        return out
 
     def free_tail(self, page_ids: Sequence[int], keep: int) -> List[int]:
-        """Free ``page_ids[keep:]`` and return them — the speculative-decode
-        rollback primitive: a rejected lookahead orphans the pages past the
-        last committed token, and only those pages go back to the pool (the
-        kept prefix still holds the lane's committed history)."""
+        """Drop this owner's reference on ``page_ids[keep:]`` and return
+        the pages that actually freed — the speculative-decode rollback
+        primitive: a rejected lookahead orphans the pages past the last
+        committed token, and only those go back to the pool (the kept
+        prefix still holds the lane's committed history).  A *shared* tail
+        page is unshared rather than freed: the surviving owners (prefix
+        cache, other lanes) keep their copy untouched."""
         if keep < 0:
             raise ValueError("keep must be >= 0")
-        tail = list(page_ids[keep:])
-        self.free(tail)
-        return tail
+        return self.free(list(page_ids[keep:]))
 
     # -- defragmentation -------------------------------------------------
     def compact(self) -> Dict[int, int]:
@@ -163,6 +197,11 @@ class BlockPool:
             self._free = [i for i in range(self.num_pages)
                           if i not in self._used]
             heapq.heapify(self._free)
+            # reference counts travel with the page: every owner (lanes,
+            # prefix-cache nodes) is remapped by the caller from the same
+            # mapping, so a shared page stays shared at its new id
+            for old, new in mapping.items():
+                self._rc[new] = self._rc.pop(old)
         return mapping
 
     def check_invariants(self) -> None:
@@ -173,6 +212,10 @@ class BlockPool:
             raise BlockPoolError("page both free and used")
         if free | self._used != set(range(self.num_pages)):
             raise BlockPoolError("pages leaked from the pool")
+        if set(self._rc) != self._used:
+            raise BlockPoolError("refcount map out of sync with used set")
+        if any(c < 1 for c in self._rc.values()):
+            raise BlockPoolError("used page with refcount < 1")
 
 
 # ---------------------------------------------------------------------------

@@ -373,6 +373,66 @@ def test_killed_replica_never_captures_routing_preference():
     mon.vfpga_exit()
 
 
+def test_prefix_aware_routing_prefers_warmest_replica():
+    """With warmth probes registered, the replica whose prefix tree
+    matches the head request wins the pop; a cold replica is held back
+    exactly once (the single-deferral liveness rule still applies)."""
+    _, router = _routing_setup(free_a=10, free_b=10)
+    router.register_prefix_probe("eA", lambda p: 0)
+    router.register_prefix_probe("eB", lambda p: 8)
+    assert router.pop(1, engine_id="eA") == []          # cold: deferred
+    assert [r.rid for r in router.pop(1, engine_id="eB")] == ["r0"]
+    # liveness: the deferred cold replica is served on its next pop even
+    # though eB is still warmer — preference is a head start, never
+    # starvation
+    assert [r.rid for r in router.pop(1, engine_id="eA")] == ["r1"]
+
+
+def test_prefix_preference_capped_by_free_page_headroom():
+    """Hit-skew starvation fix: a warm replica whose free pages fell
+    below half the best replica's loses its preference, and routing
+    falls back to the free-page load balance."""
+    _, router = _routing_setup(free_a=10, free_b=4)
+    router.register_prefix_probe("eA", lambda p: 0)
+    router.register_prefix_probe("eB", lambda p: 8)     # warm but starving
+    # eB is below the headroom bar (10/2): kv preference rules, eA wins
+    assert [r.rid for r in router.pop(1, engine_id="eA")] == ["r0"]
+    assert router.pop(1, engine_id="eB") == []          # deferred once
+    assert [r.rid for r in router.pop(1, engine_id="eB")] == ["r1"]
+    # with headroom restored (>= half the best), warmth wins again even
+    # though eB still has fewer free pages than eA
+    router.registry.gauge(M_KV_FREE_PAGES, service="svc",
+                          engine="eB").set(6)
+    assert router.pop(1, engine_id="eA") == []
+    assert [r.rid for r in router.pop(1, engine_id="eB")] == ["r2"]
+
+
+def test_failed_engine_probe_dropped():
+    """A crashed replica's warmth probe must not keep attracting traffic
+    (mirrors the NaN gauge tombstone rule)."""
+    _, router = _routing_setup(free_a=10, free_b=10)
+    router.register_prefix_probe("eB", lambda p: 8)
+    router.fail_engine("eB")
+    assert [r.rid for r in router.pop(1, engine_id="eA")] == ["r0"]
+
+
+def test_engine_pump_registers_prefix_probe():
+    """A prefix-cache engine advertises its warmth probe through pump();
+    repeat prompts then route back to the replica that cached them."""
+    mon, eng, reg = make_engine(slots=2, max_new=4, prefix_cache=True)
+    router = RequestRouter("svc", registry=reg)
+    rng = np.random.Generator(np.random.Philox(41))
+    prompt = rng.integers(0, 100, PROMPT_LEN)
+    router.submit(ServeRequest(rid="w0", prompt=prompt, max_new_tokens=2))
+    while router.outstanding() or not eng.idle:
+        if not eng.pump(router):
+            break
+    assert eng.engine_id in router._prefix_probes
+    # the served prompt's pages are in the tree: the probe reports warmth
+    assert router._prefix_probes[eng.engine_id](prompt) > 0
+    mon.vfpga_exit()
+
+
 def test_kv_aware_routing_untagged_and_unknown_pops_unaffected():
     """Pops without an engine tag (or from engines with no gauge yet) are
     never deferred; kv_aware=False disables the preference entirely."""

@@ -74,6 +74,47 @@ def test_pages_for_tokens_and_occupancy():
     assert pool.occupancy() == 0.5 and pool.free_count() == 5
 
 
+def test_share_refcounts_and_symmetric_free():
+    """Prefix-cache sharing: ``share`` adds references, ``free`` removes
+    one, and a page only returns to the free heap at refcount zero."""
+    pool = BlockPool(8, 4)
+    a = pool.alloc(2)
+    pool.share([a[0]])
+    assert pool.refcount(a[0]) == 2 and pool.refcount(a[1]) == 1
+    assert pool.shared_count() == 1
+    assert pool.free(a) == [a[1]]       # shared page survives its owner
+    assert pool.refcount(a[0]) == 1
+    pool.check_invariants()
+    assert pool.free([a[0]]) == [a[0]]  # last reference actually frees
+    with pytest.raises(BlockPoolError):
+        pool.share([a[0]])              # cannot share a free page
+    pool.check_invariants()
+
+
+def test_free_tail_unshares_shared_tail():
+    """Speculative rollback over a shared tail page must not free it out
+    from under the other owner — the reference drops, the page stays."""
+    pool = BlockPool(8, 4)
+    blocks = pool.alloc(4)
+    pool.share([blocks[3]])
+    freed = pool.free_tail(blocks, 2)
+    assert freed == [blocks[2]]         # shared page survives the rollback
+    assert pool.refcount(blocks[3]) == 1
+    pool.check_invariants()
+    assert pool.free([blocks[3]]) == [blocks[3]]
+
+
+def test_compact_moves_refcounts_with_pages():
+    pool = BlockPool(8, 4)
+    a = pool.alloc(4)
+    pool.share([a[3]])
+    pool.free([a[0], a[1]])
+    mapping = pool.compact()
+    assert pool.refcount(mapping.get(a[3], a[3])) == 2
+    assert pool.shared_count() == 1
+    pool.check_invariants()
+
+
 def test_free_tail_releases_only_the_orphaned_suffix():
     """The speculative-rollback primitive: only the pages past ``keep`` go
     back to the pool, and they are returned for event accounting."""
@@ -92,43 +133,93 @@ def test_free_tail_releases_only_the_orphaned_suffix():
 
 if HAS_HYPOTHESIS:
     class PoolMachine(RuleBasedStateMachine):
-        """Random alloc/free/compact sequences preserve the partition
-        invariant (free ∪ used = all pages, disjoint) and ownership —
-        pages an owner holds are never handed to another owner."""
+        """Random alloc/share/free/free_tail/compact sequences preserve the
+        partition invariant (free ∪ used = all pages, disjoint), ownership
+        (a live page is never re-allocated), and refcount semantics: a
+        page with references outstanding is never freed (so it can never
+        be scrubbed or handed to another owner), and compaction moves
+        reference counts with their pages."""
 
         def __init__(self):
             super().__init__()
             self.pool = BlockPool(16, 4, reserve_pages=2)
-            self.owned = {}             # owner -> set of pages
+            self.owned = {}             # owner -> ordered page list
+            self.rc = {}                # page -> model refcount
             self.next_owner = 0
+
+        def _drop_ref(self, p):
+            self.rc[p] -= 1
+            if self.rc[p] == 0:
+                del self.rc[p]
+                return True
+            return False
 
         @rule(n=st.integers(1, 5), urgent=st.booleans())
         def alloc(self, n, urgent):
             got = self.pool.alloc(n, urgent=urgent)
             if got is not None:
-                for prev in self.owned.values():
-                    assert not (set(got) & prev), "page double-owned"
-                self.owned[self.next_owner] = set(got)
+                assert not (set(got) & set(self.rc)), \
+                    "live page re-allocated"
+                self.owned[self.next_owner] = list(got)
+                for p in got:
+                    self.rc[p] = 1
                 self.next_owner += 1
+
+        @precondition(lambda self: self.rc)
+        @rule(data=st.data())
+        def share_one(self, data):
+            """A prefix-tree node (or second lane) pins a live page."""
+            p = data.draw(st.sampled_from(sorted(self.rc)))
+            self.pool.share([p])
+            self.rc[p] += 1
+
+        @precondition(lambda self: any(c > 1 for c in self.rc.values()))
+        @rule(data=st.data())
+        def unshare_one(self, data):
+            """Dropping one of several references never frees the page."""
+            p = data.draw(st.sampled_from(
+                sorted(q for q, c in self.rc.items() if c > 1)))
+            assert self.pool.free([p]) == []
+            self._drop_ref(p)
 
         @precondition(lambda self: self.owned)
         @rule(data=st.data())
-        def free_one(self, data):
+        def free_owner(self, data):
+            """A retiring owner frees exactly its unshared pages."""
             owner = data.draw(st.sampled_from(sorted(self.owned)))
-            self.pool.free(sorted(self.owned.pop(owner)))
+            pages = sorted(self.owned.pop(owner))
+            freed = self.pool.free(pages)
+            assert freed == [p for p in pages if self._drop_ref(p)]
+
+        @precondition(lambda self: self.owned)
+        @rule(data=st.data())
+        def rollback_tail(self, data):
+            """Speculative rollback: ``free_tail`` on a shared tail page
+            unshares it — the surviving owner keeps its copy."""
+            owner = data.draw(st.sampled_from(sorted(self.owned)))
+            blocks = self.owned[owner]
+            keep = data.draw(st.integers(0, len(blocks)))
+            freed = self.pool.free_tail(blocks, keep)
+            assert freed == [p for p in blocks[keep:]
+                             if self._drop_ref(p)]
+            self.owned[owner] = blocks[:keep]
+            if not self.owned[owner]:
+                del self.owned[owner]
 
         @rule()
         def compact(self):
             mapping = self.pool.compact()
             for owner, pages in self.owned.items():
-                self.owned[owner] = {mapping.get(p, p) for p in pages}
+                self.owned[owner] = [mapping.get(p, p) for p in pages]
+            self.rc = {mapping.get(p, p): c for p, c in self.rc.items()}
 
         @invariant()
         def partition_holds(self):
             self.pool.check_invariants()
-            held = set().union(*self.owned.values()) if self.owned else set()
-            assert held == self.pool._used
-            assert self.pool.free_count() == 16 - len(held)
+            assert set(self.rc) == self.pool._used
+            for p, c in self.rc.items():
+                assert self.pool.refcount(p) == c
+            assert self.pool.free_count() == 16 - len(self.rc)
 
     TestPoolMachine = PoolMachine.TestCase
     TestPoolMachine.settings = settings(max_examples=30,

@@ -1,0 +1,309 @@
+"""Cross-request KV prefix cache: radix-tree units (match/insert/dedup/
+LRU eviction/remap over a refcounted BlockPool) and the engine-level
+bit-exactness gates — a prefix-hit request streams tokens identical to a
+cold run of the same engine config, including across evict/resume and
+OOM preemption mid-shared-prefix, with copy-on-write protecting shared
+pages from divergent writes."""
+
+import numpy as np
+import pytest
+
+from repro.core import FunkyCL, Monitor, SliceAllocator
+from repro.scaling.autoscaler import M_PREFIX_HIT_RATE
+from repro.scaling.metrics import MetricsRegistry
+from repro.serve.engine import ContinuousBatchingEngine, ServeRequest
+from repro.serve.equivalence import (assert_transcripts_equal,
+                                     evict_resume_every, run_transcript)
+from repro.serve.kvcache import BlockPool
+from repro.serve.prefix_cache import PrefixCache
+
+ARCH = "yi-9b-smoke"
+PROMPT_LEN = 8
+PAGE = 4
+BUCKET = PROMPT_LEN
+
+
+# ---------------------------------------------------------------------------
+# Tree units (no model, bare pool)
+# ---------------------------------------------------------------------------
+def _tree(pages=16, max_nodes=64):
+    pool = BlockPool(pages, PAGE)
+    return pool, PrefixCache(pool, PAGE, max_nodes=max_nodes)
+
+
+def _toks(*pages):
+    """Page-key shorthand: _toks(1, 2) -> [1]*PAGE + [2]*PAGE."""
+    out = []
+    for p in pages:
+        out.extend([p] * PAGE)
+    return out
+
+
+def test_match_walks_longest_prefix():
+    pool, tree = _tree()
+    ids = pool.alloc(3)
+    tree.insert(BUCKET, _toks(1, 2, 3), ids, next_token=77)
+    m = tree.match(BUCKET, _toks(1, 2, 3))
+    assert m.pages == ids and m.tokens == 3 * PAGE and m.next_token == 77
+    # internal next_token hints come from the following page's first token
+    m2 = tree.match(BUCKET, _toks(1, 2))
+    assert m2.pages == ids[:2] and m2.next_token == 3
+    # divergence stops the walk; nothing matched is still a valid result
+    m3 = tree.match(BUCKET, _toks(1, 9))
+    assert m3.pages == ids[:1] and m3.next_token is None
+    assert tree.match(BUCKET, _toks(8)).pages == []
+    assert tree.match(BUCKET + PAGE, _toks(1)).pages == []   # per-bucket
+    tree.check_invariants()
+
+
+def test_non_page_aligned_tokens_rejected():
+    _, tree = _tree()
+    with pytest.raises(ValueError):
+        tree.match(BUCKET, [1, 2, 3])
+
+
+def test_insert_pins_pages_and_dedups():
+    pool, tree = _tree()
+    a = pool.alloc(2)
+    assert tree.insert(BUCKET, _toks(1, 2), a) == 2
+    assert pool.refcount(a[0]) == 2             # caller's ref + tree's ref
+    # same token content under different physical pages: existing node
+    # wins, the duplicate copy is NOT pinned by the tree
+    b = pool.alloc(2)
+    assert tree.insert(BUCKET, _toks(1, 2), b) == 0
+    assert pool.refcount(b[0]) == 1
+    assert tree.match(BUCKET, _toks(1, 2)).pages == a
+    # a retiring owner frees its refs; the tree's copy survives
+    assert pool.free(a) == []
+    assert pool.refcount(a[0]) == 1
+    tree.check_invariants()
+
+
+def test_evict_lru_respects_refcounts_and_cascades():
+    pool, tree = _tree()
+    cold = pool.alloc(2)
+    tree.insert(BUCKET, _toks(1, 2), cold)
+    pool.free(cold)                             # tree-only: evictable
+    hot = pool.alloc(1)
+    tree.insert(BUCKET, _toks(5), hot)          # lane still holds its ref
+    tree.match(BUCKET, _toks(5))                # and it is the most recent
+    # reclaim: the cold chain cascades leaf -> parent; the lane-held page
+    # is never freed out from under its owner
+    assert tree.evict_pages(3) == 2
+    assert tree.match(BUCKET, _toks(1)).pages == []
+    assert pool.refcount(hot[0]) == 2
+    assert tree.nodes == 1
+    assert tree.reclaimable_pages() == 0        # hot page is lane-shared
+    tree.check_invariants()
+
+
+def test_match_len_probe_does_not_bump_recency():
+    pool, tree = _tree()
+    a = pool.alloc(1)
+    tree.insert(BUCKET, _toks(1), a)
+    b = pool.alloc(1)
+    tree.insert(BUCKET, _toks(2), b)            # b is now more recent
+    pool.free(a)
+    pool.free(b)
+    assert tree.match_len(BUCKET, _toks(1)) == PAGE      # router probe
+    assert tree.match_len(BUCKET, _toks(1, 2)) == PAGE   # unaligned tail ok
+    tree.evict_pages(1)
+    # the probe did not refresh a: LRU still evicts it first
+    assert tree.match(BUCKET, _toks(1)).pages == []
+    assert tree.match(BUCKET, _toks(2)).pages == b
+
+
+def test_max_nodes_overflow_evicts():
+    pool, tree = _tree(pages=16, max_nodes=2)
+    for i in range(4):
+        ids = pool.alloc(1)
+        tree.insert(BUCKET, _toks(10 + i), ids)
+        pool.free(ids)
+    assert tree.nodes <= 2
+    assert tree.stats()["evicted_nodes"] >= 2
+    tree.check_invariants()
+
+
+def test_remap_follows_pool_compaction():
+    pool, tree = _tree()
+    a = pool.alloc(4)
+    tree.insert(BUCKET, _toks(1, 2), [a[1], a[3]])
+    pool.free([a[0], a[2]])                     # owners of a1/a3 retire too
+    pool.free([a[1], a[3]])
+    mapping = pool.compact()
+    tree.remap(mapping)
+    m = tree.match(BUCKET, _toks(1, 2))
+    assert m.pages == [mapping.get(a[1], a[1]), mapping.get(a[3], a[3])]
+    tree.check_invariants()
+    pool.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# Engine integration: bit-exactness, COW, eviction pressure, gauges
+# ---------------------------------------------------------------------------
+def _factory(slots=2, max_new=6, pool_pages=None, **kw):
+    def make():
+        reg = MetricsRegistry()
+        mon = Monitor("pfx-test", SliceAllocator("n0", 1), telemetry=reg)
+        eng = ContinuousBatchingEngine(
+            ARCH, FunkyCL(mon), slots=slots, prompt_len=PROMPT_LEN,
+            max_new_tokens=max_new, registry=reg, page_size=PAGE,
+            pool_pages=pool_pages, prefix_cache=True, **kw)
+        eng.setup()
+        return mon, eng
+    return make
+
+
+def _prompts(n_distinct, seed=3):
+    rng = np.random.Generator(np.random.Philox(seed))
+    return [rng.integers(0, 100, PROMPT_LEN) for _ in range(n_distinct)]
+
+
+def _requests(prompts, tokens):
+    def make():
+        return [ServeRequest(rid=f"r{i}", prompt=p, max_new_tokens=n)
+                for i, (p, n) in enumerate(zip(prompts, tokens))]
+    return make
+
+
+@pytest.fixture(scope="module")
+def warm_run():
+    """Reference run: two repeats of one prompt plus a distinct one, on a
+    prefix-cache engine with ample pages."""
+    p = _prompts(2)
+    prompts, tokens = [p[0], p[0], p[1]], [4, 6, 4]
+    transcript, eng = run_transcript(_factory(), _requests(prompts, tokens))
+    return transcript, eng, prompts, tokens
+
+
+def test_prefix_hit_bit_exact_vs_cold(warm_run):
+    """The tentpole gate: a full prefix hit streams exactly the tokens a
+    cold admission of the same prompt produces."""
+    transcript, eng, prompts, _ = warm_run
+    assert eng.prefix_stats()["hits"] >= 1
+    # r1 was a full hit on r0's pages; same prompt -> same greedy stream
+    assert transcript["r1"][:4] == transcript["r0"]
+    # and vs a genuinely cold engine (no tree at all yet), r1 alone:
+    cold, _ = run_transcript(_factory(),
+                             _requests([prompts[0]], [6]))
+    assert_transcripts_equal({"r0": cold["r0"]}, {"r0": transcript["r1"]},
+                             context="prefix hit vs cold")
+
+
+def test_prefix_hit_bit_exact_across_evict_resume(warm_run):
+    """Monitor-level evict/resume mid-run (dirty-page checkpoint of the
+    shared pool included) must not perturb hit-path tokens."""
+    transcript, _, prompts, tokens = warm_run
+    perturbed, eng = run_transcript(_factory(),
+                                    _requests(prompts, tokens),
+                                    step_hook=evict_resume_every(2))
+    assert_transcripts_equal(perturbed, transcript,
+                             context="prefix + evict/resume")
+    assert eng.prefix_stats()["hits"] >= 1
+
+
+def test_prefix_hit_bit_exact_under_oom_preemption(warm_run):
+    """A pool sized to force OOM preemption mid-shared-prefix: preempted
+    lanes drop their shared refs, recompute re-admits via the tree, and
+    every stream stays bit-exact."""
+    transcript, _, prompts, tokens = warm_run
+    # 2 distinct prompts (4 pages, shared) + 3 concurrent lanes' private
+    # generation pages overflow a 6-page pool at the first appends
+    squeezed, eng = run_transcript(
+        _factory(slots=3, pool_pages=6), _requests(prompts, tokens))
+    assert eng.preemptions > 0, "pool was not tight enough to preempt"
+    assert_transcripts_equal(squeezed, transcript,
+                             context="prefix + OOM preemption")
+    eng.pool.check_invariants()
+    eng.prefix.check_invariants()
+
+
+def test_cow_on_write_to_shared_page():
+    """A divergent write into a page another owner still references must
+    copy first: the writer gets a private page, the shared copy and the
+    other owner's view survive untouched, and tokens never change."""
+    p = _prompts(1)
+    ref, _ = run_transcript(_factory(), _requests(p, [6]))
+
+    make = _factory()
+    mon, eng = make()
+    try:
+        eng.submit(ServeRequest(rid="r0", prompt=p[0], max_new_tokens=6))
+        eng.step()                      # admit: writes prompt + 1st token
+        eng.step()                      # first append: tail page exists
+        st = next(iter(eng._active.values()))
+        tail = st.blocks[-1]
+        eng.pool.share([tail])          # simulate another owner pinning it
+        while not eng.idle:
+            eng.step()
+        assert eng.cow_copies >= 1
+        assert tail not in st.blocks    # writer moved to a private copy
+        assert eng.pool.refcount(tail) == 1     # our pin still holds
+        eng.pool.free([tail])
+        assert_transcripts_equal(
+            {rid: list(r.tokens) for rid, r in eng.completed.items()},
+            ref, context="COW")
+        eng.pool.check_invariants()
+    finally:
+        mon.vfpga_exit()
+
+
+def test_tree_evicted_under_admission_pressure():
+    """Cold tree pages are reclaimed (LRU) before admission fails: many
+    distinct prompts through a small pool all complete, and the tree
+    reports evictions."""
+    prompts = _prompts(6, seed=9)
+    transcript, eng = run_transcript(
+        _factory(slots=2, pool_pages=10), _requests(prompts, [3] * 6))
+    assert len(transcript) == 6
+    assert eng.prefix_stats()["evicted_pages"] > 0
+    eng.pool.check_invariants()
+    eng.prefix.check_invariants()
+
+
+def test_hit_rate_gauge_published(warm_run):
+    _, eng, _, _ = warm_run
+    stats = eng.prefix_stats()
+    assert stats["hit_rate"] > 0
+    val = eng.registry.gauge(M_PREFIX_HIT_RATE, service="svc",
+                             engine=eng.engine_id).value
+    assert val == pytest.approx(stats["cached_tokens"]
+                                / stats["prompt_tokens"])
+
+
+def test_retire_donates_generated_pages(warm_run):
+    """Retirement feeds committed pages (prompt + generation) back into
+    the tree, so the cache warms from served traffic, not just prompts."""
+    _, eng, _, _ = warm_run
+    # r0: 8 prompt + 4 generated tokens = 3 complete pages in the tree
+    assert eng.prefix.nodes >= 3
+
+
+def test_prefix_cache_requires_paged_aligned_buckets():
+    reg = MetricsRegistry()
+    mon = Monitor("pfx-bad", SliceAllocator("n0", 1), telemetry=reg)
+    with pytest.raises(ValueError):
+        ContinuousBatchingEngine(ARCH, FunkyCL(mon), slots=2,
+                                 prompt_len=PROMPT_LEN, max_new_tokens=4,
+                                 registry=reg, paged=False,
+                                 prefix_cache=True)
+    with pytest.raises(ValueError):
+        ContinuousBatchingEngine(ARCH, FunkyCL(mon), slots=2,
+                                 prompt_len=6, max_new_tokens=4,
+                                 registry=reg, page_size=PAGE,
+                                 prefix_cache=True)
+    mon.vfpga_exit()
+
+
+def test_spec_decode_composes_with_prefix_cache():
+    """Speculative decode on a prefix-cache engine: hits still happen and
+    the stream matches the plain prefix-cache engine bit-exactly."""
+    from repro.serve.engine import SpecConfig
+
+    p = _prompts(2, seed=13)
+    prompts, tokens = [p[0], p[0], p[1]], [4, 4, 4]
+    plain, _ = run_transcript(_factory(), _requests(prompts, tokens))
+    spec, eng = run_transcript(_factory(spec=SpecConfig(k=2)),
+                               _requests(prompts, tokens))
+    assert_transcripts_equal(spec, plain, context="spec + prefix")
+    assert eng.prefix_stats()["hits"] >= 1

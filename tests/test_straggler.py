@@ -25,6 +25,75 @@ class SlowImage(TaskImage):
         return super().instantiate()
 
 
+def test_migrate_trace_links_pre_and_post():
+    """A migrated task's pre/post traces are span-linked with
+    relation="migrates" (mirroring the router's "recovers" links), and
+    the link survives the chrome export trace_dump reads."""
+    from repro.core.scheduler import Policy
+    from repro.obs import Tracer, export_chrome_trace
+
+    tracer = Tracer(capacity=256, sample_rate=1.0)
+    img = TaskImage(name="j", kind="train", arch="yi-9b-smoke", seq_len=16,
+                    global_batch=4, total_steps=150, chunks=1)
+    cl = make_cluster(num_nodes=2, slices_per_node=1, images={"j": img},
+                      policy=Policy.PRE_MG, tracer=tracer)
+    orch = cl.orchestrator
+    orch.start(tick_interval=0.02)
+    cid = orch.submit("j")
+    st = orch._sched_tasks[cid]
+
+    def wait(cond, timeout=120):
+        deadline = time.time() + timeout
+        while time.time() < deadline:
+            if cond():
+                return True
+            time.sleep(0.05)
+        return False
+
+    assert wait(lambda: st.state == TaskState.RUNNING
+                and st.node_id is not None)
+    node = st.node_id
+    # mirror check_stragglers' eviction half (its *decision* machinery
+    # needs >= 3 measurable peers and a rate window; the link plumbing
+    # through _execute is what is under test here)
+    orch.agents[node].evict(cid)
+    pre = orch.tracer.event_span("orch.migrate_out", cid=cid, node=node)
+    pre.finish()
+    with orch._lock:
+        orch.scheduler.task_done(cid)
+        st.state = TaskState.EVICTED
+        st.meta["migrate_from"] = node
+        orch.scheduler.submit(st)
+    orch._pending_migrate_links[cid] = pre
+    assert wait(lambda: st.state == TaskState.RUNNING)
+    assert wait(lambda: not orch._pending_migrate_links)
+    post = [t for t in tracer.traces() if t.name == "orch.migrate_in"]
+    assert post, "no post-migration trace emitted"
+    link = post[0].links[0]
+    assert link["relation"] == "migrates"
+    assert link["trace_id"] == pre.trace_id
+    # the exported form trace_dump renders carries the link too
+    import json
+    import sys
+    import tempfile
+
+    sys.path.insert(0, "tools")
+    try:
+        from trace_dump import links_of, spans_by_trace
+    finally:
+        sys.path.pop(0)
+    with tempfile.NamedTemporaryFile("w", suffix=".json") as f:
+        export_chrome_trace(tracer, f.name)
+        doc = json.load(open(f.name))
+    roots = [ev for evs in spans_by_trace(doc).values() for ev in evs
+             if links_of(ev)]
+    assert any(lk.get("relation") == "migrates"
+               for ev in roots for lk in links_of(ev))
+    assert orch.wait_all(timeout=600)
+    orch.stop()
+    cl.stop()
+
+
 def test_straggler_detected_and_migrated():
     img = SlowImage(name="j", kind="train", arch="yi-9b-smoke", seq_len=16,
                     global_batch=4, total_steps=40, chunks=1)
