@@ -358,7 +358,12 @@ class Monitor:
         args = tuple(self.buffers.get(i).device_value for i in req.in_buffs)
         args = args + tuple(req.const_args)
         # device phase: the compiled-program call is the only point this
-        # path touches the accelerator; everything around it is host work
+        # path touches the accelerator; everything around it is host work.
+        # The runtime dispatches asynchronously — the call returns before
+        # the computation finishes — so the phase must close at
+        # block_until_ready, not at dispatch: otherwise the compute tail
+        # blocks under some *later* request (usually the next EXECUTE's
+        # dispatch or a d2h TRANSFER) and gets misattributed as host time
         t_run0 = time.perf_counter()
         prep_s = t_run0 - t_prep0
         sp = req.mon_span
@@ -368,7 +373,7 @@ class Monitor:
                      hit=hit, program=req.program_id).end(tc)
             dev_sp = sp.child("execute.device", t0=tc,
                               program=req.program_id)
-        out = entry.compiled(*args)
+        out = jax.block_until_ready(entry.compiled(*args))
         device_s = time.perf_counter() - t_run0
         if sp is not None:
             dev_sp.end()

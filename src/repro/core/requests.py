@@ -41,12 +41,17 @@ class Completion:
     """Future for one request."""
 
     __slots__ = ("_event", "value", "error", "submitted_at", "completed_at",
-                 "phases")
+                 "phases", "error_seen")
 
     def __init__(self):
         self._event = threading.Event()
         self.value: Any = None
         self.error: Optional[BaseException] = None
+        # exactly-once failure surfacing: a completion may be awaited at
+        # its issue site (sync reads) or at a later step boundary (async
+        # EXECUTEs); whoever raises the error first sets this so the other
+        # path doesn't re-raise or double-count it
+        self.error_seen = False
         self.submitted_at = time.perf_counter()
         self.completed_at: Optional[float] = None
         # per-phase wall-time attribution filled in by the monitor worker

@@ -75,7 +75,7 @@ import tempfile
 import time
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Sequence
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -90,7 +90,8 @@ from repro.scaling.autoscaler import (M_COMPLETIONS, M_KV_FREE_PAGES,
                                       M_SLO_VIOLATIONS, M_SPEC_ACCEPT_RATE,
                                       M_UTILIZATION)
 from repro.scaling.metrics import MetricsRegistry
-from repro.serve.kvcache import (BlockPool, _is_pos_leaf, cache_bytes,
+from repro.serve.kvcache import (BlockPool, _is_pos_leaf,
+                                 apply_block_table_delta, cache_bytes,
                                  compact_pool, extract_written_page,
                                  gather_lane_cache, init_caches_from_specs,
                                  pool_specs_from_lane_cache, scatter_pages,
@@ -202,6 +203,12 @@ class _SlotState:
     pos: int = 0                        # absolute position of the next write
     blocks: List[int] = field(default_factory=list)
     span: Any = None                    # engine.decode span (tracing)
+    # fused/pipelined decode: tokens whose generation has been *submitted*
+    # (committed or riding an in-flight EXECUTE).  Greedy decode with
+    # limit-only masking makes token counts deterministic at submit time,
+    # so positions and page mapping advance here while token values land
+    # at commit.  Kept equal to len(tokens) on the non-pipelined paths.
+    submitted: int = 0
 
 
 class ContinuousBatchingEngine:
@@ -218,6 +225,7 @@ class ContinuousBatchingEngine:
                  prefix_cache_max_nodes: int = 4096,
                  auto_compact_frag: Optional[float] = 0.5,
                  auto_compact_min_pages: int = 4,
+                 fuse_steps: int = 1, async_depth: int = 0,
                  tracer: Any = None):
         from repro.configs import get_arch
         from repro.models import build_model
@@ -243,6 +251,30 @@ class ContinuousBatchingEngine:
                     f"dynamic k needs 1 <= k_min <= k, got "
                     f"k_min={spec.k_min} k={spec.k}")
         self.spec = spec
+        # host-out-of-the-loop decode: fuse_steps > 1 runs k greedy decode
+        # steps per EXECUTE in one on-device fori_loop; async_depth > 0
+        # lets step() submit iteration N+1's EXECUTE before reading back
+        # iteration N's tokens (the monitor's FIFO queue serializes them)
+        if fuse_steps < 1:
+            raise ValueError("fuse_steps must be >= 1")
+        if async_depth < 0:
+            raise ValueError("async_depth must be >= 0")
+        if (fuse_steps > 1 or async_depth > 0) and not paged:
+            raise ValueError("fused/pipelined decode needs paged=True (the "
+                             "multi-step program maps its write span "
+                             "through block tables)")
+        if spec is not None and (fuse_steps > 1 or async_depth > 0):
+            raise ValueError(
+                "fuse_steps/async_depth do not compose with spec: the "
+                "verify program already fuses k+1 positions per EXECUTE "
+                "and acceptance is host-decided, so the host cannot be "
+                "taken out of that loop")
+        self.fuse_steps = fuse_steps
+        self.async_depth = async_depth
+        # pipelined mode: EXECUTEs (decode spans AND admissions) are
+        # committed at a later boundary instead of being waited at the
+        # submit site — the host stays off the device hot path
+        self._pipelined = fuse_steps > 1 or async_depth > 0
         # spec_k is the provisioning maximum (capacity, scrub width); the
         # *live* lookahead spec_k_now moves in spec_ks under dynamic_k
         self.spec_k = spec.k if spec is not None else 0
@@ -265,9 +297,12 @@ class ContinuousBatchingEngine:
             self.buckets = tuple(sorted(set(prompt_buckets or (prompt_len,))))
             self.prompt_len = max(self.buckets)
             self.page_size = page_size
-            # +spec_k: verify writes up to k positions past the commit
-            # horizon, and those in-flight slots must never wrap the table
-            self.max_ctx = self.prompt_len + max_new_tokens + self.spec_k
+            # +headroom: verify (spec) writes up to k positions past the
+            # commit horizon, and a fused decode's masked steps write up
+            # to fuse_steps-1 positions past a retiring lane's limit —
+            # those in-flight slots must never wrap the table
+            self.max_ctx = (self.prompt_len + max_new_tokens
+                            + max(self.spec_k, fuse_steps - 1))
             self.max_blocks = math.ceil(self.max_ctx / page_size)
             # default pool covers the worst case (no oversubscription);
             # benchmarks/servers pass a smaller pool to oversubscribe
@@ -285,6 +320,15 @@ class ContinuousBatchingEngine:
                     f"{self.pool_pages}-page pool (admission would starve)")
             self.pool = BlockPool(self.pool_pages, page_size,
                                   reserve_pages=reserve_pages)
+            # first-touch pages are born scrubbed (init_paged writes
+            # INVALID positions pool-wide) — only reused pages need the
+            # zeroing EXECUTE; populated at setup, emptied conservatively
+            # on restore/evacuate
+            self._virgin_pages: set = set()
+            # benchmark baselines flip this before setup() to recreate
+            # the staged 4-op admission (write + prefill + admit + read)
+            # the single-EXECUTE prefill_admit path replaced
+            self._legacy_admit = False
             if prefix_cache:
                 # page-granular sharing needs every prompt bucket to land
                 # on a page boundary: nodes key whole pages, and the
@@ -304,7 +348,17 @@ class ContinuousBatchingEngine:
             # headroom comes from pages appended at token granularity
             self.bundle = build_model(self.cfg, cache_margin=0)
             self._bt_host = np.full((slots, self.max_blocks), -1, np.int32)
+            # device-resident block table: _bt_host is a host *mirror*
+            # (dirty-page spans, spec rollback math); steady-state updates
+            # ship as (slot, logical_page, phys) delta rows applied by the
+            # bt_update EXECUTE.  _bt_full forces a full h2d rewrite
+            # (setup/compact/evacuate, or delta overflow).
             self._bt_dirty = True
+            self._bt_full = True
+            self._bt_delta: List[Tuple[int, int, int]] = []
+            self._bt_delta_width = max(16, 4 * slots)
+            self.bt_delta_execs = 0     # delta-driven device updates
+            self.bt_full_writes = 0     # full-table h2d rewrites
             self._first_token: Dict[str, float] = {}
             if spec is not None:
                 self.draft_cfg = get_arch(spec.draft_arch or arch)
@@ -343,6 +397,15 @@ class ContinuousBatchingEngine:
                        else getattr(cl._monitor, "tracer", None))
         self._it_root = None            # current iteration's root span
         self._step_completions: List = []
+        # pipelined decode: batches of (exec_completion, read_completion,
+        # [(slot_state, n_tokens)]) submitted but not yet committed; at
+        # most async_depth stay outstanding while new work exists
+        self._inflight: deque = deque()
+        # set after a failed fused EXECUTE: device toks/pos must be
+        # rewritten from the host-authoritative lane state before the next
+        # submit (later pipelined EXECUTEs ran against the pre-failure
+        # state, leaving the device scalars ahead of the rolled-back host)
+        self._resync_lanes = False
         # host/device attribution accumulators (populated from the
         # monitor's per-request phase dicts, tracer or not)
         self._attr_host_s = 0.0
@@ -497,13 +560,72 @@ class ContinuousBatchingEngine:
                 lp = (p % (max_blocks * ps)) // ps
                 pages = extract_written_page(new_cache, lp, token_axes,
                                              page_size=ps)
-                phys = jnp.where(active, bt_row[lp], jnp.int32(NP))
+                # the bt_row[lp] >= 0 guard drops writes landing past the
+                # lane's mapped span — a pipelined lane awaiting its final
+                # commit keeps decoding (garbage, never committed) and may
+                # walk onto a page that was never appended
+                phys = jnp.where(active & (bt_row[lp] >= 0), bt_row[lp],
+                                 jnp.int32(NP))
                 new_p = jnp.where(active, p + jnp.int32(1), p)
                 return new_tok, new_p, pages, phys
 
             toks2, pos2, pages, phys = jax.vmap(
                 lane, in_axes=(0, 0, 0))(toks, pos, bt)
             return toks2, pos2, scatter_pages(pool, phys, pages)
+
+        # fused multi-step decode: fuse_steps greedy steps per EXECUTE in
+        # one on-device fori_loop.  Per-lane ``lim`` (a const arg — the
+        # signature cache keys shapes, not values) masks token/pos updates
+        # once a lane hits its limit; cache writes past the mask land at
+        # positions every future query masks out (the same rejected-tail
+        # argument as speculative decode) and unmapped span pages are
+        # dropped by the scatter, so no masking of the KV write is needed.
+        kf = self.fuse_steps
+
+        def decode_multi(params, toks, pos, bt, pool, lims, delta):
+            # pending block-table rows ride the fused EXECUTE itself (a
+            # const arg, all-sentinel when clean): in the steady state
+            # the delta costs zero extra FIFO ops
+            bt = apply_block_table_delta(bt, delta)
+            n_span = (kf - 1) // ps + 2
+
+            def lane(tok, p, bt_row, lim):
+                cache = gather_lane_cache(pool, bt_row, token_axes,
+                                          page_size=ps)
+                on = bt_row[0] >= 0
+                lim = jnp.clip(lim, 0, kf)
+
+                def body(i, carry):
+                    cur, outs, c = carry
+                    logits, c2 = bundle.decode_fn(params, cur, p + i, c)
+                    nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+                    cur2 = jnp.where(on & (i < lim), nxt, cur)
+                    return cur2, outs.at[i].set(cur2[0]), c2
+
+                cur, outs, cache = jax.lax.fori_loop(
+                    0, kf, body,
+                    (tok, jnp.zeros((kf,), jnp.int32), cache))
+                lp0 = (p % (max_blocks * ps)) // ps
+                pages, phys = [], []
+                for j in range(n_span):
+                    lp = jnp.minimum(lp0 + jnp.int32(j),
+                                     jnp.int32(max_blocks - 1))
+                    pages.append(extract_written_page(
+                        cache, lp, token_axes, page_size=ps))
+                    ok = on & (lp0 + j < max_blocks) & (bt_row[lp] >= 0)
+                    phys.append(jnp.where(ok, bt_row[lp], jnp.int32(NP)))
+                new_p = jnp.where(on, p + lim, p)
+                return cur, new_p, outs, tuple(pages), jnp.stack(phys)
+
+            toks2, pos2, outs, pages, phys = jax.vmap(
+                lane, in_axes=(0, 0, 0, 0))(toks, pos, bt, lims)
+            n_span = (kf - 1) // ps + 2
+            for j in range(n_span):
+                pool = scatter_pages(pool, phys[:, j], pages[j])
+            return outs, toks2, pos2, bt, pool
+
+        def bt_update(bt, delta):
+            return apply_block_table_delta(bt, delta)
 
         def scrub(pool, page_ids):
             return scrub_pages(pool, page_ids)
@@ -515,20 +637,54 @@ class ContinuousBatchingEngine:
         self._register(cl, "init_params", init_params, (0,))
         self._register(cl, "init_paged", init_paged, ())
         slot_abs = jnp.int32(0)
-        # one lookahead can append several pages per lane, so the scrub
-        # vector is sized for the worst-case per-iteration page growth —
-        # and, with the prefix cache, for a whole prompt's fresh suffix
-        # pages scrubbed in one EXECUTE before the chunked prefill
-        self._scrub_width = B * (self.spec_k // ps + 2)
+        # one lookahead (or one fused k-step span) can append several
+        # pages per lane, so the scrub vector is sized for the
+        # worst-case per-iteration page growth — and, with the prefix
+        # cache, for a whole prompt's fresh suffix pages scrubbed in one
+        # EXECUTE before the chunked prefill
+        self._scrub_width = B * (max(self.spec_k,
+                                     self.fuse_steps - 1) // ps + 2)
         if self.prefix is not None:
             self._scrub_width = max(self._scrub_width, self.prompt_len // ps)
         ids_abs = jax.ShapeDtypeStruct((self._scrub_width,), jnp.int32)
         np_abs = jax.ShapeDtypeStruct((NP,), jnp.int32)
         if self.prefix is None:
             for P, (prompt_abs, pf_tok_abs, pf_cache_abs) in pf_abs.items():
+                n_pp = self.pool.pages_for_tokens(P)
+                pp_abs = jax.ShapeDtypeStruct((n_pp,), jnp.int32)
+
+                # single-EXECUTE admission: prefill + first-token argmax +
+                # lane install + page scatter in one op, the prompt a
+                # const arg (shape-keyed signature: one compile per
+                # bucket).  Four FIFO ops per admission collapse to one —
+                # per-op monitor overhead is the dominant host cost the
+                # fused decode path leaves behind.
+                def prefill_admit(params, toks, pos, pool, prompt, slot,
+                                  page_ids, P=P):
+                    pf_tok, pf_cache = prefill_one(params, prompt)
+                    slot = jnp.asarray(slot, jnp.int32)
+                    toks = jax.lax.dynamic_update_slice(
+                        toks, pf_tok[:, None], (slot, jnp.int32(0)))
+                    pos = jax.lax.dynamic_update_slice(
+                        pos, jnp.full((1,), P, jnp.int32), (slot,))
+                    pool = scatter_prefill(pool, page_ids, pf_cache,
+                                           token_axes, page_size=ps,
+                                           prompt_len=P)
+                    return pf_tok, toks, pos, pool
+
+                self._register(
+                    cl, f"prefill_admit_{P}", prefill_admit,
+                    (params_abs, toks_abs, pos_abs, pool_abs, prompt_abs,
+                     slot_abs, pp_abs),
+                    donate_argnums=(1, 2, 3))
+                if self.spec is None and not self._legacy_admit:
+                    continue
+                # speculative admission keeps the staged path: the draft
+                # prefill reads the same pf_prompt buffer, and the host
+                # needs the first token synchronously for its lane mirror
+                # (benchmark baselines recreate it via _legacy_admit)
                 self._register(cl, f"prefill_{P}", prefill_one,
                                (params_abs, prompt_abs))
-                n_pp = self.pool.pages_for_tokens(P)
 
                 def admit(toks, pos, pool, pf_tok, pf_cache, slot, page_ids,
                           P=P):
@@ -542,7 +698,6 @@ class ContinuousBatchingEngine:
                                            prompt_len=P)
                     return toks, pos, pool
 
-                pp_abs = jax.ShapeDtypeStruct((n_pp,), jnp.int32)
                 self._register(
                     cl, f"admit_{P}", admit,
                     (toks_abs, pos_abs, pool_abs, pf_tok_abs, pf_cache_abs,
@@ -606,6 +761,16 @@ class ContinuousBatchingEngine:
         self._register(cl, "decode_step", decode_step,
                        (params_abs, toks_abs, pos_abs, bt_abs, pool_abs),
                        donate_argnums=(1, 2, 4))
+        delta_abs = jax.ShapeDtypeStruct((self._bt_delta_width, 3),
+                                         jnp.int32)
+        self._register(cl, "bt_update", bt_update, (bt_abs, delta_abs),
+                       donate_argnums=(0,))
+        if kf > 1:
+            lims_abs = jax.ShapeDtypeStruct((B,), jnp.int32)
+            self._register(cl, "decode_multi", decode_multi,
+                           (params_abs, toks_abs, pos_abs, bt_abs, pool_abs,
+                            lims_abs, delta_abs),
+                           donate_argnums=(1, 2, 3, 4))
         if self.spec is not None:
             self._setup_spec(params_abs, toks_abs, pos_abs, bt_abs, pool_abs,
                              token_axes)
@@ -616,20 +781,28 @@ class ContinuousBatchingEngine:
             cl.clCreateBuffer("block_table", bt_abs)
             cl.clCreateBuffer("kv_pool", pool_abs, paged=True)
             cl.clCreateBuffer("pf_tok", pf_abs[self.prompt_len][1])
+            if kf > 1:
+                cl.clCreateBuffer(
+                    "fused_toks", jax.ShapeDtypeStruct((B, kf), jnp.int32))
             for P, (prompt_abs, _, pf_cache_abs) in pf_abs.items():
-                # chunked (prefix-cache) admission takes its tokens as
-                # const args and scatters pages directly, so the staging
-                # prompt/cache buffers only exist for the fused path —
-                # except the prompt buffer, which the draft prefill of a
-                # speculative engine still reads
-                if self.prefix is None or self.spec is not None:
+                # plain paged admission is a single EXECUTE taking the
+                # prompt as a const arg (like the prefix cache's chunked
+                # path), so the staging prompt/cache buffers only exist
+                # for speculative engines: the draft prefill reads the
+                # prompt buffer, and the staged admit hands the prefill
+                # cache across ops
+                if self.spec is not None or self._legacy_admit:
                     cl.clCreateBuffer(f"pf_prompt_{P}", prompt_abs)
-                if self.prefix is None:
-                    cl.clCreateBuffer(f"pf_cache_{P}", pf_cache_abs)
+                    if self.prefix is None:
+                        cl.clCreateBuffer(f"pf_cache_{P}", pf_cache_abs)
             cl.clEnqueueKernel("init_params", (), ("params",),
                                const_args=(self.seed,))
             cl.clEnqueueKernel("init_paged", (),
                                ("toks", "pos", "kv_pool"))
+            # the freshly-initialized pool is all-INVALID: every page is
+            # clean until its first allocation (restore keeps the set
+            # empty — snapshot pool contents are a previous life's)
+            self._virgin_pages = set(range(self.pool_pages))
             cl.write_buffer("block_table", self._bt_host.copy())
             if self.spec is not None:
                 cl.clCreateBuffer("draft_params", self._draft_params_abs)
@@ -647,6 +820,8 @@ class ContinuousBatchingEngine:
                 cl.clEnqueueKernel("init_draft", (), ("draft_caches",))
             cl.clFinish()
             self._bt_dirty = False
+            self._bt_full = False
+            self._bt_delta.clear()
 
     # -- speculative decode: draft + verify programs ---------------------
     def _setup_spec(self, params_abs, toks_abs, pos_abs, bt_abs, pool_abs,
@@ -891,7 +1066,22 @@ class ContinuousBatchingEngine:
         c = self.cl.clEnqueueMigrateMemObjects(buff_id, to_device=False,
                                                span=span)
         self._step_completions.append(c)
-        return c.wait()
+        try:
+            return c.wait()
+        except BaseException:
+            # the completion stays in _step_completions for phase folding;
+            # mark the error surfaced so the step-boundary sweep doesn't
+            # raise it a second time
+            c.error_seen = True
+            raise
+
+    def _read_async(self, buff_id, span=None):
+        """d2h read whose wait is deferred to the commit site (pipelined
+        decode) — tracked like every other completion."""
+        c = self.cl.clEnqueueMigrateMemObjects(buff_id, to_device=False,
+                                               span=span)
+        self._step_completions.append(c)
+        return c
 
     def submit(self, req: ServeRequest) -> None:
         if req.arrival_t is None:
@@ -990,6 +1180,9 @@ class ContinuousBatchingEngine:
                 if not self.pool.can_admit(n_pp):
                     break               # memory-based admission gate
                 page_ids = self.pool.alloc(n_pp)
+                # the monolithic prefill scatters these pages whole — no
+                # scrub needed, but they are no longer first-touch clean
+                self._virgin_pages.difference_update(page_ids)
             self.pending.popleft()
             slot = heapq.heappop(self._free)
             qsp = getattr(req, "_eng_queue_span", None)
@@ -999,17 +1192,46 @@ class ContinuousBatchingEngine:
             adm = (req.trace.span("engine.admit", engine=self.engine_id,
                                   slot=slot, bucket=bucket)
                    if req.trace is not None else None)
+            admit_cs = []
+            read_c = None
+            first_tok = None
             if self.paged and self.prefix is not None:
                 first_tok = self._admit_prefix(req, bucket, padded, match,
                                                page_ids, slot, adm)
+            elif (self.paged and self.spec is None
+                    and not self._legacy_admit):
+                # one-EXECUTE admission: prompt rides as a const arg, the
+                # program prefills, installs the lane and scatters the
+                # prompt pages in a single FIFO op
+                admit_cs.append(self._exec(
+                    f"prefill_admit_{bucket}",
+                    ("params", "toks", "pos", "kv_pool"),
+                    ("pf_tok", "toks", "pos", "kv_pool"),
+                    const_args=(self._pad_prompt(req.prompt, bucket),
+                                np.int32(slot),
+                                np.asarray(page_ids, np.int32)),
+                    donate=True,
+                    dirty_pages={"kv_pool": tuple(page_ids)}, span=adm))
+                self._bt_set_row(slot, page_ids)
+                if self._pipelined:
+                    # host-out-of-the-loop admission: the first token's
+                    # d2h read is deferred to the commit site — the host
+                    # never stalls behind the prefill EXECUTE, which now
+                    # overlaps this step's decode submit and commit work
+                    read_c = self._read_async("pf_tok", span=adm)
+                else:
+                    first_tok = int(np.asarray(self._read("pf_tok",
+                                                          span=adm))[0])
             else:
-                self._write(f"pf_prompt_{bucket}",
-                            self._pad_prompt(req.prompt, bucket), span=adm)
-                self._exec(f"prefill_{bucket}",
-                           ("params", f"pf_prompt_{bucket}"),
-                           ("pf_tok", f"pf_cache_{bucket}"), span=adm)
+                admit_cs.append(self._write(
+                    f"pf_prompt_{bucket}",
+                    self._pad_prompt(req.prompt, bucket), span=adm))
+                admit_cs.append(self._exec(
+                    f"prefill_{bucket}",
+                    ("params", f"pf_prompt_{bucket}"),
+                    ("pf_tok", f"pf_cache_{bucket}"), span=adm))
                 if self.paged:
-                    self._exec(
+                    admit_cs.append(self._exec(
                         f"admit_{bucket}",
                         ("toks", "pos", "kv_pool", "pf_tok",
                          f"pf_cache_{bucket}"),
@@ -1017,10 +1239,8 @@ class ContinuousBatchingEngine:
                         const_args=(np.int32(slot),
                                     np.asarray(page_ids, np.int32)),
                         donate=True,
-                        dirty_pages={"kv_pool": tuple(page_ids)}, span=adm)
-                    self._bt_host[slot, :] = -1
-                    self._bt_host[slot, :len(page_ids)] = page_ids
-                    self._bt_dirty = True
+                        dirty_pages={"kv_pool": tuple(page_ids)}, span=adm))
+                    self._bt_set_row(slot, page_ids)
                     if self.spec is not None:
                         self._exec(
                             f"draft_prefill_{bucket}",
@@ -1039,6 +1259,8 @@ class ContinuousBatchingEngine:
                          f"pf_cache_{bucket}"),
                         ("toks", "pos", "caches"),
                         const_args=(np.int32(slot),), donate=True, span=adm)
+                # staged path (spec / reserved): the host mirror needs the
+                # first token synchronously
                 first_tok = int(np.asarray(self._read("pf_tok",
                                                       span=adm))[0])
             if adm is not None:
@@ -1047,20 +1269,11 @@ class ContinuousBatchingEngine:
                 self._toks_host[slot, 0] = first_tok
                 self._pos_host[slot] = bucket
             now = self._clock()
-            first_t = now
-            if self.paged:
-                # an OOM-preempted request recomputes, but the client saw
-                # its first token on the first admission — keep that TTFT
-                prior = self._first_token.get(req.rid)
-                if prior is not None:
-                    first_t = prior
-                else:
-                    self._first_token[req.rid] = now
-                    self._h_ttft.observe(now - req.arrival_t)
-            else:
-                self._h_ttft.observe(now - req.arrival_t)
-            st = _SlotState(req=req, slot=slot, tokens=[first_tok],
-                            admit_t=now, first_token_t=first_t,
+            st = _SlotState(req=req, slot=slot,
+                            tokens=[] if read_c is not None
+                            else [first_tok],
+                            submitted=1,
+                            admit_t=now, first_token_t=now,
                             last_token_t=now,
                             limit=max(1, min(req.max_new_tokens,
                                              self.max_new_tokens)),
@@ -1071,15 +1284,37 @@ class ContinuousBatchingEngine:
                                                  slot=slot)
                                   if req.trace is not None else None))
             req.committed = st.tokens   # alias: crash-replay bookkeeping
-            self._c_tokens.inc()
             self.registry.record_event("engine_admit", rid=req.rid,
                                        slot=slot, engine=self.engine_id)
+            if read_c is not None:
+                # deferred admission: the lane decodes in this step's
+                # fused EXECUTE (its device state is set by the admit
+                # EXECUTE ahead of it in the FIFO); only the first token's
+                # *value* and the TTFT observation wait for the commit
+                self._active[slot] = st
+                self._inflight.append(("admit", st, read_c,
+                                       tuple(admit_cs)))
+                continue
+            st.first_token_t = self._observe_first_token(req, now)
+            self._c_tokens.inc()
             admitted += 1
             if len(st.tokens) >= st.limit:
                 self._retire(st, now)       # degenerate 1-token request
             else:
                 self._active[slot] = st
         return admitted
+
+    def _observe_first_token(self, req, now: float) -> float:
+        """TTFT bookkeeping at first-token delivery; returns the moment
+        the client first saw a token for this rid (an OOM-preempted
+        request recomputes, but keeps its original TTFT)."""
+        if self.paged:
+            prior = self._first_token.get(req.rid)
+            if prior is not None:
+                return prior
+            self._first_token[req.rid] = now
+        self._h_ttft.observe(now - req.arrival_t)
+        return now
 
     def _admit_prefix(self, req, bucket, padded, match, page_ids, slot,
                       adm) -> int:
@@ -1095,9 +1330,7 @@ class ContinuousBatchingEngine:
         flat = padded.reshape(-1)
         n_hit = len(match.pages)
         full_hit = n_hit == n_pp and match.next_token is not None
-        self._bt_host[slot, :] = -1
-        self._bt_host[slot, :n_pp] = page_ids
-        self._bt_dirty = True
+        self._bt_set_row(slot, page_ids)
         self.prefix_prompt_tokens += bucket
         self.prefix_cached_tokens += bucket if full_hit else n_hit * ps
         if full_hit:
@@ -1113,12 +1346,16 @@ class ContinuousBatchingEngine:
             new_ids = page_ids[n_hit:]
             # §3.4 freed-memory zeroing: the chunk gather must see INVALID
             # positions in the fresh suffix pages, never a previous
-            # owner's tokens
-            ids = np.full((self._scrub_width,), self.pool_pages, np.int32)
-            ids[:len(new_ids)] = new_ids
-            self._exec("scrub", ("kv_pool",), ("kv_pool",),
-                       const_args=(ids,), donate=True,
-                       dirty_pages={"kv_pool": tuple(new_ids)}, span=adm)
+            # owner's tokens (first-touch pages already read INVALID)
+            scrub_new = self._scrub_needed(new_ids)
+            if scrub_new:
+                ids = np.full((self._scrub_width,), self.pool_pages,
+                              np.int32)
+                ids[:len(scrub_new)] = scrub_new
+                self._exec("scrub", ("kv_pool",), ("kv_pool",),
+                           const_args=(ids,), donate=True,
+                           dirty_pages={"kv_pool": tuple(scrub_new)},
+                           span=adm)
             row = self._bt_host[slot].copy()
             for c in range(n_hit, n_pp):
                 self._exec(
@@ -1186,8 +1423,7 @@ class ContinuousBatchingEngine:
             # request retires (pages the prefix cache pinned survive); the
             # cleared row deactivates the lane for the next decode gather
             self.pool.free(st.blocks)
-            self._bt_host[st.slot, :] = -1
-            self._bt_dirty = True
+            self._bt_clear_row(st.slot)
             self._first_token.pop(st.req.rid, None)
         self._h_e2e.observe(rec.e2e_s)
         self._c_completions.inc()
@@ -1211,8 +1447,7 @@ class ContinuousBatchingEngine:
 
     def _preempt(self, st: _SlotState) -> None:
         self.pool.free(st.blocks)
-        self._bt_host[st.slot, :] = -1
-        self._bt_dirty = True
+        self._bt_clear_row(st.slot)
         self._active.pop(st.slot)
         heapq.heappush(self._free, st.slot)
         self.pending.appendleft(st.req)     # deterministic recompute
@@ -1228,6 +1463,15 @@ class ContinuousBatchingEngine:
             # deterministic re-admission
             st.req._eng_queue_span = st.req.trace.span(
                 "engine.queue", engine=self.engine_id, requeued=True)
+
+    def _scrub_needed(self, ids) -> List[int]:
+        """Split freshly-allocated pages into the subset that needs the
+        freed-memory zeroing EXECUTE: first-touch pages already read
+        INVALID (init_paged), only pages a previous owner wrote must be
+        scrubbed.  Removes ``ids`` from the virgin set either way."""
+        need = [p for p in ids if p not in self._virgin_pages]
+        self._virgin_pages.difference_update(ids)
+        return need
 
     def _alloc_urgent(self) -> Optional[List[int]]:
         """One-page urgent allocation; when the pool is dry, cold prefix
@@ -1259,6 +1503,7 @@ class ContinuousBatchingEngine:
                     return False
                 got = self._alloc_urgent()
             new = got[0]
+            self._virgin_pages.discard(new)     # copied into whole
             src = np.full((self.pool_pages,), self.pool_pages, np.int32)
             dst = np.full((self.pool_pages,), self.pool_pages, np.int32)
             src[0], dst[0] = old, new
@@ -1268,8 +1513,7 @@ class ContinuousBatchingEngine:
                        span=self._it_root)
             self.pool.free([old])       # drop this lane's shared reference
             st.blocks[lp] = new
-            self._bt_host[st.slot, lp] = new
-            self._bt_dirty = True
+            self._bt_set_cell(st.slot, lp, new)
             self.cow_copies += 1
             self.registry.record_event("engine_cow", rid=st.req.rid,
                                        slot=st.slot, page_from=old,
@@ -1288,9 +1532,17 @@ class ContinuousBatchingEngine:
             st = self._active.get(slot)
             if st is None:
                 continue                # preempted by an earlier append
-            span_tok = (1 if self.spec is None
-                        else min(self.spec_k_now + 1,
-                                 st.limit - len(st.tokens)))
+            if self.spec is not None:
+                span_tok = min(self.spec_k_now + 1,
+                               st.limit - len(st.tokens))
+            elif self.fuse_steps > 1 or self.async_depth > 0:
+                # fused decode: pre-map the whole k-step span (same
+                # lookahead-span mapping as speculative decode)
+                span_tok = min(self.fuse_steps, st.limit - st.submitted)
+                if span_tok <= 0:
+                    continue    # fully submitted: awaiting pipeline commit
+            else:
+                span_tok = 1
             lp_first = st.pos // self.page_size
             lp_last = (st.pos + span_tok - 1) // self.page_size
             # copy-on-write guard: a mapped page inside the imminent write
@@ -1313,9 +1565,9 @@ class ContinuousBatchingEngine:
                     break
                 assert lp == len(st.blocks), (lp, st.blocks)
                 st.blocks.append(got[0])
-                self._bt_host[slot, lp] = got[0]
-                self._bt_dirty = True
+                self._bt_set_cell(slot, lp, got[0])
                 scrub_ids.append(got[0])
+        scrub_ids = self._scrub_needed(scrub_ids)
         if scrub_ids:
             assert len(scrub_ids) <= self._scrub_width
             ids = np.full((self._scrub_width,), self.pool_pages, np.int32)
@@ -1336,8 +1588,15 @@ class ContinuousBatchingEngine:
                 "compact() while pages are in flight: an iteration's "
                 "EXECUTEs reference physical page ids — compaction is only "
                 "legal between engine iterations")
+        if self._inflight:
+            # commit every pipelined batch first: their EXECUTEs were
+            # submitted against pre-compaction physical page ids
+            self._drain_pipeline()
         mapping = self.pool.compact()
         if mapping:
+            # move targets receive a whole page's bytes; move sources
+            # keep their stale content and were never virgin anyway
+            self._virgin_pages.difference_update(mapping.values())
             src = np.full((self.pool_pages,), self.pool_pages, np.int32)
             dst = np.full((self.pool_pages,), self.pool_pages, np.int32)
             src[:len(mapping)] = list(mapping.keys())
@@ -1354,44 +1613,300 @@ class ContinuousBatchingEngine:
                 # share-aware compaction: every owner of a moved page is
                 # remapped from the same mapping — lanes above, tree here
                 self.prefix.remap(mapping)
-            self._bt_dirty = True
+            self._bt_mark_full()
         return {"moved": len(mapping), "span": self.pool.used_span()}
+
+    def _should_auto_compact(self) -> bool:
+        if self.auto_compact_frag is None:
+            return False
+        used, span = self.pool.used_count(), self.pool.used_span()
+        if used == 0 or span - used < self.auto_compact_min_pages:
+            return False
+        return 1.0 - used / span >= self.auto_compact_frag
 
     def _maybe_auto_compact(self) -> None:
         """Threshold-triggered defragmentation, fired at the top of an
         iteration — the only point where no EXECUTE holds page ids."""
-        if self.auto_compact_frag is None:
+        if not self._should_auto_compact():
             return
         used, span = self.pool.used_count(), self.pool.used_span()
-        if used == 0 or span - used < self.auto_compact_min_pages:
-            return
-        if 1.0 - used / span < self.auto_compact_frag:
-            return
         self.compact()
         self.auto_compactions += 1
         self.registry.record_event("engine_auto_compact",
                                    engine=self.engine_id, used=used,
                                    span_before=span)
 
+    # -- device-resident block table -------------------------------------
+    def _bt_set_row(self, slot: int, page_ids) -> None:
+        self._bt_host[slot, :] = -1
+        self._bt_host[slot, :len(page_ids)] = page_ids
+        self._bt_delta.append((slot, -1, -1))
+        self._bt_delta.extend(
+            (slot, lp, int(p)) for lp, p in enumerate(page_ids))
+        self._bt_dirty = True
+
+    def _bt_clear_row(self, slot: int) -> None:
+        self._bt_host[slot, :] = -1
+        self._bt_delta.append((slot, -1, -1))
+        self._bt_dirty = True
+
+    def _bt_set_cell(self, slot: int, lp: int, phys: int) -> None:
+        self._bt_host[slot, lp] = phys
+        self._bt_delta.append((slot, lp, int(phys)))
+        self._bt_dirty = True
+
+    def _bt_mark_full(self) -> None:
+        """Bulk rewrites (compact/evacuate/restore) skip the delta path."""
+        self._bt_full = True
+        self._bt_delta.clear()
+        self._bt_dirty = True
+
+    def _bt_take_delta(self) -> np.ndarray:
+        """Claim pending block-table rows for in-program application by
+        the fused decode EXECUTE — in the steady state the delta rides
+        an EXECUTE the iteration issues anyway, costing zero extra FIFO
+        ops.  Forced rewrites (compact/restore) and overflowing deltas
+        still take the full h2d write here; the returned delta is then
+        all-sentinel, a no-op for ``apply_block_table_delta``."""
+        if self._bt_dirty and (self._bt_full or
+                               len(self._bt_delta) > self._bt_delta_width):
+            self._flush_block_table()
+        delta = np.full((self._bt_delta_width, 3), -1, np.int32)
+        if self._bt_delta:
+            delta[:len(self._bt_delta)] = self._bt_delta
+            self._bt_delta.clear()
+            self.bt_delta_execs += 1
+        self._bt_dirty = False
+        self._bt_full = False
+        return delta
+
     def _flush_block_table(self) -> None:
-        if self._bt_dirty:
+        """Ship pending block-table changes to the device: a small
+        bt_update EXECUTE applying the accumulated delta rows in the
+        steady state, a full h2d rewrite when one was forced (or the
+        delta outgrew its fixed-width buffer)."""
+        if not self._bt_dirty:
+            return
+        if self._bt_full or len(self._bt_delta) > self._bt_delta_width:
             self._write("block_table", self._bt_host.copy(),
                         span=self._it_root)
-            self._bt_dirty = False
+            self.bt_full_writes += 1
+        else:
+            delta = np.full((self._bt_delta_width, 3), -1, np.int32)
+            if self._bt_delta:
+                delta[:len(self._bt_delta)] = self._bt_delta
+            self._exec("bt_update", ("block_table",), ("block_table",),
+                       const_args=(delta,), donate=True,
+                       span=self._it_root)
+            self.bt_delta_execs += 1
+        self._bt_full = False
+        self._bt_delta.clear()
+        self._bt_dirty = False
 
-    def _commit_tokens(self, st: _SlotState, tokens, now: float) -> int:
-        """Append committed tokens to a lane and advance its position; the
-        first token carries the inter-token gap, the rest arrived in the
-        same burst (TBT 0).  Retirement stays at the call site — the
-        speculative path must roll back the page tail first."""
+    def _commit_tokens(self, st: _SlotState, tokens, now: float, *,
+                       advance: bool = True) -> int:
+        """Append committed tokens to a lane; the first token carries the
+        inter-token gap, the rest arrived in the same burst (TBT 0).
+        Retirement stays at the call site — the speculative path must roll
+        back the page tail first.  ``advance=False`` (pipelined decode)
+        skips the position/submitted bump: it already happened at submit
+        time, when the token count was determined."""
         for i, t in enumerate(tokens):
             st.tokens.append(int(t))
             tbt = (now - st.last_token_t) if i == 0 else 0.0
             st.tbts.append(tbt)
             self._h_tbt.observe(tbt)
         st.last_token_t = now
-        st.pos += len(tokens)
+        if advance:
+            st.pos += len(tokens)
+            st.submitted = len(st.tokens)
         return len(tokens)
+
+    # -- host-out-of-the-loop decode: fused multi-step + async pipeline --
+    def _fused_iteration(self) -> int:
+        """Submit one fused EXECUTE covering up to ``fuse_steps`` greedy
+        tokens per lane, then commit the oldest in-flight batch(es).
+
+        With ``async_depth > 0`` the submit goes to the monitor's FIFO
+        queue *before* the previous iteration's tokens are read back, so
+        host commit work overlaps device execution.  Token counts are
+        deterministic at submit time (greedy sampling; the only early
+        exit is the per-lane limit), so positions, ``submitted`` counters
+        and page mapping advance at submit — only the token *values*
+        arrive at commit."""
+        kf, ps = self.fuse_steps, self.page_size
+        entries: List[Tuple[_SlotState, int]] = []
+        lims = np.zeros((self.slots,), np.int32)
+        for slot in sorted(self._active):
+            st = self._active[slot]
+            n = min(kf, st.limit - st.submitted)
+            if n > 0:
+                entries.append((st, n))
+                lims[slot] = n
+        decoded = 0
+        if entries:
+            if self._resync_lanes:
+                # a dropped pipeline left the device's toks/pos scalars
+                # ahead of the host's rolled-back commit horizon — rewrite
+                # them from the host-authoritative lane state (KV pages
+                # need no repair: greedy decode rewrites the same values
+                # at the same positions on resubmit).  Deferred admissions
+                # from this step must commit first so every active lane
+                # has a host-known last token to resync from.
+                while self._inflight and self._inflight[0][0] == "admit":
+                    decoded += self._commit_fused()
+                toks_h = np.zeros((self.slots, 1), np.int32)
+                pos_h = np.zeros((self.slots,), np.int32)
+                for slot, st in self._active.items():
+                    toks_h[slot, 0] = st.tokens[-1]
+                    pos_h[slot] = st.pos
+                self._write("toks", toks_h, span=self._it_root)
+                self._write("pos", pos_h, span=self._it_root)
+                self._resync_lanes = False
+            delta = self._bt_take_delta() if kf > 1 else None
+            if kf == 1:
+                self._flush_block_table()
+            # every active lane's write window is dirty — masked steps
+            # past a lane's limit still write its mapped tail page
+            dirty = set()
+            for st in self._active.values():
+                for lp in range(st.pos // ps,
+                                min((st.pos + kf - 1) // ps,
+                                    self.max_blocks - 1) + 1):
+                    pid = int(self._bt_host[st.slot, lp])
+                    if pid >= 0:
+                        dirty.add(pid)
+            if kf > 1:
+                exec_c = self._exec(
+                    "decode_multi",
+                    ("params", "toks", "pos", "block_table", "kv_pool"),
+                    ("fused_toks", "toks", "pos", "block_table", "kv_pool"),
+                    donate=True,
+                    const_args=(lims, delta),
+                    dirty_pages={"kv_pool": tuple(sorted(dirty))},
+                    span=self._it_root)
+                read_c = self._read_async("fused_toks", span=self._it_root)
+            else:
+                exec_c = self._exec(
+                    "decode_step",
+                    ("params", "toks", "pos", "block_table", "kv_pool"),
+                    ("toks", "pos", "kv_pool"), donate=True,
+                    dirty_pages={"kv_pool": tuple(sorted(dirty))},
+                    span=self._it_root)
+                read_c = self._read_async("toks", span=self._it_root)
+            for st, n in entries:
+                st.submitted += n
+                st.pos += n
+            self._inflight.append(("batch", exec_c, read_c, entries))
+        # only decode batches count against the pipeline depth: a deferred
+        # admission commits when it reaches the head naturally — popping it
+        # in its own step would stall the host on the prefill EXECUTE it
+        # just enqueued, re-serializing exactly what the deferral hides
+        if entries:
+            while sum(1 for r in self._inflight
+                      if r[0] == "batch") > self.async_depth:
+                decoded += self._commit_fused()
+        else:
+            decoded += self._drain_pipeline()
+        return decoded
+
+    def _commit_fused(self) -> int:
+        """Read back and commit the oldest in-flight record — a fused
+        decode batch or a deferred admission.  A failed EXECUTE drops the
+        whole pipeline and rolls the submit-time advance back: the
+        monitor raises *before* any output buffer is written, so the
+        failed span's device state is untouched and the next iteration
+        resubmits it — bit-exact, since greedy decode recomputes the
+        same tokens."""
+        rec = self._inflight.popleft()
+        kind, read_c = rec[0], rec[2]
+        err = None
+        try:
+            val = np.asarray(read_c.wait())
+        except BaseException as e:  # noqa: BLE001 - surfaced below
+            read_c.error_seen = True
+            err = e
+        if err is None:
+            # FIFO: the read completing proves every EXECUTE ahead of it
+            # was processed — surface their failures instead of committing
+            # stale bytes (a failed prefill leaves pf_tok untouched, and
+            # the read of those stale bytes itself succeeds)
+            for c in ((rec[1],) if kind == "batch" else rec[3]):
+                if c.error is not None:
+                    c.error_seen = True
+                    err = c.error
+                    break
+        if err is not None:
+            self._fail_pipeline([rec] + list(self._inflight))
+            raise err
+        now = self._clock()
+        if kind == "admit":
+            st = rec[1]
+            if self._active.get(st.slot) is not st:
+                return 0    # preempted since submit: recompute replays it
+            tok = int(val[0])
+            st.first_token_t = self._observe_first_token(st.req, now)
+            st.tokens.append(tok)
+            st.last_token_t = now
+            self._c_tokens.inc()
+            if len(st.tokens) >= st.limit:
+                self._retire(st, now)   # degenerate 1-token request
+            return 1
+        decoded = 0
+        for st, n in rec[3]:
+            if self._active.get(st.slot) is not st:
+                continue    # preempted since submit: recompute replays it
+            decoded += self._commit_tokens(st, val[st.slot, :n], now,
+                                           advance=False)
+            if len(st.tokens) >= st.limit:
+                self._retire(st, now)
+        self._c_tokens.inc(decoded)
+        return decoded
+
+    def _fail_pipeline(self, records) -> None:
+        """Drop every in-flight record after a failed EXECUTE: later
+        pipelined EXECUTEs ran against the pre-failure state, so their
+        results belong to the *failed* span.  Batch records roll their
+        submit-time advances back; deferred admissions un-admit — the
+        request is requeued whole and replays deterministically."""
+        self._inflight.clear()
+        # reversed so appendleft restores the admissions' arrival order
+        for rec in reversed(records):
+            if rec[0] == "admit":
+                st = rec[1]
+                if self._active.get(st.slot) is not st:
+                    continue
+                self.pool.free(st.blocks)
+                self._bt_clear_row(st.slot)
+                self._active.pop(st.slot)
+                heapq.heappush(self._free, st.slot)
+                self.pending.appendleft(st.req)
+                self.registry.record_event("engine_unadmit",
+                                           rid=st.req.rid, slot=st.slot,
+                                           engine=self.engine_id)
+                if st.span is not None:
+                    st.span.annotate(unadmitted=True).end()
+                if st.req.trace is not None:
+                    st.req._eng_queue_span = st.req.trace.span(
+                        "engine.queue", engine=self.engine_id,
+                        requeued=True)
+            else:
+                for st, n in rec[3]:
+                    if self._active.get(st.slot) is st:
+                        st.submitted -= n
+                        st.pos -= n
+        self._resync_lanes = True
+        # a failed fused EXECUTE never applied the delta rows it carried:
+        # the device block table may be behind the host mirror, so the
+        # next iteration rewrites it whole (host-authoritative)
+        self._bt_mark_full()
+
+    def _drain_pipeline(self) -> int:
+        """Commit every in-flight batch (compaction / explicit flush)."""
+        decoded = 0
+        while self._inflight:
+            decoded += self._commit_fused()
+        return decoded
 
     # -- one speculative iteration: draft k, verify k+1, commit/rollback -
     def _spec_iteration(self) -> int:
@@ -1454,9 +1969,9 @@ class ContinuousBatchingEngine:
             keep = (st.pos + ps - 1) // ps
             if len(st.blocks) > keep:
                 freed = self.pool.free_tail(st.blocks, keep)
+                for lp in range(keep, len(st.blocks)):
+                    self._bt_set_cell(st.slot, lp, -1)
                 del st.blocks[keep:]
-                self._bt_host[st.slot, keep:] = -1
-                self._bt_dirty = True
                 self.registry.record_event(
                     "engine_spec_rollback", rid=st.req.rid, slot=st.slot,
                     freed=len(freed), engine=self.engine_id)
@@ -1566,7 +2081,6 @@ class ContinuousBatchingEngine:
 
     def _step_inner(self) -> dict:
         t_step0 = time.perf_counter()
-        self._step_completions = []
         it_tr = None
         if self.tracer is not None and (self._active or self.pending):
             it_tr = self.tracer.start_trace(
@@ -1575,17 +2089,26 @@ class ContinuousBatchingEngine:
             self._it_root = it_tr.root
         preempts0 = self.preemptions
         compacts0 = self.auto_compactions
+        decoded = 0
         if self.paged:
+            if self._inflight and self._should_auto_compact():
+                # compaction remaps physical pages; commit the pipelined
+                # batches first (their EXECUTEs were submitted against the
+                # pre-move ids)
+                decoded += self._drain_pipeline()
             self._maybe_auto_compact()
         self._mid_step = True
         try:
             admitted = self._admit()
             self.peak_active = max(self.peak_active, len(self._active))
-            decoded = 0
             if self._active and self.paged:
                 self._append_pages()
             if self._active and self.spec is not None:
-                decoded = self._spec_iteration()
+                decoded += self._spec_iteration()
+            elif self.paged and (self.fuse_steps > 1
+                                 or self.async_depth > 0):
+                if self._active or self._inflight:
+                    decoded += self._fused_iteration()
             elif self._active:
                 if self.paged:
                     self._flush_block_table()
@@ -1623,11 +2146,23 @@ class ContinuousBatchingEngine:
         wall = time.perf_counter() - t_step0
         device_s = queue_wait_s = 0.0
         execs = 0
+        carry: List = []
         for c in self._step_completions:
-            # async EXECUTEs are only ever awaited via the token read's
+            if not c.done:
+                # a pipelined EXECUTE (or a prefix-hit admit's lane write)
+                # may still be in flight at this boundary: carry it to the
+                # next step so a late failure — and its phase attribution —
+                # surfaces exactly once instead of being dropped
+                carry.append(c)
+                continue
+            # async EXECUTEs may only ever be awaited via a later read's
             # FIFO sync — surface their failures here instead of silently
-            # committing stale tokens
-            if c.done and c.error is not None:
+            # committing stale tokens.  error_seen marks completions whose
+            # failure already raised at a wait()/commit site.
+            if c.error is not None:
+                if c.error_seen:
+                    continue
+                c.error_seen = True
                 raise c.error
             ph = c.phases or {}
             device_s += ph.get("device_s", 0.0)
@@ -1641,7 +2176,10 @@ class ContinuousBatchingEngine:
             self._attr_queue_wait_s += queue_wait_s
             self._attr_tokens += tokens
             self._attr_execs += execs
-            self._attr_reqs += len(self._step_completions)
+            # queue-wait denominator: EXECUTE completions only — counting
+            # writes/reads/syncs inflated the denominator and diluted the
+            # queue_wait_us gauge
+            self._attr_reqs += execs
             if self._publish_gauges:
                 self._g_host_us.set(
                     self._attr_host_s / self._attr_tokens * 1e6)
@@ -1650,7 +2188,7 @@ class ContinuousBatchingEngine:
                 self._g_queue_wait_us.set(
                     self._attr_queue_wait_s
                     / max(self._attr_reqs, 1) * 1e6)
-        self._step_completions = []
+        self._step_completions = carry
         if it_tr is not None:
             it_tr.finish(admitted=admitted, decoded=decoded,
                          active=len(self._active),
@@ -1721,11 +2259,18 @@ class ContinuousBatchingEngine:
                 req.trace = None        # re-traced on resubmission
         self._active.clear()
         self.pending.clear()
+        # in-flight pipelined tokens die with the lanes: the requests are
+        # requeued whole and recompute deterministically elsewhere
+        self._inflight.clear()
+        self._resync_lanes = False
         self._free = list(range(self.slots))
         heapq.heapify(self._free)
         if self.paged:
             self.pool = BlockPool(self.pool_pages, self.page_size,
                                   reserve_pages=self.pool.reserve_pages)
+            # the device pool keeps the dead lanes' bytes: nothing is
+            # first-touch clean for whoever reuses this engine
+            self._virgin_pages = set()
             if self.prefix is not None:
                 # the old pool (and every tree reference into it) dies
                 # with the evacuation; the index restarts cold
@@ -1733,7 +2278,7 @@ class ContinuousBatchingEngine:
                     self.pool, self.page_size,
                     max_nodes=self._prefix_max_nodes)
             self._bt_host[:] = -1
-            self._bt_dirty = True
+            self._bt_mark_full()
             self._first_token.clear()
             if self.spec is not None:
                 self._toks_host[:] = 0

@@ -371,3 +371,33 @@ def compact_pool(pool, src_ids, dst_ids):
     return jax.tree.map(
         lambda leaf: leaf.at[dst_ids].set(leaf[jnp.clip(
             src_ids, 0, leaf.shape[0] - 1)], mode="drop"), pool)
+
+
+def apply_block_table_delta(block_table, delta):
+    """Apply a fixed-width update vector to the device-resident block
+    table (traced).  ``delta`` is ``(width, 3)`` int32 rows of
+    ``(slot, logical_page, phys)``:
+
+    * ``slot < 0`` — padding, ignored;
+    * ``logical_page < 0`` — clear the whole row to -1 (retire/preempt);
+    * otherwise — set one cell (append/COW remap; ``phys`` may be -1 for
+      a speculative rollback clearing mapped tail cells).
+
+    Rows apply in order inside one EXECUTE, so a row clear followed by a
+    re-mapping of the same slot composes the way the host applied them.
+    This replaces the host-authoritative full-table h2d rewrite on the
+    decode hot path — only the handful of cells that changed ride along.
+    """
+    max_blocks = block_table.shape[1]
+
+    def body(i, bt):
+        s, lp, v = delta[i, 0], delta[i, 1], delta[i, 2]
+        s_safe = jnp.clip(s, 0, bt.shape[0] - 1)
+        row = bt[s_safe]
+        cell = row.at[jnp.clip(lp, 0, max_blocks - 1)].set(v)
+        cleared = jnp.full((max_blocks,), -1, jnp.int32)
+        new_row = jnp.where(lp < 0, cleared, cell)
+        new_row = jnp.where(s < 0, row, new_row)
+        return bt.at[s_safe].set(new_row)
+
+    return jax.lax.fori_loop(0, delta.shape[0], body, block_table)

@@ -114,19 +114,20 @@ def test_retry_call_backoff_and_deadline():
 # Monitor EXECUTE retry: injected transient faults cost a backoff, not
 # correctness — the transcript stays bit-exact vs the fault-free run
 # ---------------------------------------------------------------------------
-def _engine_factory(chaos=None, registry=None):
+def _engine_factory(chaos=None, registry=None, retries=3, **eng_kw):
     from repro.core import FunkyCL, Monitor, SliceAllocator
     from repro.serve.engine import ContinuousBatchingEngine
 
     reg = registry if registry is not None else MetricsRegistry()
     mon = Monitor("eng-chaos", SliceAllocator("n0", 1), telemetry=reg,
                   chaos=chaos,
-                  retry=RetryPolicy(max_attempts=3, base_backoff_s=0.001,
+                  retry=RetryPolicy(max_attempts=retries,
+                                    base_backoff_s=0.001,
                                     max_backoff_s=0.01))
     eng = ContinuousBatchingEngine(ARCH, FunkyCL(mon), slots=SLOTS,
                                    prompt_len=PROMPT_LEN,
                                    max_new_tokens=MAX_NEW, registry=reg,
-                                   page_size=PAGE)
+                                   page_size=PAGE, **eng_kw)
     eng.setup()
     return mon, eng
 
@@ -181,6 +182,61 @@ def test_monitor_execute_retry_exhaustion_fails_request():
     assert snap["counters"]["monitor_execute_failed_total"] >= 1
     kinds = [e[1] for e in reg.flight_record()["events"]]
     assert "execute_failed" in kinds
+
+
+def test_pipelined_execute_error_surfaces_exactly_once(baseline_tokens):
+    """Regression for the step()-boundary drop: a pipelined fused EXECUTE
+    that errors *after* the step that submitted it must surface exactly
+    once (the old loop only raised for already-done completions, then
+    cleared the list — late failures were silently dropped and their
+    stale tokens committed).  After the raise the engine rolls the span
+    back, resubmits deterministically, and finishes bit-exactly."""
+    reg = MetricsRegistry()
+    plan = FaultPlan([FaultSpec(site="monitor.execute", kind="error",
+                                at=3, max_fires=1, match="decode_multi")],
+                     seed=7, registry=reg)
+    # retries=1: InjectedFault is transient, so the monitor's default
+    # retry loop would absorb it before it ever reached the engine
+    mon, eng = _engine_factory(chaos=plan, registry=reg, retries=1,
+                               fuse_steps=4, async_depth=1)
+    for r in make_requests():
+        eng.submit(r)
+    raises = 0
+    guard = 0
+    while not eng.idle:
+        try:
+            eng.step()
+        except InjectedFault:
+            raises += 1
+        guard += 1
+        assert guard < 10000, "engine did not drain"
+    got = {rid: list(rec.tokens) for rid, rec in eng.completed.items()}
+    mon.vfpga_exit()
+    assert len(plan.fired) == 1
+    assert raises == 1, f"EXECUTE failure surfaced {raises} times, want 1"
+    assert got == baseline_tokens
+
+
+def test_delayed_pipelined_execute_carried_to_next_boundary(baseline_tokens):
+    """A fused EXECUTE that is merely *slow* is not done at the boundary
+    of the step that submitted it: it must be carried forward, folded into
+    attribution exactly once, and never mistaken for a failure."""
+    plan = FaultPlan([FaultSpec(site="monitor.execute", kind="delay",
+                                delay_s=0.05, at=2, max_fires=2,
+                                match="decode")], seed=8)
+    mon, eng = _engine_factory(chaos=plan, fuse_steps=4, async_depth=1)
+    for r in make_requests():
+        eng.submit(r)
+    eng.run_until_drained()
+    got = {rid: list(rec.tokens) for rid, rec in eng.completed.items()}
+    split = eng.host_device_split()
+    mon.vfpga_exit()
+    assert len(plan.fired) >= 1
+    assert got == baseline_tokens
+    # attribution folded each EXECUTE exactly once: the queue-wait gauge
+    # denominator equals the EXECUTE tally (satellite: it used to count
+    # every read/write/sync completion too)
+    assert eng._attr_reqs == eng._attr_execs == split["execs"]
 
 
 # ---------------------------------------------------------------------------

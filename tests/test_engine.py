@@ -102,7 +102,7 @@ def test_decode_and_admit_are_donated(engine_run):
     mon_keys = [(pid, d) for (pid, _, d) in
                 eng.cl._monitor.programs._compiled.keys()]
     assert ("decode_step", (1, 2, 4)) in mon_keys          # toks, pos, pool
-    assert (f"admit_{PROMPT_LEN}", (0, 1, 2)) in mon_keys
+    assert (f"prefill_admit_{PROMPT_LEN}", (1, 2, 3)) in mon_keys
     assert ("scrub", (0,)) in mon_keys
 
 
@@ -217,7 +217,7 @@ def test_prompt_buckets_route_admissions():
     assert eng._pick_bucket(99) == 8       # over-long prompts truncate
     mon_keys = [pid for (pid, _, _) in
                 eng.cl._monitor.programs._compiled.keys()]
-    assert {"prefill_4", "prefill_8", "admit_4", "admit_8"} <= set(mon_keys)
+    assert {"prefill_admit_4", "prefill_admit_8"} <= set(mon_keys)
     rng = np.random.Generator(np.random.Philox(9))
     eng.submit(ServeRequest(rid="short", prompt=rng.integers(0, 100, 3),
                             max_new_tokens=5))
@@ -520,3 +520,107 @@ def test_compact_refuses_while_pages_in_flight():
     eng._mid_step = False
     eng.compact()                      # boundary: fine
     mon.vfpga_exit()
+
+
+# ---------------------------------------------------------------------------
+# Host-out-of-the-loop decode: fused multi-step EXECUTEs + async pipelining
+# ---------------------------------------------------------------------------
+def _fused_factory(**kw):
+    def make():
+        mon, eng, _ = make_engine(slots=2, max_new=8, **kw)
+        return mon, eng
+    return make
+
+
+def _ragged_requests(spec=(6, 8, 4, 7, 5, 8), seed=2):
+    def make():
+        return make_requests(list(spec), seed=seed)
+    return make
+
+
+def test_fused_decode_bit_exact_vs_single_step():
+    """k decode steps fused into one EXECUTE commit the same tokens the
+    one-step-per-EXECUTE engine commits, and the block table is updated
+    through on-device delta EXECUTEs, not full host rewrites."""
+    from repro.serve.equivalence import check_equivalence
+
+    eng, base = check_equivalence(
+        _fused_factory(fuse_steps=4, async_depth=1), _fused_factory(),
+        _ragged_requests(), context="fused vs single-step")
+    assert eng.bt_delta_execs > 0
+    # steady-state block-table maintenance is delta-driven; the only full
+    # rewrites allowed are resync paths (evict/resume, delta overflow)
+    assert eng.bt_full_writes == 0
+    # k-step fusion must actually shrink EXECUTE count per token
+    assert eng.host_device_split()["execs"] < \
+        base.host_device_split()["execs"]
+
+
+def test_fused_decode_evict_resume_mid_span():
+    """Monitor-level evict/resume between iterations — with fused spans in
+    flight the resumed device state must continue bit-exactly."""
+    from repro.serve.equivalence import check_equivalence, evict_resume_every
+
+    check_equivalence(
+        _fused_factory(fuse_steps=4, async_depth=1), _fused_factory(),
+        _ragged_requests(), step_hook=evict_resume_every(3),
+        context="fused + evict/resume")
+
+
+def test_fused_decode_oom_preemption_mid_span():
+    """A pool too small for every lane's k-step lookahead span: lanes are
+    preempted mid-span, recomputed, and the stream stays bit-exact."""
+    from repro.serve.equivalence import check_equivalence
+
+    eng, _ = check_equivalence(
+        _fused_factory(fuse_steps=4, async_depth=1, pool_pages=6),
+        _fused_factory(), _ragged_requests(),
+        context="fused + OOM preemption")
+    assert eng.preemptions > 0, "pool was not tight enough to preempt"
+    eng.pool.check_invariants()
+
+
+def test_async_pipeline_without_fusion_bit_exact():
+    """async_depth alone (k=1): iteration N+1's EXECUTE is submitted
+    before N's tokens are read back, and commits are unchanged."""
+    from repro.serve.equivalence import check_equivalence
+
+    eng, _ = check_equivalence(
+        _fused_factory(fuse_steps=1, async_depth=2), _fused_factory(),
+        _ragged_requests(), context="async pipeline")
+    assert eng.bt_delta_execs > 0
+
+
+def test_fused_decode_invalid_configs_rejected():
+    reg = MetricsRegistry()
+    mon = Monitor("fused-bad", SliceAllocator("n0", 1), telemetry=reg)
+    cl = FunkyCL(mon)
+    mk = lambda **kw: ContinuousBatchingEngine(
+        ARCH, cl, slots=2, prompt_len=PROMPT_LEN, max_new_tokens=4,
+        registry=reg, page_size=PAGE, **kw)
+    with pytest.raises(ValueError):
+        mk(fuse_steps=0)
+    with pytest.raises(ValueError):
+        mk(async_depth=-1)
+    with pytest.raises(ValueError):
+        mk(paged=False, fuse_steps=4)
+    from repro.serve.engine import SpecConfig
+    with pytest.raises(ValueError):
+        mk(fuse_steps=4, spec=SpecConfig(k=2))
+    mon.vfpga_exit()
+
+
+def test_fused_decode_with_compaction_drains_pipeline():
+    """compact() remaps physical pages, so it must first drain in-flight
+    fused EXECUTEs that hold the old ids; compacting every iteration of a
+    pipelined run stays bit-exact."""
+    from repro.serve.equivalence import check_equivalence
+
+    def hook(eng, mon, i):
+        eng.compact()
+
+    eng, _ = check_equivalence(
+        _fused_factory(fuse_steps=4, async_depth=1), _fused_factory(),
+        _ragged_requests(), step_hook=hook,
+        context="fused + compaction")
+    eng.pool.check_invariants()

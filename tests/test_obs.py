@@ -18,7 +18,7 @@ from repro.obs import (Tracer, chrome_trace_events, export_chrome_trace,
 from repro.scaling import burst_rate, open_loop
 from repro.scaling.metrics import MetricsRegistry
 from repro.scaling.serving import RequestRouter
-from repro.serve.engine import (M_DEVICE_US, M_HOST_US,
+from repro.serve.engine import (M_DEVICE_US, M_HOST_US, M_QUEUE_WAIT_US,
                                 ContinuousBatchingEngine, ServeRequest)
 
 ARCH = "yi-9b-smoke"
@@ -327,6 +327,21 @@ def test_host_device_split_published(traced_run):
     assert M_HOST_US in text and M_DEVICE_US in text
     assert (f'{M_DEVICE_US}{{engine="{eng.engine_id}",service="svc"}}'
             in text)
+
+
+def test_queue_wait_gauge_denominator_counts_only_executes(traced_run):
+    """The queue-wait gauge averages per-EXECUTE queue time.  The
+    denominator must be the EXECUTE tally — it used to add every
+    completion the step saw (writes, reads, syncs), diluting the gauge by
+    the transfer traffic of the same iteration."""
+    _, eng, reg, _ = traced_run
+    split = eng.host_device_split()
+    assert eng._attr_reqs == eng._attr_execs == split["execs"]
+    assert split["queue_wait_us_mean"] == pytest.approx(
+        eng._attr_queue_wait_s / split["execs"] * 1e6)
+    val = reg.gauge(M_QUEUE_WAIT_US, service="svc",
+                    engine=eng.engine_id).value
+    assert val == pytest.approx(split["queue_wait_us_mean"])
 
 
 def test_engine_crash_dumps_flight_record(monkeypatch):

@@ -307,3 +307,47 @@ def test_spec_decode_composes_with_prefix_cache():
                                _requests(prompts, tokens))
     assert_transcripts_equal(spec, plain, context="spec + prefix")
     assert eng.prefix_stats()["hits"] >= 1
+
+
+def test_cow_on_shared_page_inside_fused_span():
+    """Fused multi-step decode writes a k-token window per EXECUTE; a
+    shared page anywhere in that window must be copied before the fused
+    program launches, and the stream must match the single-step run."""
+    p = _prompts(1)
+    ref, _ = run_transcript(_factory(), _requests(p, [6]))
+
+    # k=3: after admit + one fused span pos sits mid-page, so the next
+    # span's write window starts inside the already-mapped tail page
+    make = _factory(fuse_steps=3)
+    mon, eng = make()
+    try:
+        eng.submit(ServeRequest(rid="r0", prompt=p[0], max_new_tokens=6))
+        eng.step()                      # admit + first fused span commits
+        st = next(iter(eng._active.values()))
+        tail = st.blocks[-1]
+        eng.pool.share([tail])          # simulate another owner pinning it
+        while not eng.idle:
+            eng.step()
+        assert eng.cow_copies >= 1
+        assert tail not in st.blocks    # writer moved to a private copy
+        assert eng.pool.refcount(tail) == 1     # our pin still holds
+        eng.pool.free([tail])
+        assert_transcripts_equal(
+            {rid: list(r.tokens) for rid, r in eng.completed.items()},
+            ref, context="COW in fused span")
+        eng.pool.check_invariants()
+    finally:
+        mon.vfpga_exit()
+
+
+def test_prefix_hits_bit_exact_with_fused_pipeline():
+    """Prefix-cache hits compose with fused + pipelined decode: same
+    tokens as the single-step prefix engine, hits still counted."""
+    p = _prompts(2, seed=13)
+    prompts, tokens = [p[0], p[0], p[1]], [6, 6, 4]
+    plain, _ = run_transcript(_factory(), _requests(prompts, tokens))
+    fused, eng = run_transcript(_factory(fuse_steps=4, async_depth=1),
+                                _requests(prompts, tokens))
+    assert_transcripts_equal(fused, plain, context="prefix + fused")
+    assert eng.prefix_stats()["hits"] >= 1
+    assert eng.bt_delta_execs > 0

@@ -222,3 +222,23 @@ def test_harness_reports_first_divergence():
         assert_transcripts_equal({"r0": [1, 9, 3]}, ref)
     with pytest.raises(AssertionError, match="request sets differ"):
         assert_transcripts_equal({}, ref)
+
+
+def test_spec_rides_delta_block_table(plain_ref):
+    """Spec decode's per-depth programs run over the same device-resident
+    block table: steady-state updates go through delta EXECUTEs (rollback
+    cells included), never full host rewrites."""
+    got, eng = run_transcript(factory(spec=SpecConfig(k=2, draft_seed=99)),
+                              requests())
+    assert_transcripts_equal(got, plain_ref, context="spec + delta bt")
+    assert eng.bt_delta_execs > 0
+    assert eng.bt_full_writes == 0
+
+
+def test_spec_refuses_fused_pipeline():
+    """Verify already fuses k+1 positions and acceptance is host-decided:
+    combining it with fused/pipelined decode is a config error."""
+    with pytest.raises(ValueError):
+        factory(spec=SpecConfig(k=2), fuse_steps=4)()
+    with pytest.raises(ValueError):
+        factory(spec=SpecConfig(k=2), async_depth=1)()
