@@ -36,6 +36,14 @@ requests than the reservation baseline at the same pool size (the §3.4
 virtualization payoff the ROADMAP names) while completing the identical
 workload.
 
+Part 4 — disaggregation.  A prefill + decode replica pair joined by a
+live KV handoff (``repro.serve.disagg.TransferQueue``) faces two mixed
+replicas at equal total slices over a near-saturated burst: the run
+asserts bit-exact token streams, strictly lower p99 TBT (gateable with
+``--tbt-budget-us``), and that a squeezed decode pool degrades to
+aggregated fallback (``handoff_fallback_total > 0``) instead of
+queueing transfers past the TTFT target.
+
 The plain engine arm runs with a ``repro.obs.Tracer`` attached: the run
 also reports the host-vs-device µs/token split (``fig15/host_split``)
 and, with ``--trace-out PATH``, exports a Perfetto-loadable Chrome-trace
@@ -64,6 +72,8 @@ from repro.obs import Tracer, export_chrome_trace
 from repro.scaling.metrics import MetricsRegistry
 from repro.scaling.serving import RequestRouter
 from repro.serve import generate
+from repro.serve.disagg import (M_HANDOFF, M_HANDOFF_FALLBACK,
+                                TransferQueue)
 from repro.serve.engine import (M_TBT, M_TTFT, ContinuousBatchingEngine,
                                 ServeRequest, SpecConfig)
 from repro.serve.equivalence import assert_transcripts_equal
@@ -193,6 +203,89 @@ def run_engine(workload, prompt_len, slots, max_new_cap, *, paged=True,
     return eng, reg, busy_s
 
 
+def run_pair(workload, prompt_len, slots, max_new_cap, *, disagg,
+             decode_pool_pages=None, decode_reserve_pages=None,
+             ttft_target_s=None, pf_slots=None, tag="fig15-pair"):
+    """Two replicas behind one router at *equal total slices* (and equal
+    total lanes): either two mixed engines (the aggregated baseline) or a
+    prefill + decode pair joined by a live-KV TransferQueue.  Every
+    decoding engine in both arms runs the same fused decode discipline,
+    so the variables are exactly the role levers: the lane budget is
+    split role-aware (the prefill replica takes few lanes — its prompt
+    EXECUTEs stay small and it holds few fallback decodes — and the
+    decode replica takes the rest), and the decode replica is pumped at
+    token cadence (several pumps per prefill pump: its step quantum is a
+    short fused span, the prefill replica's is a whole prompt EXECUTE).
+    The mixed replicas are pumped symmetrically — with both roles
+    colocated there is no short-quantum replica to favor.
+    Returns (router, transfer_queue_or_None, registry, busy_s)."""
+    reg = MetricsRegistry(clock=time.perf_counter)
+    router = RequestRouter("svc", registry=reg, kv_aware=False)
+    roles = ("prefill", "decode") if disagg else ("mixed", "mixed")
+    if disagg:
+        if pf_slots is None:
+            pf_slots = max(1, slots // 4)
+        slot_split = (pf_slots, 2 * slots - pf_slots)
+    else:
+        slot_split = (slots, slots)
+    engines = []
+    for i, role in enumerate(roles):
+        mon = Monitor(f"{tag}-{i}", SliceAllocator(f"bench{i}", 1),
+                      telemetry=reg)
+        kw = {}
+        if role != "prefill":
+            kw.update(fuse_steps=4, async_depth=0)
+        if role == "decode" and decode_pool_pages is not None:
+            kw["pool_pages"] = decode_pool_pages
+        if role == "decode" and decode_reserve_pages is not None:
+            kw["reserve_pages"] = decode_reserve_pages
+        eng = ContinuousBatchingEngine(
+            ARCH, FunkyCL(mon), slots=slot_split[i], prompt_len=prompt_len,
+            max_new_tokens=max_new_cap, registry=reg, paged=True,
+            page_size=PAGE_SIZE, engine_id=f"{tag}-{i}", role=role, **kw)
+        eng.setup()
+        # warm the full admit/decode path outside the timed window,
+        # before the transfer queue exists (so the warmup never exports)
+        eng.submit(ServeRequest(rid="__warm__", prompt=np.zeros(
+            prompt_len, np.int32), max_new_tokens=PAGE_SIZE + 2))
+        eng.run_until_drained()
+        eng.completed.pop("__warm__")
+        eng.drain_completions()
+        eng.peak_active = 0
+        engines.append((mon, eng))
+    tq = None
+    if disagg:
+        tq = TransferQueue(router=router, registry=reg, service="svc",
+                           ttft_target_s=ttft_target_s)
+        for _, eng in engines:
+            eng.attach_transfer(tq)
+    gc.collect()
+    gc.disable()
+    try:
+        t0 = time.perf_counter()
+        pending = list(workload)
+        while (pending or router.outstanding() or (tq and len(tq))
+               or any(not e.idle for _, e in engines)):
+            now = time.perf_counter() - t0
+            while pending and pending[0]["arrival_t"] <= now:
+                w = pending.pop(0)
+                router.submit(ServeRequest(
+                    rid=w["rid"], prompt=w["prompt"],
+                    max_new_tokens=w["n_tokens"],
+                    arrival_t=t0 + w["arrival_t"]))
+            progressed = engines[0][1].pump(router)
+            for _ in range(3 if disagg else 1):
+                progressed = engines[1][1].pump(router) or progressed
+            if not progressed:
+                time.sleep(0.001)
+        busy_s = (time.perf_counter() - t0) - workload[0]["arrival_t"]
+    finally:
+        gc.enable()
+        for mon, _ in engines:
+            mon.vfpga_exit()
+    return router, tq, reg, busy_s
+
+
 def p99(values):
     """Interpolated p99, matching the registry's Histogram.quantile."""
     if not values:
@@ -222,7 +315,7 @@ def make_prefix_workload(n_requests: int, prompt_len: int,
 
 def main(smoke: bool = False, trace_out: str = None,
          host_budget_us: float = None, device_budget_us: float = None,
-         queue_wait_budget_us: float = None):
+         queue_wait_budget_us: float = None, tbt_budget_us: float = None):
     # max_new_cap is the *server-side* per-request cap the reservation
     # baseline must provision for; actual generations (tokens_range) are
     # ragged and stop well short of it — the gap is what paging reclaims
@@ -532,6 +625,100 @@ def main(smoke: bool = False, trace_out: str = None,
             f"pool bytes: {warm_eng.peak_active} vs "
             f"{cold_eng.peak_active}")
 
+    # ---------------------------------------------------------------
+    # Prefill/decode disaggregation.  A prefill + decode replica pair
+    # joined by a live KV handoff vs two mixed replicas at *equal total
+    # slices*, over a near-saturated ragged burst — on the mixed
+    # replicas every arriving prompt's EXECUTE lands between decode
+    # iterations of resident lanes, which is exactly the interference
+    # role separation removes (the decode replica only ever pays a page
+    # install).  Gates: bit-exact token streams, strictly lower p99 TBT
+    # (one retry, same as the host-cut gate: short wall-clock windows
+    # jitter with machine load), and — with the decode pool squeezed to
+    # ~one lane — TTFT-aware admission refuses transfers instead of
+    # queueing them (handoff_fallback_total > 0) while the streams stay
+    # bit-exact: disaggregation degrades to aggregated, never worse.
+    # ---------------------------------------------------------------
+    dis_wl = make_workload(n_req, prompt_len, tokens_range, 0.001, seed=19)
+    dis_tokens = sum(w["n_tokens"] for w in dis_wl)
+
+    def disagg_attempt(attempt):
+        agg_router, _, _, agg_busy = run_pair(
+            dis_wl, prompt_len, slots, max_new_cap, disagg=False,
+            tag=f"fig15-agg{attempt}")
+        dis_router, _, dis_reg, dis_busy = run_pair(
+            dis_wl, prompt_len, slots, max_new_cap, disagg=True,
+            tag=f"fig15-dis{attempt}")
+        assert len(agg_router.completed) == n_req
+        assert len(dis_router.completed) == n_req
+        assert_transcripts_equal(
+            {rid: rec.tokens for rid, rec in dis_router.completed.items()},
+            {rid: rec.tokens for rid, rec in agg_router.completed.items()},
+            context="fig15 disaggregated vs aggregated pair")
+        agg_p99 = p99([t for rec in agg_router.completed.values()
+                       for t in rec.tbts])
+        dis_p99 = p99([t for rec in dis_router.completed.values()
+                       for t in rec.tbts])
+        dsnap = dis_reg.snapshot()
+        handoffs = dsnap["counters"].get(f"{M_HANDOFF}{{service=svc}}", 0)
+        emit("fig15/aggregated_pair", agg_busy * 1e6 / dis_tokens,
+             f"attempt={attempt} "
+             f"tokens_per_s={dis_tokens / agg_busy:.1f} "
+             f"p99_tbt={agg_p99 * 1e3:.1f}ms slots=2x{slots}")
+        emit("fig15/disagg", dis_busy * 1e6 / dis_tokens,
+             f"attempt={attempt} "
+             f"tokens_per_s={dis_tokens / dis_busy:.1f} "
+             f"p99_tbt={dis_p99 * 1e3:.1f}ms slots=2x{slots} "
+             f"handoffs={handoffs:.0f}")
+        if not handoffs > 0:
+            raise SystemExit("disaggregated arm performed no KV handoffs")
+        agg_ref = {rid: list(rec.tokens)
+                   for rid, rec in agg_router.completed.items()}
+        return agg_p99, dis_p99, agg_ref
+
+    agg_p99, dis_p99, agg_ref = disagg_attempt(0)
+    if dis_p99 >= agg_p99:
+        agg_p99, dis_p99, agg_ref = disagg_attempt(1)
+    emit("fig15/disagg_vs_aggregated", 0.0,
+         f"p99_tbt={agg_p99 / max(dis_p99, 1e-9):.2f}x")
+    if dis_p99 >= agg_p99:
+        raise SystemExit(
+            f"disaggregated pair did not beat the aggregated pair on p99 "
+            f"TBT at equal total slices: {dis_p99 * 1e3:.2f} vs "
+            f"{agg_p99 * 1e3:.2f} ms")
+    if tbt_budget_us is not None and dis_p99 * 1e6 > tbt_budget_us:
+        raise SystemExit(
+            f"--tbt-budget-us gate: disaggregated p99 TBT "
+            f"{dis_p99 * 1e6:.1f}us exceeds budget {tbt_budget_us:.1f}us")
+
+    # squeezed decode pool: ~one worst-case lane of headroom (the engine
+    # floor) with a reserve carved out, so a single resident lane starves
+    # the admission check and most offers are refused — those lanes
+    # decode to completion on the prefill replica instead
+    sat_pool = (prompt_len + max_new_cap) // PAGE_SIZE + 2
+    sat_reserve = sat_pool // 3 + 1
+    # symmetric lane split here: several lanes prefill concurrently, so
+    # offers overlap decode-side residency and admission actually refuses
+    sat_router, _, sat_reg, _ = run_pair(
+        dis_wl, prompt_len, slots, max_new_cap, disagg=True,
+        decode_pool_pages=sat_pool, decode_reserve_pages=sat_reserve,
+        pf_slots=slots, tag="fig15-dis-sat")
+    assert len(sat_router.completed) == n_req
+    assert_transcripts_equal(
+        {rid: rec.tokens for rid, rec in sat_router.completed.items()},
+        agg_ref, context="fig15 disaggregated (saturated) vs aggregated")
+    ssnap = sat_reg.snapshot()
+    fallbacks = ssnap["counters"].get(
+        f"{M_HANDOFF_FALLBACK}{{service=svc}}", 0)
+    emit("fig15/disagg_saturated", 0.0,
+         f"decode_pool_pages={sat_pool} fallbacks={fallbacks:.0f} "
+         f"handoffs="
+         f"{ssnap['counters'].get(f'{M_HANDOFF}{{service=svc}}', 0):.0f}")
+    if not fallbacks > 0:
+        raise SystemExit(
+            "saturated decode pool produced no aggregated fallbacks "
+            f"(pool_pages={sat_pool})")
+
 
 if __name__ == "__main__":
     argv = sys.argv[1:]
@@ -545,4 +732,5 @@ if __name__ == "__main__":
     main(smoke="--smoke" in argv, trace_out=out,
          host_budget_us=_flag("--host-budget-us"),
          device_budget_us=_flag("--device-budget-us"),
-         queue_wait_budget_us=_flag("--queue-wait-budget-us"))
+         queue_wait_budget_us=_flag("--queue-wait-budget-us"),
+         tbt_budget_us=_flag("--tbt-budget-us"))

@@ -14,6 +14,10 @@ named *sites* threaded through the stack behind no-op hooks:
                             flips bytes in one on-disk buffer file)
     ckpt.restore            before load_snapshot reads (kind: error)
     router.pop              request intake (kind: delay)
+    kv.transfer             KV handoff install on the decode replica
+                            (kind: torn | error | delay — a torn transfer
+                            loses the lane in transit; the request
+                            replays through its router lease)
 
 Every decision is a pure function of (seed, spec list, per-site event
 counts): two runs with the same plan over the same event sequence fire

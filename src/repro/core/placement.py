@@ -41,6 +41,7 @@ from repro.scaling.metrics import metric_key
 M_NODE_UTILIZATION = "node_utilization"           # used / total slices, 0..1
 M_NODE_PROGRESS_RATE = "node_progress_rate"       # mean guest steps/s
 M_TASK_PROGRESS = "task_progress_steps"           # TimeSeries of step counts
+M_NODE_KV_FREE = "node_kv_free_pages"             # free KV pool pages
 
 
 def _median(values: List[float]) -> float:
@@ -105,6 +106,11 @@ class PlacementWeights:
     warm_cache: float = 0.5         # x (wanted ∩ cached)/wanted
     utilization: float = 0.25       # x node_utilization gauge (penalty)
     progress_rate: float = 0.25     # x normalized node_progress_rate (bonus)
+    # role-aware scoring (disaggregated serving): prefill replicas want
+    # free compute (extra weight on free slices), decode replicas want
+    # free KV pages (normalized node_kv_free_pages gauge)
+    role_compute: float = 0.5       # x free slices, prefill tasks only
+    role_memory: float = 0.5        # x normalized kv-free, decode tasks only
 
 
 class PlacementPolicy:
@@ -160,6 +166,19 @@ class PlacementPolicy:
                 wanted_set = set(wanted)
                 s += w.warm_cache * (len(wanted_set & set(warm))
                                      / len(wanted_set))
+        role = task.meta.get("role") if task.meta else None
+        if role == "prefill":
+            # prefill replicas are compute-bound (the long fused prompt
+            # EXECUTE): bias further toward nodes with spare slices
+            s += w.role_compute * free
+        elif role == "decode" and self.registry is not None:
+            # decode replicas are memory-bound (resident KV pages): bias
+            # toward nodes advertising free pool pages
+            kv = self.registry.gauge_values(M_NODE_KV_FREE)
+            mx = max(kv.values(), default=0.0)
+            if mx > 0:
+                key = metric_key(M_NODE_KV_FREE, {"node": node})
+                s += w.role_memory * (kv.get(key, 0.0) / mx)
         if self.registry is not None:
             s -= w.utilization * self.registry.gauge(
                 M_NODE_UTILIZATION, node=node).value

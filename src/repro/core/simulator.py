@@ -418,6 +418,33 @@ def engine_service_model(ttft_s: float, tbt_s: float,
     return service_time
 
 
+def disaggregated_service_model(ttft_s: float, tbt_s: float,
+                                default_tokens: int = 8, *,
+                                transfer_s: float = 0.0,
+                                fallback_rate: float = 0.0):
+    """Role-aware service-time function for a disaggregated deployment.
+
+    Models the decode pool's occupancy per request: prefill runs on a
+    separate replica class, so a decode server holds a lane only for its
+    ``(n-1) * tbt`` generation tail plus the KV handoff install
+    (``transfer_s``, the TransferQueue's EWMA install cost).  The
+    TTFT-aware admission path refuses ``fallback_rate`` of handoffs —
+    those lanes decode their first tokens on the prefill side, which
+    shows up here as the fallback fraction of prefill time landing back
+    on the pool (the aggregated-fallback guarantee: at ``fallback_rate
+    = 1`` this degrades exactly to ``engine_service_model``, never
+    worse).  Calibrate all four inputs from the live disaggregated
+    arm's histograms and ``TransferQueue.stats()``.
+    """
+    fb = min(max(fallback_rate, 0.0), 1.0)
+
+    def service_time(req: Request) -> float:
+        n = req.n_tokens if getattr(req, "n_tokens", None) else default_tokens
+        return (max(0, n - 1) * tbt_s
+                + (1.0 - fb) * transfer_s + fb * ttft_s)
+    return service_time
+
+
 class ServingSimulator:
     """Discrete-event M/G/n serving loop with the autoscaler in the loop.
 

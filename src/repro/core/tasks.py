@@ -50,6 +50,8 @@ class TaskImage:
     kv_pool_pages: Optional[int] = None
     kv_reserve_pages: int = 1
     prompt_buckets: tuple = ()      # e.g. (8, 16, 32); empty = (prompt_len,)
+    # engine-serve disaggregation role (mixed | prefill | decode)
+    role: str = "mixed"
     # engine-serve speculative decode (0 = off)
     spec_k: int = 0
     spec_draft_arch: Optional[str] = None   # None = self-draft (target arch)
@@ -336,7 +338,8 @@ class EngineServeTask(GuestTask):
             paged=im.paged_kv, page_size=im.page_size,
             pool_pages=im.kv_pool_pages,
             reserve_pages=im.kv_reserve_pages,
-            prompt_buckets=im.prompt_buckets or None, spec=spec)
+            prompt_buckets=im.prompt_buckets or None, spec=spec,
+            role=im.role)
         self._engine.setup(restore=restore)
 
     def step(self, cl: FunkyCL, gs: GuestState) -> bool:

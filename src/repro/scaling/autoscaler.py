@@ -148,6 +148,78 @@ class KVPressurePolicy(ScalingPolicy):
 
 
 # ---------------------------------------------------------------------------
+# Disaggregated serving: per-role replica counts under one slice budget
+# ---------------------------------------------------------------------------
+@dataclass
+class RoleMix:
+    """A per-role replica plan: how many prefill / decode replicas, and
+    the vertical size (``vfpga_num`` slices) each replica gets."""
+    prefill: int = 1
+    decode: int = 1
+    prefill_vfpga: int = 1
+    decode_vfpga: int = 1
+
+    @property
+    def total_slices(self) -> int:
+        return (self.prefill * self.prefill_vfpga
+                + self.decode * self.decode_vfpga)
+
+
+@dataclass
+class RoleMixPolicy:
+    """Per-role replica counts for prefill/decode disaggregation.
+
+    Prefill demand follows queue depth (prompts wait for a prefill
+    slot); decode demand follows KV pressure (resident lanes hold pool
+    pages).  When the plan exceeds ``slice_budget``, vertical size is
+    shed first — trading ``vfpga_num`` against the role mix, the
+    paper's vertical-scaling knob — and only then does the *less*
+    pressured role lose replicas, floored at ``min_each`` so neither
+    side of the pipeline ever disappears.
+    """
+    slice_budget: int = 8
+    vfpga_num: int = 2              # preferred per-replica vertical size
+    queue_per_prefill: float = 2.0  # queued prompts one prefill absorbs
+    kv_high: float = 0.85           # decode grows above this pressure
+    min_each: int = 1
+    name: str = "role-mix"
+
+    def desired_mix(self, s: ScalingSignals) -> RoleMix:
+        prefill = max(self.min_each,
+                      math.ceil(s.queue_depth
+                                / max(self.queue_per_prefill, 1e-9)))
+        decode = max(self.min_each,
+                     math.ceil(s.replicas * s.kv_pressure / self.kv_high)
+                     if s.kv_pressure > 0 else self.min_each)
+        mix = RoleMix(prefill=prefill, decode=decode,
+                      prefill_vfpga=self.vfpga_num,
+                      decode_vfpga=self.vfpga_num)
+        # normalized pressure decides which role shrinks when slices are
+        # scarce: queue pressure protects prefill, KV pressure decode
+        queue_pressure = s.queue_depth / max(self.queue_per_prefill, 1e-9)
+        kv_pressure = s.kv_pressure / self.kv_high
+        while mix.total_slices > self.slice_budget:
+            if mix.prefill_vfpga > 1 or mix.decode_vfpga > 1:
+                # vertical first: shrink the fatter role's replicas
+                if mix.prefill_vfpga >= mix.decode_vfpga:
+                    mix.prefill_vfpga -= 1
+                else:
+                    mix.decode_vfpga -= 1
+                continue
+            shrink_prefill = (queue_pressure <= kv_pressure
+                              and mix.prefill > self.min_each)
+            if shrink_prefill:
+                mix.prefill -= 1
+            elif mix.decode > self.min_each:
+                mix.decode -= 1
+            elif mix.prefill > self.min_each:
+                mix.prefill -= 1
+            else:
+                break                   # floor reached on both roles
+        return mix
+
+
+# ---------------------------------------------------------------------------
 # Reconciler
 # ---------------------------------------------------------------------------
 class ReplicaTarget(Protocol):

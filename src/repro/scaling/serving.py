@@ -85,6 +85,16 @@ class RequestRouter:
     fallen below half the best replica's free pages loses its preference
     (hit-skew must not concentrate all traffic on one starving engine),
     and the router falls back to the free-page load balance above.
+
+    **Role-aware routing** (disaggregated serving): replicas declare a
+    role via ``register_engine_role``.  ``decode`` replicas never pop
+    fresh prompts — their work arrives through the KV transfer queue;
+    with several ``prefill`` replicas, prompts route by bucketed prompt
+    length (deterministic bucket→replica assignment) so each replica's
+    per-bucket prefill program stays hot.  ``transfer_lease`` follows a
+    lane across a handoff so crash replay keeps conserving requests,
+    and ``replay_request`` replays a single request lost to a torn
+    transfer.
     """
 
     def __init__(self, service: str = "svc", registry=None,
@@ -104,6 +114,9 @@ class RequestRouter:
         self._deferred: set = set()     # engines already held back once
         # engine_id -> prompt -> matched-token count (prefix-cache warmth)
         self._prefix_probes: Dict[str, Callable] = {}
+        # disaggregated serving: engine_id -> role / prompt buckets
+        self._roles: Dict[str, str] = {}
+        self._role_buckets: Dict[str, tuple] = {}
         # every popped request holds a lease (rid -> (req, engine_id))
         # until the owning engine completes or requeues it; a replica
         # crash replays exactly its leased requests (fail_engine)
@@ -143,6 +156,33 @@ class RequestRouter:
         cache call this from ``pump``; idempotent."""
         with self._lock:
             self._prefix_probes[engine_id] = probe
+
+    def register_engine_role(self, engine_id: str, role: str,
+                             buckets: tuple = ()) -> None:
+        """Declare a replica's serving role (and its prompt buckets, for
+        bucketed prefill routing).  Idempotent; engines call this from
+        ``pump``."""
+        with self._lock:
+            self._roles[engine_id] = role
+            self._role_buckets[engine_id] = tuple(buckets)
+
+    def _prefill_preferred(self, engine_id: str) -> bool:
+        """Bucketed prompt-length routing between prefill replicas: the
+        head request's bucket maps deterministically onto the sorted
+        prefill replica ids, so each replica's per-bucket prefill
+        program stays hot instead of every replica cycling through every
+        compiled signature."""
+        prefills = sorted(e for e, r in self._roles.items()
+                          if r == "prefill")
+        if len(prefills) < 2 or engine_id not in prefills:
+            return True
+        buckets = sorted(set(self._role_buckets.get(engine_id) or ()))
+        if not buckets:
+            return True
+        plen = int(np.asarray(self._pending[0].prompt).reshape(-1).shape[0])
+        fit = [i for i, b in enumerate(buckets) if b >= plen]
+        idx = fit[0] if fit else len(buckets) - 1
+        return prefills[idx % len(prefills)] == engine_id
 
     def _free_pages(self) -> Dict[str, float]:
         if self.registry is None:
@@ -193,7 +233,18 @@ class RequestRouter:
         if self.chaos is not None:
             self.chaos.maybe_delay("router.pop", key=engine_id or "")
         with self._lock:
-            if (self.kv_aware and engine_id is not None and self._pending
+            role = self._roles.get(engine_id) if engine_id else None
+            if role == "decode":
+                # decode replicas receive work through the KV transfer
+                # queue, never fresh prompts
+                return []
+            if role == "prefill":
+                if (self._pending
+                        and not self._prefill_preferred(engine_id)):
+                    if engine_id not in self._deferred:
+                        self._deferred.add(engine_id)
+                        return []
+            elif (self.kv_aware and engine_id is not None and self._pending
                     and not self._preferred(engine_id)):
                 if engine_id not in self._deferred:
                     self._deferred.add(engine_id)
@@ -231,6 +282,37 @@ class RequestRouter:
                         "replay_mismatch", rid=record.rid,
                         committed=pre, got=list(record.tokens))
             self.completed[record.rid] = record
+
+    def transfer_lease(self, rid: str, engine_id: str) -> None:
+        """Move a popped request's lease to the replica now holding its
+        lane (KV handoff): crash replay keeps conserving requests — a
+        crash of the *new* owner replays it, the old owner no longer
+        does."""
+        with self._lock:
+            lease = self._leases.get(rid)
+            if lease is not None:
+                self._leases[rid] = (lease[0], engine_id)
+
+    def replay_request(self, req) -> None:
+        """A single request lost in transit (torn KV transfer): drop its
+        lease and replay it.  Committed tokens are recorded so
+        ``complete`` verifies the recompute reproduces them as a prefix,
+        and the exactly-once guard rejects double completion — zero lost,
+        zero duplicated."""
+        with self._lock:
+            self._leases.pop(req.rid, None)
+            self.replayed[req.rid] = list(
+                getattr(req, "committed", None) or [])
+            tr = getattr(req, "trace", None)
+            if tr is not None:
+                req._prev_trace = tr
+                tr.finish(torn_transfer=True)
+                req.trace = None
+            self._requeue_locked([req], reason="replayed")
+            if self.registry is not None:
+                self.registry.record_event(
+                    "router_replay", service=self.service,
+                    engine="kv.transfer", replayed=1)
 
     def requeue(self, reqs: list) -> None:
         """Return popped-but-unfinished requests (killed replica) to the
@@ -271,6 +353,8 @@ class RequestRouter:
         of requests replayed."""
         with self._lock:
             self._prefix_probes.pop(engine_id, None)
+            self._roles.pop(engine_id, None)
+            self._role_buckets.pop(engine_id, None)
             reqs = [req for req, eng in self._leases.values()
                     if eng == engine_id]
             for req in reqs:

@@ -92,8 +92,9 @@ from repro.scaling.autoscaler import (M_COMPLETIONS, M_KV_FREE_PAGES,
 from repro.scaling.metrics import MetricsRegistry
 from repro.serve.kvcache import (BlockPool, _is_pos_leaf,
                                  apply_block_table_delta, cache_bytes,
-                                 compact_pool, extract_written_page,
-                                 gather_lane_cache, init_caches_from_specs,
+                                 compact_pool, extract_pool_pages,
+                                 extract_written_page, gather_lane_cache,
+                                 init_caches_from_specs, install_pool_pages,
                                  pool_specs_from_lane_cache, scatter_pages,
                                  scatter_prefill, scrub_pages,
                                  token_axes_from_lengths)
@@ -209,6 +210,15 @@ class _SlotState:
     # so positions and page mapping advance here while token values land
     # at commit.  Kept equal to len(tokens) on the non-pipelined paths.
     submitted: int = 0
+    # EXECUTEs in flight that reference this lane's pages — retire (which
+    # frees pages) must wait until the count drains back to zero
+    inflight: int = 0
+    # the lane hit EOS mid-span: the device side froze (or the host rolled
+    # it back) and later in-flight spans for this lane are no-ops
+    eos_done: bool = False
+    # prefix-cache insert deferred until the pipelined first-token read
+    # commits: (bucket, flat_prompt, page_ids)
+    deferred_insert: Any = None
 
 
 class ContinuousBatchingEngine:
@@ -226,12 +236,36 @@ class ContinuousBatchingEngine:
                  auto_compact_frag: Optional[float] = 0.5,
                  auto_compact_min_pages: int = 4,
                  fuse_steps: int = 1, async_depth: int = 0,
+                 role: str = "mixed", eos_id: Optional[int] = None,
                  tracer: Any = None):
         from repro.configs import get_arch
         from repro.models import build_model
 
         self.cl = cl
         self.slots = slots
+        # disaggregated serving: a `prefill` replica admits prompts and
+        # hands freshly prefilled lanes to a `decode` replica through a
+        # TransferQueue; `mixed` is the classic aggregated engine.  Roles
+        # need paged KV — the handoff moves whole pool pages.
+        if role not in ("mixed", "prefill", "decode"):
+            raise ValueError(f"unknown role {role!r}")
+        if role != "mixed" and not paged:
+            raise ValueError("role-disaggregated serving needs paged=True "
+                             "(KV handoff moves pool pages)")
+        if role != "mixed" and spec is not None:
+            raise ValueError("speculative decode is host-authoritative and "
+                             "does not survive a lane handoff; use "
+                             "role='mixed'")
+        self.role = role
+        self.transfer = None            # TransferQueue, via attach_transfer
+        # on-device stop-token detection: a lane that emits eos_id freezes
+        # inside decode_multi (folded into the per-lane lim mask) instead
+        # of decoding past EOS until the host window boundary
+        if eos_id is not None and spec is not None:
+            raise ValueError("eos_id does not compose with spec: verify "
+                             "acceptance is host-decided, so EOS commits "
+                             "host-side there anyway")
+        self.eos_id = eos_id
         self.max_new_tokens = max_new_tokens   # per-request cap
         self.service = service
         self.engine_id = engine_id
@@ -581,6 +615,7 @@ class ContinuousBatchingEngine:
         # argument as speculative decode) and unmapped span pages are
         # dropped by the scatter, so no masking of the KV write is needed.
         kf = self.fuse_steps
+        eos = self.eos_id
 
         def decode_multi(params, toks, pos, bt, pool, lims, delta):
             # pending block-table rows ride the fused EXECUTE itself (a
@@ -594,17 +629,31 @@ class ContinuousBatchingEngine:
                                           page_size=ps)
                 on = bt_row[0] >= 0
                 lim = jnp.clip(lim, 0, kf)
+                # on-device stop-token detection: EOS folds into the same
+                # per-lane mask as the limit, so a lane freezes mid-span —
+                # its token stops updating, its position stops advancing,
+                # and post-EOS cache writes land at masked-out positions
+                # (the rejected-tail argument above).  Entering a span
+                # whose input token is already EOS keeps the lane frozen
+                # across EXECUTEs.
+                done0 = (tok[0] == jnp.int32(eos)) if eos is not None \
+                    else jnp.bool_(False)
 
                 def body(i, carry):
-                    cur, outs, c = carry
+                    cur, outs, c, adv, done = carry
                     logits, c2 = bundle.decode_fn(params, cur, p + i, c)
                     nxt = jnp.argmax(logits, -1).astype(jnp.int32)
-                    cur2 = jnp.where(on & (i < lim), nxt, cur)
-                    return cur2, outs.at[i].set(cur2[0]), c2
+                    step_on = on & (i < lim) & ~done
+                    cur2 = jnp.where(step_on, nxt, cur)
+                    if eos is not None:
+                        done = done | (step_on & (cur2[0] == jnp.int32(eos)))
+                    adv2 = adv + step_on.astype(jnp.int32)
+                    return cur2, outs.at[i].set(cur2[0]), c2, adv2, done
 
-                cur, outs, cache = jax.lax.fori_loop(
+                cur, outs, cache, adv, _ = jax.lax.fori_loop(
                     0, kf, body,
-                    (tok, jnp.zeros((kf,), jnp.int32), cache))
+                    (tok, jnp.zeros((kf,), jnp.int32), cache,
+                     jnp.int32(0), done0))
                 lp0 = (p % (max_blocks * ps)) // ps
                 pages, phys = [], []
                 for j in range(n_span):
@@ -614,7 +663,10 @@ class ContinuousBatchingEngine:
                         cache, lp, token_axes, page_size=ps))
                     ok = on & (lp0 + j < max_blocks) & (bt_row[lp] >= 0)
                     phys.append(jnp.where(ok, bt_row[lp], jnp.int32(NP)))
-                new_p = jnp.where(on, p + lim, p)
+                # adv == lim for active un-frozen lanes; a frozen lane's
+                # device position stops at EOS so the host rollback at
+                # commit time keeps both sides in lockstep
+                new_p = jnp.where(on, p + adv, p)
                 return cur, new_p, outs, tuple(pages), jnp.stack(phys)
 
             toks2, pos2, outs, pages, phys = jax.vmap(
@@ -771,6 +823,41 @@ class ContinuousBatchingEngine:
                            (params_abs, toks_abs, pos_abs, bt_abs, pool_abs,
                             lims_abs, delta_abs),
                            donate_argnums=(1, 2, 3, 4))
+        if self.role != "mixed":
+            # cross-replica KV handoff: a prefill replica gathers a lane's
+            # pages into a fixed-width staging buffer (d2h read follows), a
+            # decode replica scatters the staged pages into freshly
+            # allocated pages of its own pool and installs the lane
+            # scalars.  Out-of-range ids are padding on both sides.
+            xfer_ids_abs = jax.ShapeDtypeStruct((max_blocks,), jnp.int32)
+            xfer_abs = jax.tree.map(
+                lambda l: jax.ShapeDtypeStruct((max_blocks,) + l.shape[1:],
+                                               l.dtype), pool_abs)
+            self._xfer_abs = xfer_abs
+
+            def xfer_extract(pool, page_ids):
+                return extract_pool_pages(pool, page_ids)
+
+            def xfer_install(pool, staged, page_ids):
+                return install_pool_pages(pool, staged, page_ids)
+
+            def lane_set(toks, pos, tok, p, slot):
+                slot = jnp.asarray(slot, jnp.int32)
+                toks = jax.lax.dynamic_update_slice(
+                    toks, jnp.asarray(tok, jnp.int32).reshape(1, 1),
+                    (slot, jnp.int32(0)))
+                pos = jax.lax.dynamic_update_slice(
+                    pos, jnp.asarray(p, jnp.int32)[None], (slot,))
+                return toks, pos
+
+            self._register(cl, "xfer_extract", xfer_extract,
+                           (pool_abs, xfer_ids_abs))
+            self._register(cl, "xfer_install", xfer_install,
+                           (pool_abs, xfer_abs, xfer_ids_abs),
+                           donate_argnums=(0,))
+            self._register(cl, "lane_set", lane_set,
+                           (toks_abs, pos_abs, slot_abs, slot_abs, slot_abs),
+                           donate_argnums=(0, 1))
         if self.spec is not None:
             self._setup_spec(params_abs, toks_abs, pos_abs, bt_abs, pool_abs,
                              token_axes)
@@ -781,6 +868,8 @@ class ContinuousBatchingEngine:
             cl.clCreateBuffer("block_table", bt_abs)
             cl.clCreateBuffer("kv_pool", pool_abs, paged=True)
             cl.clCreateBuffer("pf_tok", pf_abs[self.prompt_len][1])
+            if self.role != "mixed":
+                cl.clCreateBuffer("xfer_pages", self._xfer_abs)
             if kf > 1:
                 cl.clCreateBuffer(
                     "fused_toks", jax.ShapeDtypeStruct((B, kf), jnp.int32))
@@ -1195,9 +1284,10 @@ class ContinuousBatchingEngine:
             admit_cs = []
             read_c = None
             first_tok = None
+            deferred_insert = None
             if self.paged and self.prefix is not None:
-                first_tok = self._admit_prefix(req, bucket, padded, match,
-                                               page_ids, slot, adm)
+                first_tok, read_c, deferred_insert = self._admit_prefix(
+                    req, bucket, padded, match, page_ids, slot, adm)
             elif (self.paged and self.spec is None
                     and not self._legacy_admit):
                 # one-EXECUTE admission: prompt rides as a const arg, the
@@ -1283,9 +1373,13 @@ class ContinuousBatchingEngine:
                                                  engine=self.engine_id,
                                                  slot=slot)
                                   if req.trace is not None else None))
+            st.deferred_insert = deferred_insert
             req.committed = st.tokens   # alias: crash-replay bookkeeping
             self.registry.record_event("engine_admit", rid=req.rid,
                                        slot=slot, engine=self.engine_id)
+            if (read_c is None and self.eos_id is not None
+                    and first_tok == self.eos_id):
+                st.limit = 1            # prompt's continuation IS the stop
             if read_c is not None:
                 # deferred admission: the lane decodes in this step's
                 # fused EXECUTE (its device state is set by the admit
@@ -1317,14 +1411,22 @@ class ContinuousBatchingEngine:
         return now
 
     def _admit_prefix(self, req, bucket, padded, match, page_ids, slot,
-                      adm) -> int:
+                      adm):
         """Admission over the prefix cache: map the matched pages, chunk-
         prefill only the uncovered suffix.  A full-prompt match skips
         device compute entirely — the tree's stored greedy continuation IS
         the first token, delivered host-side while the (tiny) lane-state
         update rides the queue.  Finally the prompt's pages are donated to
         the tree so same-prefix requests (including this request's own OOM
-        recompute) hit."""
+        recompute) hit.
+
+        Returns ``(first_tok, read_c, deferred_insert)``: on a pipelined
+        engine the suffix prefill rides the async pipeline like plain
+        paged admits — ``first_tok`` is None, the deferred ``read_c``
+        commits later, and the tree insert (which needs the first token)
+        is parked on the lane until then.  Prompt buckets are page-aligned
+        in prefix mode, so decode writes can never land in a prompt page
+        before the deferred insert happens."""
         ps = self.page_size
         n_pp = len(page_ids)
         flat = padded.reshape(-1)
@@ -1385,10 +1487,21 @@ class ContinuousBatchingEngine:
                        ("draft_caches", f"pf_draft_cache_{bucket}"),
                        ("draft_caches",),
                        const_args=(np.int32(slot),), donate=True, span=adm)
+        if first_tok is None and self._pipelined and n_hit:
+            # prefix-HIT lanes ride the pipeline: the suffix prefill's
+            # first-token read defers to the commit site and the tree
+            # insert (which needs that token as the continuation hint) is
+            # parked on the lane.  MISS lanes keep the synchronous read:
+            # their insert seeds the tree, and a same-step sibling with
+            # the same prompt must be able to full-match it — parking the
+            # miss insert would cost that hit, and dropping the hint
+            # would downgrade it to a re-derived partial.
+            read_c = self._read_async("pf_tok", span=adm)
+            return None, read_c, (bucket, flat.copy(), list(page_ids))
         if first_tok is None:
             first_tok = int(np.asarray(self._read("pf_tok", span=adm))[0])
         self.prefix.insert(bucket, flat, page_ids, first_tok)
-        return first_tok
+        return first_tok, None, None
 
     def _retire(self, st: _SlotState, now: float) -> None:
         rec = CompletedRequest(
@@ -1735,6 +1848,14 @@ class ContinuousBatchingEngine:
         and page mapping advance at submit — only the token *values*
         arrive at commit."""
         kf, ps = self.fuse_steps, self.page_size
+        # lanes finished by an earlier commit but kept active while later
+        # in-flight EXECUTEs still referenced their pages (EOS mid-span,
+        # or a dropped pipeline) retire here once the references drained
+        for slot in sorted(self._active):
+            st = self._active[slot]
+            if (st.tokens and len(st.tokens) >= st.limit
+                    and st.inflight == 0):
+                self._retire(st, self._clock())
         entries: List[Tuple[_SlotState, int]] = []
         lims = np.zeros((self.slots,), np.int32)
         for slot in sorted(self._active):
@@ -1797,6 +1918,7 @@ class ContinuousBatchingEngine:
             for st, n in entries:
                 st.submitted += n
                 st.pos += n
+                st.inflight += 1
             self._inflight.append(("batch", exec_c, read_c, entries))
         # only decode batches count against the pipeline depth: a deferred
         # admission commits when it reaches the head naturally — popping it
@@ -1849,19 +1971,55 @@ class ContinuousBatchingEngine:
             st.tokens.append(tok)
             st.last_token_t = now
             self._c_tokens.inc()
-            if len(st.tokens) >= st.limit:
+            if st.deferred_insert is not None:
+                # prefix insert parked at admission: the tree needs the
+                # first token, which only just arrived
+                b, flat, ids = st.deferred_insert
+                self.prefix.insert(b, flat, ids, tok)
+                st.deferred_insert = None
+            if self.eos_id is not None and tok == self.eos_id:
+                self._mark_eos(st)
+            if len(st.tokens) >= st.limit and st.inflight == 0:
                 self._retire(st, now)   # degenerate 1-token request
             return 1
         decoded = 0
         for st, n in rec[3]:
             if self._active.get(st.slot) is not st:
                 continue    # preempted since submit: recompute replays it
-            decoded += self._commit_tokens(st, val[st.slot, :n], now,
-                                           advance=False)
-            if len(st.tokens) >= st.limit:
+            st.inflight -= 1
+            if st.eos_done:
+                # the device lane was frozen for this whole span: nothing
+                # to commit, and pos/submitted were restored at EOS time
+                if len(st.tokens) >= st.limit and st.inflight == 0:
+                    self._retire(st, now)
+                continue
+            toks = np.asarray(val[st.slot, :n])
+            if self.eos_id is not None:
+                hit = np.nonzero(toks == self.eos_id)[0]
+                if hit.size:
+                    toks = toks[:int(hit[0]) + 1]
+            decoded += self._commit_tokens(st, toks, now, advance=False)
+            if (self.eos_id is not None and st.tokens
+                    and st.tokens[-1] == self.eos_id):
+                self._mark_eos(st)
+            if len(st.tokens) >= st.limit and st.inflight == 0:
                 self._retire(st, now)
         self._c_tokens.inc(decoded)
         return decoded
+
+    def _mark_eos(self, st: _SlotState) -> None:
+        """The lane's newest committed token is the stop token.  Clamp the
+        limit so the lane retires, and restore the authoritative position
+        invariant ``pos == bucket + len(tokens) - 1``: any submit-time
+        advance still riding later in-flight spans is undone here, since
+        the device lane froze at EOS (fused path) or retires before its
+        slot is reused (single-step path, whose over-runs only ever write
+        positions past the commit horizon)."""
+        st.eos_done = True
+        st.limit = len(st.tokens)
+        st.submitted = len(st.tokens)
+        if self.paged:
+            st.pos = st.bucket + len(st.tokens) - 1
 
     def _fail_pipeline(self, records) -> None:
         """Drop every in-flight record after a failed EXECUTE: later
@@ -1893,8 +2051,12 @@ class ContinuousBatchingEngine:
             else:
                 for st, n in rec[3]:
                     if self._active.get(st.slot) is st:
-                        st.submitted -= n
-                        st.pos -= n
+                        st.inflight -= 1
+                        if not st.eos_done:
+                            # an EOS'd lane's pos/submitted were already
+                            # restored to the authoritative values
+                            st.submitted -= n
+                            st.pos -= n
         self._resync_lanes = True
         # a failed fused EXECUTE never applied the delta rows it carried:
         # the device block table may be behind the host mirror, so the
@@ -2134,6 +2296,9 @@ class ContinuousBatchingEngine:
                 for st in list(self._active.values()):
                     decoded += self._commit_tokens(
                         st, toks[st.slot], now)
+                    if (self.eos_id is not None and st.tokens
+                            and st.tokens[-1] == self.eos_id):
+                        self._mark_eos(st)
                     if len(st.tokens) >= st.limit:
                         self._retire(st, now)
                 self._c_tokens.inc(decoded)
@@ -2299,6 +2464,165 @@ class ContinuousBatchingEngine:
                     self._g_prefix.set(float("nan"))   # same tombstone rule
         return reqs
 
+    # ------------------------------------------------------------------
+    # Disaggregated serving: live KV handoff between role replicas
+    # ------------------------------------------------------------------
+    def attach_transfer(self, queue) -> None:
+        """Join a ``TransferQueue``: the prefill side offers freshly
+        prefilled lanes, the decode side drains them.  Needs a declared
+        role — mixed engines never hand lanes off."""
+        if self.role == "mixed":
+            raise ValueError("attach_transfer needs role='prefill' or "
+                             "'decode'")
+        self.transfer = queue
+        queue.register(self)
+
+    def exportable_lanes(self) -> List[_SlotState]:
+        """Active lanes a prefill replica could hand off right now: the
+        first token is committed, nothing is in flight against the lane's
+        pages, and the request still has tokens to generate.  A lane that
+        missed the transfer window simply keeps decoding here (TTFT-aware
+        fallback) and is offered again at the next step boundary."""
+        out = []
+        for slot in sorted(self._active):
+            st = self._active[slot]
+            if (st.tokens and st.inflight == 0
+                    and st.submitted == len(st.tokens)
+                    and len(st.tokens) < st.limit
+                    and st.deferred_insert is None):
+                out.append(st)
+        return out
+
+    def export_lane(self, st: _SlotState):
+        """Serialize an in-flight lane for handoff to a decode replica:
+        gather its pages into the staging buffer (one EXECUTE), read them
+        back d2h, then release the lane — pages return to this pool
+        (prefix donation first, exactly like retire) and the slot frees.
+        The request is NOT completed here; the importer continues it
+        mid-decode, bit-exact because the gather reassembles the logical
+        cache independent of physical page ids."""
+        from repro.serve.disagg import KVHandoff
+        rid = st.req.rid
+        ids = np.full((self.max_blocks,), self.pool_pages, np.int32)
+        ids[:len(st.blocks)] = st.blocks
+        xsp = (st.req.trace.span("engine.handoff_out",
+                                 engine=self.engine_id, slot=st.slot,
+                                 pages=len(st.blocks))
+               if st.req.trace is not None else None)
+        self._exec("xfer_extract", ("kv_pool",), ("xfer_pages",),
+                   const_args=(ids,), span=xsp)
+        staged = self._read("xfer_pages", span=xsp)
+        pages = jax.tree.map(np.asarray, staged)
+        if xsp is not None:
+            xsp.end()
+        handoff = KVHandoff(
+            req=st.req, rid=rid, tokens=st.tokens, tbts=st.tbts,
+            pos=st.pos, bucket=st.bucket, limit=st.limit,
+            n_pages=len(st.blocks), pages=pages, admit_t=st.admit_t,
+            first_token_t=self._first_token.get(rid, st.first_token_t),
+            last_token_t=st.last_token_t,
+            src_engine=self.engine_id, export_t=self._clock())
+        if self.prefix is not None and st.blocks:
+            # donate committed pages to the tree before dropping the
+            # lane's references — same rule as retire, so the handed-off
+            # request's own OOM recompute (or a sibling prompt) still hits
+            ps = self.page_size
+            flat = self._pad_prompt(st.req.prompt, st.bucket).reshape(-1)
+            full = np.concatenate([flat, np.asarray(st.tokens, np.int32)])
+            n_complete = min(st.pos // ps, len(st.blocks))
+            if n_complete:
+                nxt = (int(full[n_complete * ps])
+                       if n_complete * ps < len(full) else None)
+                self.prefix.insert(st.bucket, full[:n_complete * ps],
+                                   st.blocks[:n_complete], nxt)
+        self.pool.free(st.blocks)
+        self._bt_clear_row(st.slot)
+        self._active.pop(st.slot, None)
+        heapq.heappush(self._free, st.slot)
+        self._first_token.pop(rid, None)
+        if st.span is not None:
+            st.span.annotate(handed_off=True, tokens=len(st.tokens)).end()
+        self.registry.record_event("engine_handoff_out", rid=rid,
+                                   slot=st.slot, engine=self.engine_id,
+                                   pages=handoff.n_pages)
+        return handoff
+
+    def import_lane(self, handoff) -> bool:
+        """Install a handed-off lane: allocate pages, upload + scatter the
+        staged pages (whole-page overwrite — no scrub needed), install the
+        lane scalars, and resume decode mid-request.  Returns False
+        without side effects when there is no slot or page headroom."""
+        if not self._free:
+            return False
+        n = handoff.n_pages
+        if n > self.max_blocks or not self.pool.can_admit(n):
+            return False
+        page_ids = self.pool.alloc(n)
+        if page_ids is None:
+            return False
+        page_ids = [int(p) for p in page_ids]
+        self._virgin_pages.difference_update(page_ids)
+        slot = heapq.heappop(self._free)
+        self._bt_set_row(slot, page_ids)
+        try:
+            imp = (handoff.req.trace.span("engine.handoff_in",
+                                          engine=self.engine_id, slot=slot,
+                                          pages=n)
+                   if handoff.req.trace is not None else None)
+            W = self.max_blocks
+
+            def fit(leaf):
+                # replicas may be provisioned with different max_blocks;
+                # pad/trim the staging width (padding never installs —
+                # its ids point out of range)
+                leaf = np.asarray(leaf)
+                if leaf.shape[0] == W:
+                    return leaf
+                if leaf.shape[0] > W:
+                    return leaf[:W]
+                pad = np.zeros((W - leaf.shape[0],) + leaf.shape[1:],
+                               leaf.dtype)
+                return np.concatenate([leaf, pad], 0)
+
+            staged = jax.tree.map(fit, handoff.pages)
+            ids = np.full((W,), self.pool_pages, np.int32)
+            ids[:n] = page_ids
+            self._write("xfer_pages", staged, span=imp)
+            self._exec("xfer_install", ("kv_pool", "xfer_pages"),
+                       ("kv_pool",), const_args=(ids,), donate=True,
+                       dirty_pages={"kv_pool": tuple(page_ids)}, span=imp)
+            self._exec("lane_set", ("toks", "pos"), ("toks", "pos"),
+                       const_args=(np.int32(handoff.tokens[-1]),
+                                   np.int32(handoff.pos), np.int32(slot)),
+                       donate=True, span=imp)
+            if imp is not None:
+                imp.end()
+        except BaseException:
+            self.pool.free(page_ids)
+            self._bt_clear_row(slot)
+            heapq.heappush(self._free, slot)
+            raise
+        st = _SlotState(req=handoff.req, slot=slot, tokens=handoff.tokens,
+                        tbts=handoff.tbts, admit_t=handoff.admit_t,
+                        first_token_t=handoff.first_token_t,
+                        last_token_t=handoff.last_token_t,
+                        limit=handoff.limit, bucket=handoff.bucket,
+                        pos=handoff.pos, blocks=page_ids,
+                        submitted=len(handoff.tokens),
+                        span=(handoff.req.trace.span(
+                            "engine.decode", engine=self.engine_id,
+                            slot=slot, imported=True)
+                            if handoff.req.trace is not None else None))
+        handoff.req.committed = st.tokens   # re-alias: crash replay
+        # seed the TTFT ledger so neither this engine's commits nor an
+        # OOM-preempt recompute here observe TTFT a second time
+        self._first_token[handoff.req.rid] = handoff.first_token_t
+        self._active[slot] = st
+        self.registry.record_event("engine_handoff_in",
+                                   rid=handoff.req.rid, slot=slot,
+                                   engine=self.engine_id, pages=n)
+        return True
+
     def run_until_drained(self, max_iterations: int = 100000) -> None:
         while not self.idle:
             self.step()
@@ -2320,12 +2644,24 @@ class ContinuousBatchingEngine:
             # can steer repeat prefixes here (idempotent re-registration)
             router.register_prefix_probe(self.engine_id,
                                          self.prefix_match_len)
+        reg_role = getattr(router, "register_engine_role", None)
+        if reg_role is not None and admit:
+            # declare this replica's role so the router sends fresh
+            # prompts to prefill replicas only (idempotent)
+            reg_role(self.engine_id, self.role, self.buckets)
+        if self.transfer is not None and self.role == "decode":
+            # drain admitted handoffs into free slots before stepping
+            self.transfer.pump_dest(self)
         if admit:
             for req in router.pop(len(self._free), engine_id=self.engine_id):
                 self.submit(req)
         moved = bool(self._active or self.pending)
         if moved:
             self.step()
+        if self.transfer is not None and self.role == "prefill":
+            # offer freshly prefilled lanes at the step boundary; lanes
+            # the queue rejects keep decoding here (aggregated fallback)
+            self.transfer.pump_source(self)
         for rec in self.drain_completions():
             router.complete(rec)
         return moved

@@ -363,6 +363,25 @@ def scrub_pages(pool, page_ids):
     return jax.tree_util.tree_map_with_path(f, pool)
 
 
+def extract_pool_pages(pool, page_ids):
+    """Gather whole pages out of a pool by physical id into a fixed-width
+    staging pytree ``(width, page_size, *rest)`` — the serialization side
+    of a cross-pool KV handoff (prefill -> decode replica).  ``page_ids``
+    is a fixed-width vector; out-of-range entries are padding (clamped for
+    the gather, ignored by the host, dropped again at install)."""
+    return jax.tree.map(
+        lambda leaf: leaf[jnp.clip(page_ids, 0, leaf.shape[0] - 1)], pool)
+
+
+def install_pool_pages(pool, staged, page_ids):
+    """Scatter a staged page pytree (from ``extract_pool_pages`` on another
+    replica's pool) into this pool at ``page_ids``.  Whole pages are
+    overwritten, so the destination needs no scrub; padding ids point out
+    of range and are dropped."""
+    return jax.tree.map(
+        lambda pl, pg: pl.at[page_ids].set(pg, mode="drop"), pool, staged)
+
+
 def compact_pool(pool, src_ids, dst_ids):
     """Apply a ``BlockPool.compact`` mapping on-device: move page ``src``
     to ``dst`` for each pair (destinations were free, so gather-then-

@@ -1,0 +1,462 @@
+"""Prefill/decode disaggregation: live KV handoff between role replicas,
+TTFT-aware admission with aggregated fallback, role-aware routing and
+placement, per-role autoscaling, torn-transfer replay through router
+leases, and the PR 9 residuals (on-device stop-token detection, deferred
+prefix-hit admission) — all gated on bit-exactness vs the aggregated
+engine."""
+
+import numpy as np
+import pytest
+
+from repro.chaos.faults import FaultPlan, FaultSpec
+from repro.core import FunkyCL, Monitor, SliceAllocator
+from repro.scaling.metrics import MetricsRegistry
+from repro.scaling.serving import RequestRouter
+from repro.serve.disagg import (M_HANDOFF, M_HANDOFF_FALLBACK,
+                                M_TRANSFER_BYTES, TransferQueue)
+from repro.serve.engine import ContinuousBatchingEngine, ServeRequest
+
+ARCH = "yi-9b-smoke"
+PROMPT_LEN = 8
+PAGE = 4
+SPEC = [3, 6, 4, 5]
+
+
+def make_engine(reg, engine_id, slots=2, max_new=8, **kw):
+    mon = Monitor(engine_id, SliceAllocator("n0", 1), telemetry=reg)
+    eng = ContinuousBatchingEngine(ARCH, FunkyCL(mon), slots=slots,
+                                   prompt_len=PROMPT_LEN,
+                                   max_new_tokens=max_new, registry=reg,
+                                   page_size=PAGE, engine_id=engine_id,
+                                   **kw)
+    eng.setup()
+    return mon, eng
+
+
+def make_requests(spec, seed=0):
+    rng = np.random.Generator(np.random.Philox(seed))
+    return [ServeRequest(rid=f"r{i}",
+                         prompt=rng.integers(0, 100, PROMPT_LEN),
+                         max_new_tokens=n)
+            for i, n in enumerate(spec)]
+
+
+def aggregated_ref(spec, seed):
+    reg = MetricsRegistry()
+    mon, eng = make_engine(reg, "agg")
+    for r in make_requests(spec, seed=seed):
+        eng.submit(r)
+    eng.run_until_drained()
+    ref = {rid: list(rec.tokens) for rid, rec in eng.completed.items()}
+    mon.vfpga_exit()
+    return ref
+
+
+def run_disagg(spec, seed, *, decode_kw=None, ttft_target_s=None,
+               chaos=None, step_hook=None, max_pumps=600):
+    """Drive a prefill + decode replica pair over a workload through a
+    RequestRouter and TransferQueue; returns (transcripts, queue,
+    registry, router)."""
+    reg = MetricsRegistry()
+    router = RequestRouter("svc", registry=reg, kv_aware=False)
+    monP, engP = make_engine(reg, "pf", role="prefill")
+    monD, engD = make_engine(reg, "dec", role="decode", fuse_steps=2,
+                             async_depth=1, **(decode_kw or {}))
+    tq = TransferQueue(router=router, registry=reg, service="svc",
+                      ttft_target_s=ttft_target_s, chaos=chaos)
+    engP.attach_transfer(tq)
+    engD.attach_transfer(tq)
+    for r in make_requests(spec, seed=seed):
+        router.submit(r)
+    try:
+        for i in range(max_pumps):
+            if step_hook is not None:
+                step_hook(engP, monP, engD, monD, i)
+            engP.pump(router)
+            engD.pump(router)
+            if (not router.outstanding() and engP.idle and engD.idle
+                    and len(tq) == 0):
+                break
+        else:
+            raise AssertionError(
+                f"disagg pair did not drain: outstanding="
+                f"{router.outstanding()} queue={len(tq)}")
+        got = {rid: list(rec.tokens)
+               for rid, rec in router.completed.items()}
+        return got, tq, reg, router
+    finally:
+        monP.vfpga_exit()
+        monD.vfpga_exit()
+
+
+# ---------------------------------------------------------------------------
+# Live KV handoff: bit-exactness and fallback
+# ---------------------------------------------------------------------------
+def test_handoff_bit_exact_vs_aggregated():
+    """Every request prefills on one replica and decodes on the other;
+    the token streams equal the aggregated single-engine run."""
+    ref = aggregated_ref(SPEC, seed=3)
+    got, tq, reg, _ = run_disagg(SPEC, seed=3)
+    assert got == ref
+    snap = reg.snapshot()
+    handoffs = snap["counters"][f"{M_HANDOFF}{{service=svc}}"]
+    assert handoffs >= 1          # slot-aware admission may refuse some
+    assert snap["counters"][f"{M_TRANSFER_BYTES}{{service=svc}}"] > 0
+    # every handoff happened mid-decode: the importer continued the lane
+    events = [e[1] for e in reg.flight_record()["events"]]
+    assert events.count("engine_handoff_out") == handoffs
+    assert events.count("engine_handoff_in") == handoffs
+
+
+def test_fallback_when_decode_side_saturated():
+    """A decode pool with room for ~one lane forces refusals: refused
+    lanes decode to completion on the prefill replica (aggregated
+    fallback) and the streams stay bit-exact."""
+    ref = aggregated_ref(SPEC, seed=3)
+    got, tq, reg, _ = run_disagg(SPEC, seed=3,
+                                 decode_kw={"pool_pages": 5,
+                                            "reserve_pages": 1})
+    assert got == ref
+    snap = reg.snapshot()
+    assert snap["counters"][f"{M_HANDOFF_FALLBACK}{{service=svc}}"] > 0
+
+
+def test_ttft_target_refuses_slow_transfers():
+    """With a TTFT target below the predicted queue wait the queue
+    refuses every offer — pure aggregated fallback, zero handoffs."""
+    ref = aggregated_ref(SPEC, seed=3)
+
+    def poison(engP, monP, engD, monD, i):
+        # pretend installs are ruinously slow (predicted wait >> target)
+        engP.transfer._ewma_install_s = 10.0
+
+    got, tq, reg, _ = run_disagg(SPEC, seed=3, ttft_target_s=1e-9,
+                                 step_hook=poison)
+    assert got == ref
+    snap = reg.snapshot()
+    assert snap["counters"][f"{M_HANDOFF}{{service=svc}}"] == 0
+    assert snap["counters"][f"{M_HANDOFF_FALLBACK}{{service=svc}}"] > 0
+
+
+def test_handoff_with_evict_resume_both_sides():
+    """Monitor-level evict/resume on both replicas mid-handoff traffic:
+    lanes in transit and installed lanes continue bit-exactly."""
+    ref = aggregated_ref(SPEC, seed=3)
+
+    def hook(engP, monP, engD, monD, i):
+        if i % 3:
+            return
+        for eng, mon in ((engP, monP), (engD, monD)):
+            if eng.active_count:
+                mon.evict()
+                mon.resume()
+
+    got, tq, reg, _ = run_disagg(SPEC, seed=3, step_hook=hook)
+    assert got == ref
+    assert reg.snapshot()["counters"][f"{M_HANDOFF}{{service=svc}}"] > 0
+
+
+def test_handoff_then_oom_preempt_on_receiver():
+    """The decode replica's pool is large enough to admit transfers but
+    too small to decode every lane to its limit: imported lanes are
+    OOM-preempted, recompute locally (full prefill on the decode
+    replica), and the stream — including TTFT observed exactly once per
+    request — stays bit-exact."""
+    spec = [8, 8, 8, 8]
+    ref = aggregated_ref(spec, seed=9)
+    got, tq, reg, _ = run_disagg(spec, seed=9,
+                                 decode_kw={"pool_pages": 7,
+                                            "reserve_pages": 1})
+    assert got == ref
+    snap = reg.snapshot()
+    assert snap["counters"][
+        "engine_oom_preemptions_total{service=svc}"] > 0
+    # TTFT is observed once per request across admit + handoff + recompute
+    assert (snap["histograms"]["request_ttft_seconds{service=svc}"]["count"]
+            == len(spec))
+
+
+# ---------------------------------------------------------------------------
+# Torn transfers: chaos site kv.transfer + router lease replay
+# ---------------------------------------------------------------------------
+def test_torn_transfer_replays_without_loss_or_duplication():
+    """A transfer torn between dequeue and install loses the lane (the
+    source already released it); the request replays through its router
+    lease and the recompute reproduces the committed prefix — zero lost,
+    zero duplicated tokens."""
+    ref = aggregated_ref(SPEC, seed=3)
+    plan = FaultPlan([FaultSpec(site="kv.transfer", kind="torn", at=2)])
+    got, tq, reg, router = run_disagg(SPEC, seed=3, chaos=plan)
+    assert tq.torn == 1
+    assert got == ref                        # nothing lost
+    assert len(router.completed) == len(SPEC)  # nothing duplicated
+    events = [e[1] for e in reg.flight_record()["events"]]
+    assert "kv_transfer_torn" in events
+    assert "router_replay" in events
+    # the replay's recompute reproduced the pre-tear tokens as a prefix
+    assert "replay_mismatch" not in events
+
+
+def test_transfer_delay_fault_is_benign():
+    """kind=delay at the transfer site only stretches the install."""
+    ref = aggregated_ref(SPEC, seed=3)
+    plan = FaultPlan([FaultSpec(site="kv.transfer", kind="delay",
+                                delay_s=0.002, at=1)])
+    got, tq, _, _ = run_disagg(SPEC, seed=3, chaos=plan)
+    assert got == ref and tq.torn == 0
+
+
+def test_transfer_counters_export_in_prometheus_text():
+    """The disaggregation counters appear in the Prometheus exposition
+    (even before traffic) with finite values."""
+    reg = MetricsRegistry()
+    TransferQueue(registry=reg, service="svc")
+    text = reg.to_prometheus_text()
+    for name in (M_HANDOFF, M_HANDOFF_FALLBACK, M_TRANSFER_BYTES):
+        line = next(ln for ln in text.splitlines()
+                    if ln.startswith(name))
+        assert np.isfinite(float(line.rsplit(" ", 1)[1]))
+
+
+# ---------------------------------------------------------------------------
+# Role-aware routing / leases
+# ---------------------------------------------------------------------------
+def test_router_never_feeds_decode_replicas():
+    router = RequestRouter("svc", kv_aware=False)
+    router.register_engine_role("dec", "decode", (PROMPT_LEN,))
+    router.register_engine_role("pf", "prefill", (PROMPT_LEN,))
+    for r in make_requests([2, 2], seed=1):
+        router.submit(r)
+    assert router.pop(2, engine_id="dec") == []
+    assert [r.rid for r in router.pop(2, engine_id="pf")] == ["r0", "r1"]
+
+
+def test_bucketed_prompt_routing_between_prefills():
+    """Two prefill replicas with buckets (4, 8): a short prompt maps to
+    the first replica, a long one to the second — and deferral is a head
+    start, never starvation."""
+    router = RequestRouter("svc", kv_aware=False)
+    router.register_engine_role("pfA", "prefill", (4, 8))
+    router.register_engine_role("pfB", "prefill", (4, 8))
+    rng = np.random.Generator(np.random.Philox(2))
+    router.submit(ServeRequest(rid="short", prompt=rng.integers(0, 100, 3),
+                               max_new_tokens=2))
+    router.submit(ServeRequest(rid="long", prompt=rng.integers(0, 100, 8),
+                               max_new_tokens=2))
+    # head is `short` (bucket idx 0 -> pfA): pfB is held back once
+    assert router.pop(1, engine_id="pfB") == []
+    assert [r.rid for r in router.pop(1, engine_id="pfA")] == ["short"]
+    # head is `long` (bucket idx 1 -> pfB)
+    assert router.pop(1, engine_id="pfA") == []
+    assert [r.rid for r in router.pop(1, engine_id="pfB")] == ["long"]
+
+
+def test_transfer_lease_moves_crash_replay_ownership():
+    """After a handoff the lease points at the decode replica: its crash
+    replays the request; the old owner's crash no longer does."""
+    router = RequestRouter("svc", kv_aware=False)
+    for r in make_requests([2], seed=4):
+        router.submit(r)
+    (req,) = router.pop(1, engine_id="pf")
+    req.committed = [7]
+    router.transfer_lease(req.rid, "dec")
+    assert router.fail_engine("pf") == 0     # no longer the owner
+    assert router.fail_engine("dec") == 1
+    assert router.replayed[req.rid] == [7]
+
+
+# ---------------------------------------------------------------------------
+# Role-aware placement and per-role autoscaling
+# ---------------------------------------------------------------------------
+class _View:
+    def __init__(self, capacity):
+        self.capacity = dict(capacity)
+
+    def nodes(self):
+        return list(self.capacity)
+
+    def free_slices(self, node):
+        return self.capacity[node]
+
+    def running_tasks(self, node):
+        return []
+
+
+def test_placement_scores_roles():
+    """Decode tasks steer toward the node advertising the most free KV
+    pages (at equal capacity); prefill tasks get an extra free-compute
+    bonus on top of the capacity term."""
+    from repro.core.placement import M_NODE_KV_FREE, PlacementPolicy
+    from repro.core.scheduler import SchedTask
+
+    reg = MetricsRegistry()
+    # name tie-break alone would pick "b"; the KV gauge flips it to "a"
+    reg.gauge(M_NODE_KV_FREE, node="a").set(64)
+    reg.gauge(M_NODE_KV_FREE, node="b").set(4)
+    pol = PlacementPolicy(registry=reg)
+    view = _View({"a": 2, "b": 2})
+    dec = SchedTask(tid="dec", meta={"role": "decode"})
+    plain = SchedTask(tid="t", meta={})
+    assert pol.select_node(plain, view, {}) == "b"
+    assert pol.select_node(dec, view, {}) == "a"
+    # prefill: the free-compute bonus scales with free slices
+    pf = SchedTask(tid="pf", meta={"role": "prefill"})
+    w = pol.weights
+    assert (pol.score(pf, "a", view, 3) - pol.score(plain, "a", view, 3)
+            == pytest.approx(w.role_compute * 3))
+
+
+def test_role_mix_policy_scales_and_fits_budget():
+    from repro.scaling.autoscaler import RoleMixPolicy, ScalingSignals
+
+    pol = RoleMixPolicy(slice_budget=8, vfpga_num=2)
+    idle = pol.desired_mix(ScalingSignals(replicas=2))
+    assert (idle.prefill, idle.decode) == (1, 1)
+    assert idle.total_slices <= 8
+
+    # queue depth grows the prefill side
+    queued = pol.desired_mix(ScalingSignals(replicas=2, queue_depth=6.0))
+    assert queued.prefill > idle.prefill
+    assert queued.total_slices <= 8
+
+    # KV pressure grows the decode side
+    hot = pol.desired_mix(ScalingSignals(replicas=2, kv_pressure=0.95))
+    assert hot.decode > idle.decode
+    assert hot.total_slices <= 8
+
+    # scarce slices: vertical size is shed before replicas, floors hold
+    tight = RoleMixPolicy(slice_budget=3, vfpga_num=2)
+    mix = tight.desired_mix(ScalingSignals(replicas=2, queue_depth=8.0,
+                                           kv_pressure=0.95))
+    assert mix.total_slices <= 3
+    assert mix.prefill >= 1 and mix.decode >= 1
+    assert min(mix.prefill_vfpga, mix.decode_vfpga) == 1
+
+
+def test_disaggregated_service_model_bounds():
+    from repro.core.simulator import (disaggregated_service_model,
+                                      engine_service_model)
+    from repro.scaling.loadgen import Request
+
+    req = Request(rid="r", arrival_t=0.0, service_s=0.0, n_tokens=8)
+    agg = engine_service_model(0.05, 0.002)
+    # full fallback degrades exactly to the aggregated model, never worse
+    full_fb = disaggregated_service_model(0.05, 0.002, fallback_rate=1.0)
+    assert full_fb(req) == pytest.approx(agg(req))
+    # a clean handoff holds the decode pool for transfer + tail only
+    clean = disaggregated_service_model(0.05, 0.002, transfer_s=0.001)
+    assert clean(req) < agg(req)
+
+
+# ---------------------------------------------------------------------------
+# Engine role/eos validation
+# ---------------------------------------------------------------------------
+def test_role_and_eos_config_validation():
+    from repro.serve.engine import SpecConfig
+
+    reg = MetricsRegistry()
+    mon = Monitor("cfg", SliceAllocator("n0", 1), telemetry=reg)
+    cl = FunkyCL(mon)
+    mk = lambda **kw: ContinuousBatchingEngine(
+        ARCH, cl, slots=2, prompt_len=PROMPT_LEN, max_new_tokens=4,
+        registry=reg, page_size=PAGE, **kw)
+    with pytest.raises(ValueError):
+        mk(role="verifier")
+    with pytest.raises(ValueError):
+        mk(role="prefill", paged=False)
+    with pytest.raises(ValueError):
+        mk(role="decode", spec=SpecConfig(k=2))
+    with pytest.raises(ValueError):
+        mk(eos_id=5, spec=SpecConfig(k=2))
+    with pytest.raises(ValueError):
+        mk(role="mixed").attach_transfer(TransferQueue())
+    mon.vfpga_exit()
+
+
+# ---------------------------------------------------------------------------
+# PR 9 residuals: on-device EOS, deferred prefix-hit admission
+# ---------------------------------------------------------------------------
+def _eos_token(spec, seed):
+    """Pick a token the reference streams emit mid-sequence, so EOS
+    genuinely truncates at least one request."""
+    ref = aggregated_ref(spec, seed)
+    for toks in ref.values():
+        if len(toks) > 2:
+            return ref, int(toks[1])
+    raise AssertionError("no stream long enough to pick an EOS token")
+
+
+def _truncate_at(ref, eos):
+    out = {}
+    for rid, toks in ref.items():
+        cut = toks.index(eos) + 1 if eos in toks else len(toks)
+        out[rid] = toks[:cut]
+    return out
+
+
+@pytest.mark.parametrize("fused_kw", [
+    {"fuse_steps": 4, "async_depth": 1},    # on-device freeze mid-span
+    {"fuse_steps": 1, "async_depth": 2},    # host-side EOS, async commits
+])
+def test_on_device_eos_bit_exact_vs_host_side(fused_kw):
+    """A lane emitting eos_id freezes inside decode_multi (or is cut at
+    the async commit): tokens match the synchronous host-side EOS engine
+    exactly, including the stop token itself."""
+    ref, eos = _eos_token(SPEC, seed=3)
+    want = _truncate_at(ref, eos)
+    assert any(len(v) < len(ref[k]) for k, v in want.items())
+
+    for tag, kw in (("sync", {}), ("pipelined", fused_kw)):
+        reg = MetricsRegistry()
+        mon, eng = make_engine(reg, f"eos-{tag}", eos_id=eos, **kw)
+        for r in make_requests(SPEC, seed=3):
+            eng.submit(r)
+        eng.run_until_drained()
+        got = {rid: list(rec.tokens) for rid, rec in eng.completed.items()}
+        mon.vfpga_exit()
+        assert got == want, f"eos mismatch on {tag} engine"
+
+
+def test_eos_mid_span_with_evict_resume():
+    """EOS freeze inside a fused span survives monitor evict/resume."""
+    from repro.serve.equivalence import evict_resume_every, run_transcript
+
+    ref, eos = _eos_token(SPEC, seed=3)
+    want = _truncate_at(ref, eos)
+
+    def factory():
+        mon, eng = make_engine(MetricsRegistry(), "eos-ev", eos_id=eos,
+                               fuse_steps=4, async_depth=1)
+        return mon, eng
+
+    got, _ = run_transcript(factory,
+                            lambda: make_requests(SPEC, seed=3),
+                            step_hook=evict_resume_every(3))
+    assert got == want
+
+
+def test_deferred_prefix_hit_admission_bit_exact():
+    """Prefix-hit suffix prefills ride the async pipeline (first-token
+    read deferred, tree insert parked): repeat-prompt waves on a
+    pipelined prefix-cache engine match the synchronous one."""
+    from repro.serve.equivalence import check_equivalence
+
+    def factory(**kw):
+        def make():
+            mon, eng = make_engine(MetricsRegistry(), "px",
+                                   prefix_cache=True, **kw)
+            return mon, eng
+        return make
+
+    def requests():
+        # two waves over three distinct prompts: wave 2 hits the tree
+        reqs = make_requests([4, 6, 3], seed=17)
+        rep = make_requests([5, 4, 6], seed=17)
+        for r in rep:
+            r.rid = "w2-" + r.rid
+        return reqs + rep
+
+    eng, _ = check_equivalence(
+        factory(fuse_steps=2, async_depth=1), factory(), requests,
+        context="deferred prefix admission")
+    assert eng.prefix_hits + eng.prefix_partial_hits > 0
